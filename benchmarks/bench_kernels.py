@@ -1,0 +1,52 @@
+"""Per-kernel microbenchmarks (SpMM / eMA) — the paper's Table IV analogue.
+
+Times the high-level jnp kernels (the production CPU path) and verifies the
+Pallas kernels against them in interpret mode.  On-TPU timing is N/A in this
+container; the Pallas rows report correctness (max rel err) as ``derived``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rmat_graph, spmm_edges
+from repro.core.colorsets import build_split_table, binom
+from repro.kernels.ema.ops import ema_blocked
+from repro.kernels.ema.ref import ema_ref
+from repro.kernels.spmm_blocked.ops import prepare_operand, spmm_blocked
+from .common import record, time_fn
+
+
+def run() -> None:
+    g = rmat_graph(4096, 40_000, seed=5)
+    rng = np.random.default_rng(0)
+
+    for cols in (32, 128, 512):
+        m = jnp.asarray(rng.standard_normal((g.n, cols)).astype(np.float32))
+        spmm = jax.jit(partial(spmm_edges, jnp.asarray(g.src), jnp.asarray(g.dst), g.n))
+        us = time_fn(spmm, m)
+        nnz = g.num_directed
+        record(f"kernel/spmm_edges/c{cols}", us, f"gflops={2 * nnz * cols / us / 1e3:.2f}")
+
+    op = prepare_operand(g, block_size=256, edge_chunk=256)
+    m = jnp.asarray(rng.standard_normal((g.n, 128)).astype(np.float32))
+    ref = spmm_edges(jnp.asarray(g.src), jnp.asarray(g.dst), g.n, m)
+    out = spmm_blocked(op, m, interpret=True)
+    err = float(jnp.max(jnp.abs(out - ref)) / (jnp.max(jnp.abs(ref)) + 1e-9))
+    record("kernel/spmm_pallas_interpret/c128", 0.0, f"max_rel_err={err:.2e}")
+
+    t = build_split_table(8, 5, 3)
+    ma = jnp.asarray(rng.standard_normal((g.n, binom(8, 3))).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((g.n, binom(8, 2))).astype(np.float32))
+    ia, ip = jnp.asarray(t.idx_a), jnp.asarray(t.idx_p)
+    ema = jax.jit(ema_ref)
+    us = time_fn(ema, ma, b, ia, ip)
+    flops = 2.0 * g.n * t.n_out * t.n_splits
+    record("kernel/ema_jnp/k8m5", us, f"gflops={flops / us / 1e3:.2f}")
+    out = ema_blocked(ma, b, ia, ip, vertex_tile=512, interpret=True)
+    err = float(jnp.max(jnp.abs(out - ema_ref(ma, b, ia, ip))))
+    record("kernel/ema_pallas_interpret/k8m5", 0.0, f"max_abs_err={err:.2e}")

@@ -1,0 +1,84 @@
+"""Fig 13 analog: strong scaling of distributed SUBGRAPH2VEC.
+
+The container exposes one physical core, so wall-time across host-device
+counts measures dispatch overhead, not hardware scaling; the meaningful
+strong-scaling evidence on this host is the **per-shard resource scaling**
+extracted from the compiled artifact at mesh sizes 1/2/4/8:
+
+* per-shard M-matrix bytes (the paper's Fig 12 memory-extension claim),
+* per-shard HLO flops (compute splits linearly),
+* all-gather wire bytes (the communication the column batching bounds).
+
+Runs in a subprocess (needs its own XLA_FLAGS device count).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from .common import record
+
+_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, time
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import build_counting_plan, get_template, rmat_graph
+from repro.core.distributed import (make_distributed_count_fn, plan_tables,
+                                    plan_table_specs, shard_graph, distributed_input_specs)
+from repro.launch.roofline import collective_wire_bytes
+
+g = rmat_graph(16384, 160_000, seed=7)
+t = get_template("u7")
+plan = build_counting_plan(t)
+out = []
+for n_dev in (1, 2, 4, 8):
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    sg = shard_graph(g, n_dev)
+    fn = make_distributed_count_fn(plan, mesh, sg.n_padded, sg.edges_per_shard, column_batch=8)
+    tables = plan_tables(plan)
+    colors = jnp.asarray(np.random.default_rng(0).integers(0, t.k, size=sg.n_padded))
+    args = (colors, jnp.asarray(sg.src), jnp.asarray(sg.dst_local), jnp.asarray(sg.edge_mask), tables)
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(fn)
+        compiled = jitted.lower(*args).compile()
+        val = float(jitted(*args))
+        t0 = time.perf_counter(); jax.block_until_ready(jitted(*args)); dt = time.perf_counter() - t0
+    ca = compiled.cost_analysis() or {}
+    coll, _ = collective_wire_bytes(compiled.as_text())
+    out.append({
+        "devices": n_dev,
+        "wall_s": dt,
+        "flops_per_shard": ca.get("flops", 0.0),
+        "bytes_per_shard": ca.get("bytes accessed", 0.0),
+        "collective_bytes": coll,
+        "count": val,
+    })
+print("RESULT " + json.dumps(out))
+"""
+
+
+def run() -> None:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", _CHILD], capture_output=True, text=True, env=env, timeout=900
+    )
+    line = next(l for l in proc.stdout.splitlines() if l.startswith("RESULT "))
+    data = json.loads(line[len("RESULT "):])
+    base = data[0]
+    counts = [d["count"] for d in data]
+    spread = (max(counts) - min(counts)) / max(abs(counts[0]), 1e-9)
+    # fp32 reassociation across mesh sizes (the paper's Fig 14 effect)
+    assert spread < 1e-5, f"count drifted beyond fp tolerance: {counts}"
+    for d in data:
+        record(
+            f"fig13/strong_scaling/{d['devices']}dev",
+            d["wall_s"] * 1e6,
+            f"flops_per_shard_frac={d['flops_per_shard'] / max(base['flops_per_shard'], 1):.3f};"
+            f"bytes_per_shard_frac={d['bytes_per_shard'] / max(base['bytes_per_shard'], 1):.3f}",
+        )

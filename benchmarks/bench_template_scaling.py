@@ -1,0 +1,33 @@
+"""Fig 12 analog: template-size scaling — peak live M-matrix columns and
+bytes as the template grows (the distributed system's memory-extension
+argument), plus measured wall time per template on the CPU host."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_counting_plan, count_colorful_vectorized, get_template, rmat_graph, spmm_edges
+from .common import record, time_fn
+
+
+def run() -> None:
+    g = rmat_graph(1024, 10_000, seed=9)
+    spmm = partial(spmm_edges, jnp.asarray(g.src), jnp.asarray(g.dst), g.n)
+    rng = np.random.default_rng(2)
+    for tname in ["u5-1", "u7", "u10", "u12"]:
+        t = get_template(tname)
+        plan = build_counting_plan(t)
+        peak_cols = plan.peak_columns()
+        colors = jnp.asarray(rng.integers(0, t.k, size=g.n))
+        fn = jax.jit(lambda c, p=plan, s=spmm: count_colorful_vectorized(p, c, s))
+        us = time_fn(fn, colors, iters=2)
+        bytes_1m = peak_cols * 1_000_000 * 4
+        record(
+            f"fig12/template_scaling/{tname}",
+            us,
+            f"peak_cols={peak_cols};bytes_at_1M_vertices={bytes_1m / 1e9:.1f}GB",
+        )

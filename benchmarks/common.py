@@ -1,0 +1,33 @@
+"""Shared benchmark utilities: timing, CSV emission."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def record(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Best-of-N wall time in microseconds (after jit warmup)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def emit_header() -> None:
+    print("name,us_per_call,derived")

@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only tableIII,fig14,...]
+
+Emits ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import bench_counting, bench_error, bench_kernels, bench_scaling, bench_template_scaling
+from .common import emit_header
+
+BENCHES = {
+    "tableIII": bench_counting.run,        # S vs F execution time + speedup
+    "fig8": bench_counting.run,            # same data isolates the vectorization win
+    "fig12": bench_template_scaling.run,   # template-size scaling / memory
+    "fig13": bench_scaling.run,            # distributed strong scaling
+    "fig14": bench_error.run,              # relative error
+    "kernels": bench_kernels.run,          # Table IV analogue (SpMM/eMA)
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated bench keys")
+    args = ap.parse_args()
+    keys = list(dict.fromkeys(args.only.split(","))) if args.only else [
+        "tableIII", "fig12", "fig13", "fig14", "kernels"
+    ]
+
+    emit_header()
+    failed = []
+    for key in keys:
+        try:
+            BENCHES[key]()
+        except Exception:
+            traceback.print_exc()
+            failed.append(key)
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

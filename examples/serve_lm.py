@@ -1,0 +1,40 @@
+"""Serving example: batched request serving with the continuous-batching-lite
+engine (prefill into slots + joint decode; deliverable (b) serving driver).
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import numpy as np
+
+import jax
+
+from repro.configs.base import LMConfig
+from repro.models import transformer as T
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    cfg = LMConfig(
+        name="serve-demo", n_layers=4, d_model=256, n_heads=8, n_kv_heads=2,
+        d_head=32, d_ff=1024, vocab_size=4096, dtype="float32", remat=False,
+        attn_q_chunk=64, scan_layers=False,
+    )
+    params = T.init_params(jax.random.PRNGKey(7), cfg)
+    engine = ServeEngine(cfg, params, max_batch=4, max_len=96)
+
+    rng = np.random.default_rng(0)
+    requests = [
+        Request(uid=i, prompt=rng.integers(1, cfg.vocab_size, size=int(l)).astype(np.int32),
+                max_new_tokens=12)
+        for i, l in enumerate(rng.integers(4, 24, size=10))
+    ]
+    print(f"serving {len(requests)} requests on a {engine.max_batch}-slot pool...")
+    engine.run(requests)
+    for req in requests:
+        assert req.done and len(req.generated) == 12
+        print(f"  req {req.uid}: prompt_len={len(req.prompt)} -> {req.generated}")
+    print("OK — all requests served to completion with continuous batching")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Generate EXPERIMENTS.md roofline/dry-run tables from results/dryrun/*.json.
+
+  PYTHONPATH=src python scripts/make_experiments_tables.py > results/tables.md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def fmt_s(x):
+    return f"{x:.2e}"
+
+
+def main() -> int:
+    recs = []
+    for path in sorted(glob.glob("results/dryrun/*.json")):
+        with open(path) as f:
+            recs.append(json.load(f))
+    if not recs:
+        print("no records", file=sys.stderr)
+        return 1
+
+    singles = [r for r in recs if r["mesh"] == "single"]
+    multis = {(r["arch"], r["shape"]): r for r in recs if r["mesh"] == "multi"}
+
+    print("### Dry-run grid (lower+compile status, per-device memory)\n")
+    print("| arch | shape | single-pod (256) | multi-pod (512) | HBM bytes/dev (single) | fits 16GB |")
+    print("|---|---|---|---|---|---|")
+    for r in singles:
+        key = (r["arch"], r["shape"])
+        multi_ok = "compiled" if key in multis else "—"
+        mem = r.get("per_device_memory_bytes") or 0
+        print(
+            f"| {r['arch']} | {r['shape']} | compiled | {multi_ok} | {mem:.2e} | "
+            f"{'yes' if r.get('fits_hbm') else 'NO'} |"
+        )
+
+    print("\n### Roofline (single-pod, scan-corrected probes where applicable)\n")
+    print("| arch | shape | compute (s) | memory (s) | collective (s) | bottleneck | MODEL_FLOPS | useful ratio | dominant-term note |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in singles:
+        print(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} | "
+            f"{fmt_s(r['collective_s'])} | **{r['bottleneck']}** | {r['model_flops']:.2e} | "
+            f"{r['useful_flops_ratio']:.3f} | |"
+        )
+
+    print("\n### Collective inventory (single-pod)\n")
+    print("| arch | shape | wire bytes/dev | ops |")
+    print("|---|---|---|---|")
+    for r in singles:
+        ops = ", ".join(f"{k}x{v}" for k, v in sorted(r.get("collective_counts", {}).items()))
+        print(f"| {r['arch']} | {r['shape']} | {r['collective_bytes']:.2e} | {ops} |")
+
+    perf = sorted(glob.glob("results/perf/*.json"))
+    if perf:
+        print("\n### Perf before/after records\n")
+        for path in perf:
+            with open(path) as f:
+                p = json.load(f)
+            print(f"**{p.get('cell', os.path.basename(path))}**")
+            for key in ("loop", "streamed", "baseline", "optimized"):
+                if key in p:
+                    v = p[key]
+                    print(
+                        f"- {key}: resident {v['resident_bytes_per_device']/1e9:.2f} GB/dev, "
+                        f"collective {v['collective_bytes']/1e9:.2f} GB, fits={v['fits_16GB']}"
+                    )
+            if "analytic_B_roundtrip_bytes_per_device" in p:
+                print(
+                    f"- analytic HBM saving (B round-trip removed): "
+                    f"{p['analytic_B_roundtrip_bytes_per_device']/1e9:.2f} GB/dev/step"
+                )
+            print()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

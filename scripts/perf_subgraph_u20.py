@@ -1,0 +1,98 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb — paper core (subgraph2vec x rmat1m_u20, single pod).
+
+Baseline  = paper-faithful Algorithm 5 (batched SpMM -> materialized B -> eMA).
+Optimized = streamed eMA (beyond paper): per-batch SpMM output consumed
+immediately; B never exists.
+
+Records per variant: resident bytes/device (memory_analysis), collective
+bytes (HLO parse), analytic HBM-traffic delta.  Output JSON ->
+results/perf/subgraph_u20.json.
+"""
+
+import json
+
+import jax
+import numpy as np
+
+from repro.configs.registry import SUBGRAPH_SHAPES
+from repro.core import build_counting_plan
+from repro.core.colorsets import binom
+from repro.core.distributed import (
+    build_streamed_tables,
+    distributed_input_specs,
+    make_distributed_count_fn,
+    plan_table_specs,
+)
+from repro.core.templates import PAPER_TEMPLATES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import collective_wire_bytes
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def compile_variant(mesh, plan, n_padded, edges_per_shard, mode, column_batch=128):
+    fn = make_distributed_count_fn(
+        plan, mesh, n_padded, edges_per_shard,
+        column_batch=column_batch,
+        ema_mode=mode,
+    )
+    specs = distributed_input_specs(n_padded, mesh.devices.size, edges_per_shard)
+    if mode == "streamed":
+        tbl = build_streamed_tables(plan, column_batch)
+        t_specs = {kk: tuple(jax.ShapeDtypeStruct(a.shape, a.dtype) for a in v) for kk, v in tbl.items()}
+    else:
+        t_specs = plan_table_specs(plan)
+    every = tuple(mesh.axis_names)
+    in_sh = tuple(NamedSharding(mesh, P(every)) for _ in specs) + (
+        jax.tree.map(lambda _: NamedSharding(mesh, P(None, None)), t_specs),
+    )
+    with jax.set_mesh(mesh):
+        compiled = jax.jit(fn, in_shardings=in_sh).lower(*specs, t_specs).compile()
+    ms = compiled.memory_analysis()
+    resident = ms.argument_size_in_bytes + ms.temp_size_in_bytes + max(
+        ms.output_size_in_bytes - ms.alias_size_in_bytes, 0
+    )
+    coll, counts = collective_wire_bytes(compiled.as_text())
+    return {
+        "mode": mode,
+        "resident_bytes_per_device": float(resident),
+        "temp_bytes": float(ms.temp_size_in_bytes),
+        "collective_bytes": float(coll),
+        "collective_counts": counts,
+        "fits_16GB": bool(resident < 16e9),
+    }
+
+
+def main():
+    mesh = make_production_mesh()
+    shape = [s for s in SUBGRAPH_SHAPES if s.name == "rmat1m_u20"][0]
+    k = shape.params["k"]
+    plan = build_counting_plan(PAPER_TEMPLATES["u20"])
+    n_shards = mesh.devices.size
+    n = shape.params["n_vertices"]
+    n_padded = ((n + n_shards - 1) // n_shards) * n_shards
+    e_directed = 2 * shape.params["n_edges"]
+    edges_per_shard = ((int(e_directed / n_shards * 1.2) + 7) // 8) * 8
+    rows = n_padded // n_shards
+
+    # analytic HBM saving: B write+read per stage = 2 * rows * C_p * 4 bytes
+    b_traffic = sum(
+        2.0 * rows * binom(k, t.m_p) * 4 for t in plan.tables if t is not None
+    )
+
+    out = {"cell": "subgraph2vec/rmat1m_u20/single", "analytic_B_roundtrip_bytes_per_device": b_traffic}
+    for mode in ("loop", "streamed"):
+        print(f"compiling {mode}...")
+        out[mode] = compile_variant(mesh, plan, n_padded, edges_per_shard, mode)
+        print(json.dumps(out[mode], indent=1))
+    os.makedirs("results/perf", exist_ok=True)
+    with open("results/perf/subgraph_u20.json", "w") as f:
+        json.dump(out, f, indent=1)
+    print("wrote results/perf/subgraph_u20.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: SubGraph2Vec (vectorized tree subgraph counting) as a JAX framework."""
+
+__version__ = "1.0.0"

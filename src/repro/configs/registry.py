@@ -1,0 +1,65 @@
+"""--arch registry: maps architecture ids to config modules and shape grids."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List, Tuple
+
+from repro.configs.base import (
+    GNN_SHAPES,
+    LM_SHAPES,
+    RECSYS_SHAPES,
+    ShapeCell,
+)
+
+__all__ = ["ARCHS", "get_arch", "shapes_for", "all_cells", "SUBGRAPH_SHAPES"]
+
+# arch id -> (family, config module)
+ARCHS: Dict[str, Tuple[str, str]] = {
+    "deepseek-v2-lite-16b": ("lm", "repro.configs.deepseek_v2_lite_16b"),
+    "dbrx-132b": ("lm", "repro.configs.dbrx_132b"),
+    "nemotron-4-15b": ("lm", "repro.configs.nemotron_4_15b"),
+    "granite-8b": ("lm", "repro.configs.granite_8b"),
+    "granite-20b": ("lm", "repro.configs.granite_20b"),
+    "gat-cora": ("gnn", "repro.configs.gat_cora"),
+    "nequip": ("gnn", "repro.configs.nequip"),
+    "gcn-cora": ("gnn", "repro.configs.gcn_cora"),
+    "mace": ("gnn", "repro.configs.mace"),
+    "two-tower-retrieval": ("recsys", "repro.configs.two_tower_retrieval"),
+    # the paper's own workload (extra cells beyond the assigned 40)
+    "subgraph2vec": ("subgraph", "repro.configs.subgraph2vec"),
+}
+
+# paper workloads: dataset x template (Table II / III / Fig 12 analogues)
+SUBGRAPH_SHAPES: Tuple[ShapeCell, ...] = (
+    ShapeCell("rmat1m_u12", "count", {"n_vertices": 1_000_000, "n_edges": 200_000_000, "k": 12}),
+    ShapeCell("rmat1m_u17", "count", {"n_vertices": 1_000_000, "n_edges": 200_000_000, "k": 17}),
+    ShapeCell("rmat1m_u20", "count", {"n_vertices": 1_000_000, "n_edges": 200_000_000, "k": 20}),
+    ShapeCell("gs22_u14", "count", {"n_vertices": 2_000_000, "n_edges": 128_000_000, "k": 14}),
+)
+
+_SHAPES = {"lm": LM_SHAPES, "gnn": GNN_SHAPES, "recsys": RECSYS_SHAPES, "subgraph": SUBGRAPH_SHAPES}
+
+
+def get_arch(arch: str):
+    """Returns (family, config module)."""
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    family, module = ARCHS[arch]
+    return family, importlib.import_module(module)
+
+
+def shapes_for(arch: str) -> Tuple[ShapeCell, ...]:
+    family, _ = ARCHS[arch]
+    return _SHAPES[family]
+
+
+def all_cells(include_subgraph: bool = False) -> List[Tuple[str, ShapeCell]]:
+    """The (arch x shape) dry-run grid: 40 assigned cells (+ paper cells)."""
+    cells = []
+    for arch, (family, _) in ARCHS.items():
+        if family == "subgraph" and not include_subgraph:
+            continue
+        for shape in _SHAPES[family]:
+            cells.append((arch, shape))
+    return cells

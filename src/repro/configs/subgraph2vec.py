@@ -1,0 +1,17 @@
+"""The paper's own workload configs (RMAT-1M and Graph500-scale datasets)."""
+
+from repro.configs.base import SubgraphConfig
+
+CONFIG = SubgraphConfig(
+    name="subgraph2vec",
+    n_vertices=1_000_000,
+    n_edges=200_000_000,
+    template="u17",
+)
+
+SMOKE_CONFIG = SubgraphConfig(
+    name="subgraph2vec-smoke",
+    n_vertices=512,
+    n_edges=2_000,
+    template="u5-2",
+)

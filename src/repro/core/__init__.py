@@ -1,0 +1,38 @@
+"""SubGraph2Vec core: color-coding tree subgraph counting as SpMM + eMA."""
+
+from .colorsets import (
+    SplitTable,
+    binom,
+    build_split_table,
+    colorful_probability,
+    enumerate_subsets,
+    rank_subsets,
+    unrank_subsets,
+)
+from .counting import (
+    CountingPlan,
+    brute_force_colorful,
+    brute_force_embeddings,
+    build_counting_plan,
+    count_colorful_traversal,
+    count_colorful_vectorized,
+    normalize_count,
+    spmm_edges,
+    spmm_ell,
+)
+from .estimator import EstimateResult, estimate_embeddings, make_count_step, required_iterations
+from .graph import BlockedELL, Graph, build_blocked_ell, erdos_renyi_graph, grid_graph, rmat_graph
+from .templates import (
+    PAPER_TEMPLATES,
+    Template,
+    TemplatePartition,
+    get_template,
+    partition_template,
+    path_template,
+    random_tree_template,
+    star_template,
+    binary_tree_template,
+    tree_automorphisms,
+)
+
+__all__ = [name for name in dir() if not name.startswith("_")]

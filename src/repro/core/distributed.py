@@ -1,0 +1,346 @@
+"""Distributed SUBGRAPH2VEC: the paper's MPI scheme on a TPU mesh (shard_map).
+
+Decomposition (DESIGN.md §5): vertices are 1-D row-partitioned across **all**
+mesh axes (the paper's distributed layout), edges co-located with their
+destination vertex.  Per DP stage:
+
+* **SpMM** — the only communicating step.  The dense count matrix
+  ``M_{s,p}`` is broadcast in **column batches** (the paper's batched SpMM,
+  §V-C: "we also split columns of M_{s,p} into batches ... to save peak
+  memory"): for each batch, ``all_gather`` the batch rows along the mesh,
+  then a local edge segment-sum produces the batch of ``B``.
+  Peak extra memory = one batch = ``n * column_batch * 4`` bytes.
+* **eMA** — entirely vertex-local (Equation 1's whole point), zero
+  communication.
+
+The final count is a ``psum`` of local totals.  Column batching makes the
+collective volume *independent* of the template size per batch; the batch
+size is the knob the perf log (§Perf) tunes against the ICI roofline.
+
+Edge-balance caveat: row-range partitions inherit degree skew (the paper's
+Fig 10 observation); ``partition_vertices`` therefore supports the
+degree-sorted balancing permutation as an option.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from .colorsets import binom
+from .counting import CountingPlan, _ema_apply
+from .graph import Graph
+
+__all__ = [
+    "ShardedGraph",
+    "shard_graph",
+    "make_distributed_count_fn",
+    "distributed_input_specs",
+    "plan_tables",
+    "plan_table_specs",
+]
+
+
+@dataclass(frozen=True)
+class ShardedGraph:
+    """Host-side edge partition: shard i owns vertex rows
+    ``[i * rows_per_shard, (i+1) * rows_per_shard)`` and every edge whose dst
+    lies in that range, padded to ``edges_per_shard``."""
+
+    n: int
+    n_padded: int
+    n_shards: int
+    rows_per_shard: int
+    edges_per_shard: int
+    src: np.ndarray        # (n_shards * edges_per_shard,) global src ids
+    dst_local: np.ndarray  # (n_shards * edges_per_shard,) dst - shard offset
+    edge_mask: np.ndarray  # (n_shards * edges_per_shard,) float32
+
+
+def shard_graph(graph: Graph, n_shards: int, balance_degrees: bool = False) -> ShardedGraph:
+    src, dst = graph.src, graph.dst
+    perm = None
+    if balance_degrees:
+        # round-robin by degree rank: spreads hubs across shards
+        order = np.argsort(-graph.degrees(), kind="stable")
+        perm = np.empty(graph.n, dtype=np.int64)
+        perm[order] = np.arange(graph.n)
+        src, dst = perm[src].astype(np.int32), perm[dst].astype(np.int32)
+
+    rows = -(-graph.n // n_shards)
+    rows = max(rows, 1)
+    n_padded = rows * n_shards
+    shard_of = dst // rows
+    counts = np.bincount(shard_of, minlength=n_shards)
+    e_max = int(counts.max(initial=1))
+
+    src_out = np.zeros((n_shards, e_max), dtype=np.int32)
+    dst_out = np.zeros((n_shards, e_max), dtype=np.int32)
+    mask_out = np.zeros((n_shards, e_max), dtype=np.float32)
+    order = np.argsort(shard_of, kind="stable")
+    src_s, dst_s, shard_s = src[order], dst[order], shard_of[order]
+    starts = np.concatenate([[0], np.cumsum(np.bincount(shard_s, minlength=n_shards))])
+    for s in range(n_shards):
+        lo, hi = int(starts[s]), int(starts[s + 1])
+        c = hi - lo
+        src_out[s, :c] = src_s[lo:hi]
+        dst_out[s, :c] = dst_s[lo:hi] - s * rows
+        mask_out[s, :c] = 1.0
+    return ShardedGraph(
+        n=graph.n,
+        n_padded=n_padded,
+        n_shards=n_shards,
+        rows_per_shard=rows,
+        edges_per_shard=e_max,
+        src=src_out.reshape(-1),
+        dst_local=dst_out.reshape(-1),
+        edge_mask=mask_out.reshape(-1),
+    )
+
+
+def _pad_cols(c: int, batch: int) -> int:
+    return ((c + batch - 1) // batch) * batch
+
+
+def _compressed_gather(x, axes, gather_dtype):
+    """All-gather with the payload genuinely cast on the wire.
+
+    ``optimization_barrier`` stops XLA from commuting the converts across the
+    collective (observed on XLA:CPU: convert(bf16)->gather->convert(f32) gets
+    folded back to an f32 gather, rounding values without saving bytes).
+    """
+    if gather_dtype is None:
+        return jax.lax.all_gather(x, axes, axis=0, tiled=True)
+    payload = jax.lax.optimization_barrier(x.astype(gather_dtype))
+    full = jax.lax.all_gather(payload, axes, axis=0, tiled=True)
+    return jax.lax.optimization_barrier(full).astype(jnp.float32)
+
+
+def _pvary_missing(x, axes):
+    """Mark ``x`` varying over any mesh axes it is not already varying on
+    (loop-carry inits must match the varying type of the loop body)."""
+    vma = getattr(jax.typeof(x), "vma", frozenset())
+    missing = tuple(a for a in axes if a not in vma)
+    return jax.lax.pvary(x, missing) if missing else x
+
+
+def build_streamed_tables(plan: CountingPlan, column_batch: int):
+    """Per-stage split tables re-bucketed by passive-column batch.
+
+    The streamed schedule (§Perf beyond-paper optimization) consumes each
+    all-gathered SpMM column batch immediately: for batch ``bi`` it applies
+    every (out, split) entry whose passive column falls in the batch.  ``B``
+    is never materialized — peak per-stage memory drops from
+    ``M_a + M_p + B + M_s`` to ``M_a + M_p + M_s + one batch`` and the
+    B write+read HBM round-trip disappears.
+
+    Returns ``{stage: (ent_out, ent_ia, ent_ip_local, ent_valid)}`` with
+    arrays shaped ``(n_batches, cap)`` (padded per batch).
+    """
+    out = {}
+    for i, t in enumerate(plan.tables):
+        if t is None:
+            continue
+        n_out, n_splits = t.idx_a.shape
+        flat_out = np.repeat(np.arange(n_out, dtype=np.int32), n_splits)
+        flat_ia = t.idx_a.reshape(-1).astype(np.int32)
+        flat_ip = t.idx_p.reshape(-1).astype(np.int32)
+        c_p = binom(plan.k, t.m_p)
+        n_batches = (c_p + column_batch - 1) // column_batch
+        bucket = flat_ip // column_batch
+        order = np.argsort(bucket, kind="stable")
+        flat_out, flat_ia, flat_ip, bucket = (
+            flat_out[order], flat_ia[order], flat_ip[order], bucket[order],
+        )
+        counts = np.bincount(bucket, minlength=n_batches)
+        cap = int(counts.max(initial=1))
+        ent_out = np.zeros((n_batches, cap), np.int32)
+        ent_ia = np.zeros((n_batches, cap), np.int32)
+        ent_ip = np.zeros((n_batches, cap), np.int32)
+        ent_valid = np.zeros((n_batches, cap), np.float32)
+        starts = np.concatenate([[0], np.cumsum(counts)])
+        for b in range(n_batches):
+            lo, hi = int(starts[b]), int(starts[b + 1])
+            c = hi - lo
+            ent_out[b, :c] = flat_out[lo:hi]
+            ent_ia[b, :c] = flat_ia[lo:hi]
+            ent_ip[b, :c] = flat_ip[lo:hi] - b * column_batch
+            ent_valid[b, :c] = 1.0
+        out[i] = (
+            jnp.asarray(ent_out),
+            jnp.asarray(ent_ia),
+            jnp.asarray(ent_ip),
+            jnp.asarray(ent_valid),
+        )
+    return out
+
+
+def make_distributed_count_fn(
+    plan: CountingPlan,
+    mesh: Mesh,
+    n_padded: int,
+    edges_per_shard: int,
+    column_batch: Optional[int] = 128,
+    ema_mode: str = "loop",
+    gather_dtype=None,
+):
+    """Build the jit-able distributed one-coloring count.
+
+    Signature of the returned fn:
+      (colors (n_padded,) i32, src (S*E,) i32, dst_local (S*E,) i32,
+       edge_mask (S*E,) f32, tables) -> scalar raw colorful total.
+
+    ``ema_mode``:
+      * "loop" — paper-faithful Algorithm 5: full batched SpMM into B, then
+        the eMA pass (B materialized per stage).
+      * "vectorized" — probe mode (single all-gather + einsum, loop-free).
+      * "streamed" — beyond-paper fusion: every all-gathered column batch is
+        consumed immediately by the eMA updates that read it (tables from
+        :func:`build_streamed_tables`); B never exists.
+
+    ``gather_dtype=jnp.bfloat16`` compresses the row all-gather payload 2x —
+    the counting analogue of gradient compression.  Counts are an (eps,
+    delta) ESTIMATOR, so the ~0.4% bf16 rounding is dominated by coloring
+    variance; measured end-to-end count error is recorded in EXPERIMENTS.md
+    §Perf.  Accumulation stays fp32.
+
+    All tensor inputs are sharded over every mesh axis (1-D row partition of
+    the vertex space).
+    """
+    axes = tuple(mesh.axis_names)
+    n_shards = int(np.prod(mesh.devices.shape))
+    rows = n_padded // n_shards
+    k = plan.k
+
+    def spmm_batched(m_p, src, dst_local, edge_mask):
+        """Column-batched all-gather SpMM; m_p: (rows, C_pad) local.
+
+        ``column_batch=None`` (probe mode): single full-width all-gather, no
+        loop — lets ``cost_analysis`` see the full per-stage work (XLA counts
+        while-loop bodies once)."""
+        if column_batch is None:
+            full = _compressed_gather(m_p, axes, gather_dtype)
+            msgs = full[src] * edge_mask[:, None]
+            return jax.ops.segment_sum(msgs, dst_local, num_segments=rows)
+        c_pad = m_p.shape[1]
+        n_batches = c_pad // column_batch
+
+        def body(b_idx, acc):
+            cols = jax.lax.dynamic_slice(
+                m_p, (0, b_idx * column_batch), (rows, column_batch)
+            )
+            full = _compressed_gather(cols, axes, gather_dtype)
+            msgs = full[src] * edge_mask[:, None]
+            bcol = jax.ops.segment_sum(msgs, dst_local, num_segments=rows)
+            return jax.lax.dynamic_update_slice(acc, bcol, (0, b_idx * column_batch))
+
+        init = _pvary_missing(jnp.zeros_like(m_p), axes)
+        return jax.lax.fori_loop(0, n_batches, body, init)
+
+    def spmm_ema_streamed(m_p, m_a, src, dst_local, edge_mask, n_out, stream_tbl):
+        """Fused per-batch SpMM -> eMA: gather a column batch, reduce it, and
+        immediately scatter its contributions into M_s."""
+        cb = column_batch or 128
+        c_pad = m_p.shape[1]
+        n_batches = c_pad // cb
+        ent_out, ent_ia, ent_ip, ent_valid = stream_tbl
+
+        def body(b_idx, m_s):
+            cols = jax.lax.dynamic_slice(m_p, (0, b_idx * cb), (rows, cb))
+            full = _compressed_gather(cols, axes, gather_dtype)
+            msgs = full[src] * edge_mask[:, None]
+            bcol = jax.ops.segment_sum(msgs, dst_local, num_segments=rows)  # (rows, cb)
+            eo = jax.lax.dynamic_index_in_dim(ent_out, b_idx, keepdims=False)
+            ia = jax.lax.dynamic_index_in_dim(ent_ia, b_idx, keepdims=False)
+            ip = jax.lax.dynamic_index_in_dim(ent_ip, b_idx, keepdims=False)
+            va = jax.lax.dynamic_index_in_dim(ent_valid, b_idx, keepdims=False)
+            prod = jnp.take(m_a, ia, axis=1) * jnp.take(bcol, ip, axis=1) * va[None, :]
+            return m_s.at[:, eo].add(prod)
+
+        init = _pvary_missing(jnp.zeros((rows, n_out), jnp.float32), axes)
+        return jax.lax.fori_loop(0, n_batches, body, init)
+
+    def local_count(colors, src, dst_local, edge_mask, tables):
+        leaf = jax.nn.one_hot(colors, k, dtype=jnp.float32)  # (rows, k)
+        leaf = jnp.pad(leaf, ((0, 0), (0, _pad_cols(k, column_batch or 128) - k)))
+        slots = {}
+        for i, sub in enumerate(plan.partition.subs):
+            if sub.is_leaf:
+                slots[i] = leaf
+                continue
+            m_a, m_p = slots[sub.active], slots[sub.passive]
+            if ema_mode == "streamed":
+                n_out = plan.tables[i].n_out
+                m_s = spmm_ema_streamed(
+                    m_p, m_a, src, dst_local, edge_mask, n_out, tables[i]
+                )
+            else:
+                idx_a, idx_p = tables[i]
+                b = spmm_batched(m_p, src, dst_local, edge_mask)
+                if ema_mode == "vectorized":
+                    # probe mode: single gather-FMA einsum (no fori_loop) so
+                    # the split-axis work is fully visible to cost_analysis
+                    m_s = jnp.einsum(
+                        "nos,nos->no", jnp.take(m_a, idx_a, axis=1), jnp.take(b, idx_p, axis=1)
+                    )
+                else:
+                    init = _pvary_missing(jnp.zeros((rows, idx_a.shape[0]), jnp.float32), axes)
+                    m_s = _ema_apply(m_a, b, idx_a, idx_p, init=init)  # (rows, n_out) — local!
+            cb = column_batch or 128
+            c_out_pad = _pad_cols(m_s.shape[1], cb)
+            slots[i] = jnp.pad(m_s, ((0, 0), (0, c_out_pad - m_s.shape[1])))
+            del slots[sub.active], slots[sub.passive]
+        total_local = jnp.sum(slots[plan.partition.root_index])
+        return jax.lax.psum(total_local, axes)
+
+    sharded = P(axes)
+    per_stage = 4 if ema_mode == "streamed" else 2
+    table_specs = {
+        i: (P(None, None),) * per_stage for i, t in enumerate(plan.tables) if t is not None
+    }
+    count = jax.shard_map(
+        local_count,
+        mesh=mesh,
+        in_specs=(sharded, sharded, sharded, sharded, table_specs),
+        out_specs=P(),
+    )
+    return count
+
+
+def plan_tables(plan: CountingPlan):
+    """Device table pytree matching the fn's ``tables`` argument."""
+    return {
+        i: (jnp.asarray(t.idx_a), jnp.asarray(t.idx_p))
+        for i, t in enumerate(plan.tables)
+        if t is not None
+    }
+
+
+def plan_table_specs(plan: CountingPlan):
+    """ShapeDtypeStructs for the tables argument (dry-run)."""
+    return {
+        i: (
+            jax.ShapeDtypeStruct(t.idx_a.shape, jnp.int32),
+            jax.ShapeDtypeStruct(t.idx_p.shape, jnp.int32),
+        )
+        for i, t in enumerate(plan.tables)
+        if t is not None
+    }
+
+
+def distributed_input_specs(n_padded: int, n_shards: int, edges_per_shard: int):
+    """ShapeDtypeStructs for the distributed count (dry-run inputs)."""
+    e_total = n_shards * edges_per_shard
+    return (
+        jax.ShapeDtypeStruct((n_padded,), jnp.int32),   # colors
+        jax.ShapeDtypeStruct((e_total,), jnp.int32),    # src (global)
+        jax.ShapeDtypeStruct((e_total,), jnp.int32),    # dst (local)
+        jax.ShapeDtypeStruct((e_total,), jnp.float32),  # edge mask
+    )

@@ -1,0 +1,247 @@
+"""Graph containers, sparse formats, and synthetic generators.
+
+The counting DP only needs undirected, unweighted simple graphs.  Three device
+layouts are supported, mirroring the paper's CSR / CSC-Split discussion but
+re-thought for the TPU memory hierarchy (DESIGN.md §2):
+
+* **edge list** — ``(src, dst)`` int32 pairs with both directions present; the
+  high-level SpMM is ``segment_sum(M[src], dst)``.  This is the layout used by
+  the distributed path (edges shard cleanly).
+* **ELL** — ``(n, max_deg)`` padded neighbor table + validity mask; SpMM is a
+  row gather + masked sum (best when the degree distribution is flat).
+* **blocked-ELL ("CSC-Split, TPU edition")** — vertices tiled into blocks of
+  ``block_size`` rows; edges grouped by (dst-block, src-block) tile pair and
+  padded; the Pallas kernel streams one source tile of ``M`` into VMEM per
+  pair and accumulates into the destination tile.  The per-row-range grouping
+  is exactly the locality trick of the paper's CSC-Split format.
+
+Generators: RMAT (the paper's synthetic workhorse), Erdos-Renyi, and a tiny
+deterministic PPIN-like graph for examples.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "Graph",
+    "BlockedELL",
+    "build_blocked_ell",
+    "rmat_graph",
+    "erdos_renyi_graph",
+    "grid_graph",
+]
+
+
+@dataclass(frozen=True)
+class Graph:
+    """Undirected simple graph in canonical edge-list form.
+
+    ``src``/``dst`` contain *both* directions of every undirected edge and are
+    sorted by ``(dst, src)`` so that segment reductions over ``dst`` are
+    contiguous.  ``n`` is the vertex count; ``num_undirected`` the number of
+    undirected edges (``len(src) == 2 * num_undirected``).
+    """
+
+    n: int
+    src: np.ndarray  # (2E,) int32
+    dst: np.ndarray  # (2E,) int32
+
+    @property
+    def num_directed(self) -> int:
+        return int(self.src.shape[0])
+
+    @property
+    def num_undirected(self) -> int:
+        return self.num_directed // 2
+
+    @property
+    def avg_degree(self) -> float:
+        return self.num_directed / max(self.n, 1)
+
+    def degrees(self) -> np.ndarray:
+        return np.bincount(self.dst, minlength=self.n).astype(np.int32)
+
+    def max_degree(self) -> int:
+        return int(self.degrees().max(initial=0))
+
+    def csr(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(row_ptr, col_idx) over destination-major ordering."""
+        deg = self.degrees()
+        row_ptr = np.zeros(self.n + 1, dtype=np.int64)
+        np.cumsum(deg, out=row_ptr[1:])
+        return row_ptr, self.src.astype(np.int32)
+
+    def ell(self, max_deg: Optional[int] = None) -> Tuple[np.ndarray, np.ndarray]:
+        """Padded neighbor table ``(n, max_deg)`` + bool mask.
+
+        Padded slots point at vertex 0 and are masked out.
+        """
+        deg = self.degrees()
+        md = int(max_deg if max_deg is not None else deg.max(initial=1))
+        nbr = np.zeros((self.n, md), dtype=np.int32)
+        mask = np.zeros((self.n, md), dtype=bool)
+        row_ptr, col_idx = self.csr()
+        for i in range(self.n):
+            lo, hi = int(row_ptr[i]), int(row_ptr[i + 1])
+            d = min(hi - lo, md)
+            nbr[i, :d] = col_idx[lo : lo + d]
+            mask[i, :d] = True
+        return nbr, mask
+
+    def dense_adjacency(self) -> np.ndarray:
+        a = np.zeros((self.n, self.n), dtype=np.float32)
+        a[self.dst, self.src] = 1.0
+        return a
+
+
+def _canonicalize(n: int, u: np.ndarray, v: np.ndarray) -> Graph:
+    """Dedup, drop self-loops, symmetrize, and sort by (dst, src)."""
+    keep = u != v
+    u, v = u[keep], v[keep]
+    lo, hi = np.minimum(u, v), np.maximum(u, v)
+    und = np.unique(lo.astype(np.int64) * n + hi.astype(np.int64))
+    lo = (und // n).astype(np.int32)
+    hi = (und % n).astype(np.int32)
+    src = np.concatenate([lo, hi])
+    dst = np.concatenate([hi, lo])
+    order = np.lexsort((src, dst))
+    return Graph(n=n, src=src[order], dst=dst[order])
+
+
+def rmat_graph(
+    n: int,
+    num_edges: int,
+    seed: int = 0,
+    a: float = 0.57,
+    b: float = 0.19,
+    c: float = 0.19,
+) -> Graph:
+    """R-MAT generator (Chakrabarti et al. 2004), the paper's synthetic data.
+
+    ``a + b + c + d = 1`` with ``d = 1 - a - b - c``; larger ``a`` skews the
+    degree distribution (the paper's ``K`` parameter sweeps this skew).
+    """
+    scale = int(np.ceil(np.log2(max(n, 2))))
+    n_pow = 1 << scale
+    rng = np.random.default_rng(seed)
+    # Vectorized bit-by-bit quadrant descent for all edges at once.
+    u = np.zeros(num_edges, dtype=np.int64)
+    v = np.zeros(num_edges, dtype=np.int64)
+    for _ in range(scale):
+        r = rng.random(num_edges)
+        right = (r >= a + b) & (r < a + b + c) | (r >= a + b + c)
+        down = (r >= a) & (r < a + b) | (r >= a + b + c)
+        u = (u << 1) | down.astype(np.int64)
+        v = (v << 1) | right.astype(np.int64)
+    u, v = (u % n).astype(np.int32), (v % n).astype(np.int32)
+    return _canonicalize(n, u, v)
+
+
+def erdos_renyi_graph(n: int, num_edges: int, seed: int = 0) -> Graph:
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, n, size=num_edges).astype(np.int32)
+    v = rng.integers(0, n, size=num_edges).astype(np.int32)
+    return _canonicalize(n, u, v)
+
+
+def grid_graph(rows: int, cols: int) -> Graph:
+    """Deterministic 2-D grid — handy exact-count test fixture."""
+    idx = np.arange(rows * cols).reshape(rows, cols)
+    edges = []
+    edges.append(np.stack([idx[:, :-1].ravel(), idx[:, 1:].ravel()], axis=1))
+    edges.append(np.stack([idx[:-1, :].ravel(), idx[1:, :].ravel()], axis=1))
+    e = np.concatenate(edges, axis=0)
+    return _canonicalize(rows * cols, e[:, 0].astype(np.int32), e[:, 1].astype(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# Blocked-ELL (CSC-Split, TPU edition) — preprocessing for the Pallas SpMM.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class BlockedELL:
+    """Edges grouped by (dst-block, src-block) tile pairs.
+
+    Attributes:
+      n_padded: vertex count padded to a multiple of ``block_size``.
+      block_size: tile edge (rows of M resident in VMEM per step).
+      pair_dst_block: (n_pairs,) int32 — destination block id per pair.
+      pair_src_block: (n_pairs,) int32 — source block id per pair.
+      edge_dst_local: (n_pairs, pair_capacity) int32 — dst row within block.
+      edge_src_local: (n_pairs, pair_capacity) int32 — src row within block.
+      edge_valid:     (n_pairs, pair_capacity) float32 — 1.0 valid / 0.0 pad.
+      row_block_ptr:  (n_blocks + 1,) int32 — pairs are sorted by dst block;
+        pairs for dst block b live in ``[row_block_ptr[b], row_block_ptr[b+1])``.
+    """
+
+    n_padded: int
+    block_size: int
+    pair_dst_block: np.ndarray
+    pair_src_block: np.ndarray
+    edge_dst_local: np.ndarray
+    edge_src_local: np.ndarray
+    edge_valid: np.ndarray
+    row_block_ptr: np.ndarray
+
+    @property
+    def n_blocks(self) -> int:
+        return self.n_padded // self.block_size
+
+    @property
+    def n_pairs(self) -> int:
+        return int(self.pair_dst_block.shape[0])
+
+    @property
+    def pair_capacity(self) -> int:
+        return int(self.edge_dst_local.shape[1])
+
+
+def build_blocked_ell(graph: Graph, block_size: int = 256, pair_capacity: Optional[int] = None) -> BlockedELL:
+    """Group edges into (dst-block, src-block) pairs, padded to a capacity.
+
+    ``pair_capacity`` defaults to the max edges in any pair rounded up to a
+    multiple of 8 (sublane alignment).  Pairs are sorted by destination block
+    so the kernel can keep one VMEM accumulator per destination tile.
+    """
+    bs = block_size
+    n_padded = ((graph.n + bs - 1) // bs) * bs
+    dst_b = graph.dst // bs
+    src_b = graph.src // bs
+    pair_key = dst_b.astype(np.int64) * (n_padded // bs) + src_b
+    order = np.argsort(pair_key, kind="stable")
+    pair_key_s = pair_key[order]
+    uniq, starts, counts = np.unique(pair_key_s, return_index=True, return_counts=True)
+    n_pairs = len(uniq)
+    cap = int(counts.max(initial=1)) if pair_capacity is None else pair_capacity
+    cap = ((cap + 7) // 8) * 8
+    edge_dst_local = np.zeros((n_pairs, cap), dtype=np.int32)
+    edge_src_local = np.zeros((n_pairs, cap), dtype=np.int32)
+    edge_valid = np.zeros((n_pairs, cap), dtype=np.float32)
+    dst_s, src_s = graph.dst[order], graph.src[order]
+    for p in range(n_pairs):
+        lo = int(starts[p])
+        c = min(int(counts[p]), cap)
+        edge_dst_local[p, :c] = dst_s[lo : lo + c] % bs
+        edge_src_local[p, :c] = src_s[lo : lo + c] % bs
+        edge_valid[p, :c] = 1.0
+    pair_dst_block = (uniq // (n_padded // bs)).astype(np.int32)
+    pair_src_block = (uniq % (n_padded // bs)).astype(np.int32)
+    n_blocks = n_padded // bs
+    row_block_ptr = np.zeros(n_blocks + 1, dtype=np.int32)
+    np.add.at(row_block_ptr[1:], pair_dst_block, 1)
+    row_block_ptr = np.cumsum(row_block_ptr).astype(np.int32)
+    return BlockedELL(
+        n_padded=n_padded,
+        block_size=bs,
+        pair_dst_block=pair_dst_block,
+        pair_src_block=pair_src_block,
+        edge_dst_local=edge_dst_local,
+        edge_src_local=edge_src_local,
+        edge_valid=edge_valid,
+        row_block_ptr=row_block_ptr,
+    )

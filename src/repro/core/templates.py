@@ -1,0 +1,329 @@
+"""Tree templates, FASCIA-style partitioning, and automorphism counting.
+
+A *template* is an unrooted tree on ``k`` vertices labeled ``0..k-1``.  The
+color-coding dynamic program requires the template to be partitioned into a
+binary recursion tree of *sub-templates* (paper §II-C / Fig 2):
+
+* pick a root ``rho`` of ``T``;
+* cut one edge ``(rho, tau)`` adjacent to the root — the child keeping ``rho``
+  is the **active** child, the child rooted at ``tau`` is the **passive**
+  child;
+* recurse until every sub-template is a single vertex.
+
+``partition_template`` returns the sub-templates in *topological order*
+(children before parents) so the DP can run as a single forward pass.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import lru_cache
+from math import factorial
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "Template",
+    "SubTemplate",
+    "TemplatePartition",
+    "partition_template",
+    "tree_automorphisms",
+    "path_template",
+    "star_template",
+    "binary_tree_template",
+    "random_tree_template",
+    "PAPER_TEMPLATES",
+    "get_template",
+]
+
+
+@dataclass(frozen=True)
+class Template:
+    """An unrooted tree template on ``k`` vertices."""
+
+    name: str
+    edges: Tuple[Tuple[int, int], ...]
+
+    @property
+    def k(self) -> int:
+        return len(self.edges) + 1
+
+    def adjacency(self) -> List[List[int]]:
+        adj: List[List[int]] = [[] for _ in range(self.k)]
+        for u, v in self.edges:
+            adj[u].append(v)
+            adj[v].append(u)
+        return adj
+
+    def validate(self) -> None:
+        k = self.k
+        seen = {u for e in self.edges for u in e}
+        if self.edges and (max(seen) >= k or min(seen) < 0):
+            raise ValueError(f"template {self.name}: vertex labels must be 0..{k-1}")
+        # Connectivity + acyclicity follows from |E| = |V|-1 + connected.
+        adj = self.adjacency()
+        stack, visited = [0], {0}
+        while stack:
+            u = stack.pop()
+            for v in adj[u]:
+                if v not in visited:
+                    visited.add(v)
+                    stack.append(v)
+        if len(visited) != k:
+            raise ValueError(f"template {self.name}: not a connected tree")
+
+
+@dataclass(frozen=True)
+class SubTemplate:
+    """One node of the partition recursion tree.
+
+    ``vertices`` is the subset of template vertices covered; ``root`` the
+    rooted vertex.  Non-leaf sub-templates reference their active / passive
+    children by index into ``TemplatePartition.subs``.
+    """
+
+    vertices: Tuple[int, ...]
+    root: int
+    active: Optional[int]  # index into partition list, or None for leaves
+    passive: Optional[int]
+
+    @property
+    def size(self) -> int:
+        return len(self.vertices)
+
+    @property
+    def is_leaf(self) -> bool:
+        return self.active is None
+
+
+@dataclass(frozen=True)
+class TemplatePartition:
+    """Topologically-ordered sub-template list; ``subs[-1]`` is the full T."""
+
+    template: Template
+    subs: Tuple[SubTemplate, ...]
+
+    @property
+    def root_index(self) -> int:
+        return len(self.subs) - 1
+
+    def stage_sizes(self) -> List[Tuple[int, int, int]]:
+        """(m, m_a, m_p) for every non-leaf sub-template, in DP order."""
+        out = []
+        for s in self.subs:
+            if not s.is_leaf:
+                a = self.subs[s.active]
+                p = self.subs[s.passive]
+                out.append((s.size, a.size, p.size))
+        return out
+
+
+def partition_template(template: Template, root: Optional[int] = None) -> TemplatePartition:
+    """FASCIA-style single-edge-cut partition into a binary recursion tree.
+
+    The root defaults to a maximum-degree vertex (keeps the active chain long
+    and passive subtrees small, which minimizes the number of distinct
+    ``(m, m_p)`` SpMM column counts).
+    """
+    template.validate()
+    adj = template.adjacency()
+    if root is None:
+        root = int(np.argmax([len(a) for a in adj]))
+
+    subs: List[SubTemplate] = []
+
+    def subtree_vertices(start: int, blocked: int) -> Tuple[int, ...]:
+        """Vertices reachable from ``start`` without crossing ``blocked``."""
+        out, stack, seen = [], [start], {start, blocked}
+        while stack:
+            u = stack.pop()
+            out.append(u)
+            for v in adj[u]:
+                if v not in seen:
+                    seen.add(v)
+                    stack.append(v)
+        return tuple(sorted(out))
+
+    def rec(vertices: Tuple[int, ...], rho: int) -> int:
+        if len(vertices) == 1:
+            subs.append(SubTemplate(vertices=vertices, root=rho, active=None, passive=None))
+            return len(subs) - 1
+        vset = set(vertices)
+        # Cut the first root-adjacent edge (deterministic: smallest neighbor).
+        taus = sorted(v for v in adj[rho] if v in vset)
+        tau = taus[0]
+        passive_vertices = tuple(v for v in subtree_vertices(tau, rho) if v in vset)
+        active_vertices = tuple(sorted(vset - set(passive_vertices)))
+        a_idx = rec(active_vertices, rho)
+        p_idx = rec(passive_vertices, tau)
+        subs.append(SubTemplate(vertices=vertices, root=rho, active=a_idx, passive=p_idx))
+        return len(subs) - 1
+
+    rec(tuple(sorted(range(template.k))), root)
+    return TemplatePartition(template=template, subs=tuple(subs))
+
+
+# ---------------------------------------------------------------------------
+# Automorphism counting (AHU canonical forms).
+# ---------------------------------------------------------------------------
+
+
+def _rooted_canon_and_aut(adj: Sequence[Sequence[int]], root: int, parent: int) -> Tuple[str, int]:
+    """AHU canonical string + automorphism count of the subtree at ``root``."""
+    forms: List[str] = []
+    aut = 1
+    for child in adj[root]:
+        if child == parent:
+            continue
+        f, a = _rooted_canon_and_aut(adj, child, root)
+        forms.append(f)
+        aut *= a
+    forms.sort()
+    counts: Dict[str, int] = {}
+    for f in forms:
+        counts[f] = counts.get(f, 0) + 1
+    for c in counts.values():
+        aut *= factorial(c)
+    return "(" + "".join(forms) + ")", aut
+
+
+def tree_automorphisms(template: Template) -> int:
+    """|Aut(T)| of an unrooted tree via its center(s)."""
+    template.validate()
+    k = template.k
+    if k == 1:
+        return 1
+    adj = [list(a) for a in template.adjacency()]
+    # Peel leaves to find the 1- or 2-vertex center.
+    degree = [len(a) for a in adj]
+    remaining = k
+    layer = [v for v in range(k) if degree[v] <= 1]
+    removed = [False] * k
+    while remaining > 2:
+        nxt = []
+        for v in layer:
+            removed[v] = True
+            remaining -= 1
+            for u in adj[v]:
+                if not removed[u]:
+                    degree[u] -= 1
+                    if degree[u] == 1:
+                        nxt.append(u)
+        layer = nxt
+    centers = [v for v in range(k) if not removed[v]]
+    if len(centers) == 1:
+        _, aut = _rooted_canon_and_aut(adj, centers[0], -1)
+        return aut
+    c1, c2 = centers
+    f1, a1 = _rooted_canon_and_aut(adj, c1, c2)
+    f2, a2 = _rooted_canon_and_aut(adj, c2, c1)
+    aut = a1 * a2
+    if f1 == f2:
+        aut *= 2  # the edge flip
+    return aut
+
+
+# ---------------------------------------------------------------------------
+# Template constructors and the paper's template library.
+# ---------------------------------------------------------------------------
+
+
+def path_template(k: int, name: Optional[str] = None) -> Template:
+    return Template(name or f"path{k}", tuple((i, i + 1) for i in range(k - 1)))
+
+
+def star_template(k: int, name: Optional[str] = None) -> Template:
+    return Template(name or f"star{k}", tuple((0, i) for i in range(1, k)))
+
+
+def binary_tree_template(k: int, name: Optional[str] = None) -> Template:
+    """Complete-ish binary tree on k vertices (heap numbering)."""
+    return Template(name or f"bintree{k}", tuple(((i - 1) // 2, i) for i in range(1, k)))
+
+
+def random_tree_template(k: int, seed: int, name: Optional[str] = None) -> Template:
+    """Uniform random labeled tree from a Prüfer sequence (deterministic)."""
+    rng = np.random.default_rng(seed)
+    if k == 1:
+        return Template(name or f"rand{k}", ())
+    if k == 2:
+        return Template(name or f"rand{k}", ((0, 1),))
+    prufer = rng.integers(0, k, size=k - 2)
+    degree = np.ones(k, dtype=np.int64)
+    for x in prufer:
+        degree[x] += 1
+    edges = []
+    import heapq
+
+    leaves = [v for v in range(k) if degree[v] == 1]
+    heapq.heapify(leaves)
+    for x in prufer:
+        leaf = heapq.heappop(leaves)
+        edges.append((int(leaf), int(x)))
+        degree[leaf] -= 1
+        degree[x] -= 1
+        if degree[x] == 1:
+            heapq.heappush(leaves, int(x))
+    u, v = [v for v in range(k) if degree[v] == 1][:2]
+    edges.append((u, v))
+    return Template(name or f"rand{k}", tuple(edges))
+
+
+def _u5_2() -> Template:
+    # 5-vertex "chair": path 0-1-2-3 with 4 hanging off 1.
+    return Template("u5-2", ((0, 1), (1, 2), (2, 3), (1, 4)))
+
+
+def _u7() -> Template:
+    # FASCIA's u7: two cherries joined by a center path.
+    return Template("u7", ((0, 1), (1, 2), (1, 3), (0, 4), (4, 5), (4, 6)))
+
+
+def _u10() -> Template:
+    return Template(
+        "u10",
+        ((0, 1), (1, 2), (2, 3), (1, 4), (4, 5), (0, 6), (6, 7), (6, 8), (8, 9)),
+    )
+
+
+def _u12() -> Template:
+    # Paper Fig 6(b) family: balanced tree of depth ~3.
+    return Template(
+        "u12",
+        (
+            (0, 1), (0, 2), (1, 3), (1, 4), (2, 5), (2, 6),
+            (3, 7), (4, 8), (5, 9), (6, 10), (10, 11),
+        ),
+    )
+
+
+PAPER_TEMPLATES: Dict[str, Template] = {
+    "u3": path_template(3, "u3"),
+    "u5-1": path_template(5, "u5-1"),
+    "u5-2": _u5_2(),
+    "u6": binary_tree_template(6, "u6"),
+    "u7": _u7(),
+    "u10": _u10(),
+    "u12": _u12(),
+    "u13": random_tree_template(13, seed=13, name="u13"),
+    "u14": random_tree_template(14, seed=14, name="u14"),
+    "u15-1": random_tree_template(15, seed=151, name="u15-1"),
+    "u15-2": random_tree_template(15, seed=152, name="u15-2"),
+    "u16": random_tree_template(16, seed=16, name="u16"),
+    "u17": random_tree_template(17, seed=17, name="u17"),
+    "u18": random_tree_template(18, seed=18, name="u18"),
+    "u20": random_tree_template(20, seed=20, name="u20"),
+}
+
+
+def get_template(name: str) -> Template:
+    if name in PAPER_TEMPLATES:
+        return PAPER_TEMPLATES[name]
+    if name.startswith("path"):
+        return path_template(int(name[4:]))
+    if name.startswith("star"):
+        return star_template(int(name[4:]))
+    if name.startswith("bintree"):
+        return binary_tree_template(int(name[7:]))
+    raise KeyError(f"unknown template {name!r}; known: {sorted(PAPER_TEMPLATES)}")

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's two compute hot-spots (DESIGN.md §2):
+
+* ``spmm_blocked/`` — "CSC-Split, TPU edition": blocked-ELL SpMM over
+  (dst-block, src-block) tile pairs; MXU one-hot gather/scatter or VPU
+  edge-loop inner modes.  kernel.py (pl.pallas_call + BlockSpec) / ops.py
+  (jit wrapper + host preprocessing) / ref.py (pure-jnp oracle).
+* ``ema/`` — fused eMA count update in the paper's column-major layout
+  (vertex axis on lanes, split tables in SMEM via scalar prefetch).
+
+Both validated against their oracles over shape/dtype sweeps in interpret
+mode (tests/test_kernels.py).
+"""

@@ -1,0 +1,94 @@
+"""Fused eMA (element-wise multiply-add) Pallas TPU kernel.
+
+Computes the count-update stage of SUBGRAPH2VEC (Algorithm 5, line 13):
+
+    M_s[o, :] = sum_t  M_a[idx_a[o, t], :] * B[idx_p[o, t], :]
+
+in the **transposed** ``(colorsets, vertices)`` layout — the paper's
+column-major design (§V-B): the vectorized axis is the vertex axis (lanes,
+length |V|), the combinatorial axes (output color set ``o``, split ``t``) are
+loops.  Everything is vertex-local: no neighbor traversal, no HBM gathers —
+``M_a`` and ``B`` tiles are VMEM-resident per vertex tile, the split tables
+live in SMEM (scalar prefetch), and each inner step is one VPU FMA of a full
+vertex tile.
+
+Grid: ``(num_out_tiles, num_vertex_tiles)``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ema_kernel", "ema_call"]
+
+
+def ema_kernel(
+    # scalar prefetch (SMEM)
+    idx_a_ref, idx_p_ref,
+    # inputs (VMEM)
+    ma_ref, b_ref,
+    # output
+    out_ref,
+    *,
+    out_tile: int,
+    n_splits: int,
+):
+    o_base = pl.program_id(0) * out_tile
+    v_tile = ma_ref.shape[1]
+
+    for oo in range(out_tile):  # static unroll over the output tile rows
+
+        def body(t, acc):
+            ia = idx_a_ref[o_base + oo, t]
+            ip = idx_p_ref[o_base + oo, t]
+            ra = ma_ref[pl.dslice(ia, 1), :]  # (1, v_tile) dynamic row
+            rp = b_ref[pl.dslice(ip, 1), :]
+            return acc + ra * rp
+
+        acc = jax.lax.fori_loop(
+            0, n_splits, body, jnp.zeros((1, v_tile), dtype=out_ref.dtype)
+        )
+        out_ref[pl.dslice(oo, 1), :] = acc
+
+
+def ema_call(
+    ma_t: jnp.ndarray,    # (Ca_pad, n_pad)
+    b_t: jnp.ndarray,     # (Cp_pad, n_pad)
+    idx_a: jnp.ndarray,   # (n_out_pad, n_splits) int32
+    idx_p: jnp.ndarray,   # (n_out_pad, n_splits) int32
+    *,
+    out_tile: int = 8,
+    vertex_tile: int = 1024,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Transposed-layout fused eMA.  ``n_out_pad % out_tile == 0`` and
+    ``n_pad % vertex_tile == 0`` (pad host-side)."""
+    n_out_pad, n_splits = idx_a.shape
+    ca, n_pad = ma_t.shape
+    if n_out_pad % out_tile:
+        raise ValueError(f"n_out={n_out_pad} not a multiple of out_tile={out_tile}")
+    if n_pad % vertex_tile:
+        raise ValueError(f"n={n_pad} not a multiple of vertex_tile={vertex_tile}")
+    grid = (n_out_pad // out_tile, n_pad // vertex_tile)
+
+    kernel = functools.partial(ema_kernel, out_tile=out_tile, n_splits=n_splits)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ca, vertex_tile), lambda o, v, ia, ip: (0, v)),
+            pl.BlockSpec((b_t.shape[0], vertex_tile), lambda o, v, ia, ip: (0, v)),
+        ],
+        out_specs=pl.BlockSpec((out_tile, vertex_tile), lambda o, v, ia, ip: (o, v)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_out_pad, n_pad), ma_t.dtype),
+        interpret=interpret,
+    )(idx_a, idx_p, ma_t, b_t)

@@ -1,0 +1,47 @@
+"""jit'd wrapper around the fused eMA Pallas kernel (row-major interface)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ema_call
+
+__all__ = ["ema_blocked"]
+
+
+def _pad_to(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("out_tile", "vertex_tile", "interpret"))
+def ema_blocked(
+    m_a: jnp.ndarray,   # (n, Ca)
+    b: jnp.ndarray,     # (n, Cp)
+    idx_a: jnp.ndarray,  # (n_out, S) int32
+    idx_p: jnp.ndarray,  # (n_out, S) int32
+    *,
+    out_tile: int = 8,
+    vertex_tile: int = 1024,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """``M_s = eMA(M_a, B)`` with row-major ``(n, C)`` orientation."""
+    n, _ = m_a.shape
+    n_out = idx_a.shape[0]
+    ma_t = _pad_to(_pad_to(m_a.T, 0, 8), 1, vertex_tile)
+    b_t = _pad_to(_pad_to(b.T, 0, 8), 1, vertex_tile)
+    idx_a_p = _pad_to(idx_a.astype(jnp.int32), 0, out_tile)
+    idx_p_p = _pad_to(idx_p.astype(jnp.int32), 0, out_tile)
+    out_t = ema_call(
+        ma_t, b_t, idx_a_p, idx_p_p,
+        out_tile=out_tile, vertex_tile=vertex_tile, interpret=interpret,
+    )
+    return out_t[:n_out, :n].T

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the fused eMA kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ema_ref", "ema_ref_transposed"]
+
+
+def ema_ref(m_a: jnp.ndarray, b: jnp.ndarray, idx_a: jnp.ndarray, idx_p: jnp.ndarray) -> jnp.ndarray:
+    """Row-major oracle: ``out[:, o] = sum_t M_a[:, idx_a[o,t]] * B[:, idx_p[o,t]]``."""
+    n = m_a.shape[0]
+    n_out, n_splits = idx_a.shape
+
+    def body(t, acc):
+        return acc + jnp.take(m_a, idx_a[:, t], axis=1) * jnp.take(b, idx_p[:, t], axis=1)
+
+    return jax.lax.fori_loop(0, n_splits, body, jnp.zeros((n, n_out), dtype=m_a.dtype))
+
+
+def ema_ref_transposed(ma_t, b_t, idx_a, idx_p) -> jnp.ndarray:
+    return ema_ref(ma_t.T, b_t.T, idx_a, idx_p).T

@@ -1,0 +1,52 @@
+"""jit'd GQA-aware wrapper for the flash attention kernel.
+
+Accepts model-layout tensors ``q: (b, s, h, d)``, ``k/v: (b, s, h_kv, d)``
+(post-RoPE), broadcasts kv heads to query groups, pads sequence lengths to
+block multiples, and restores the layout.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_call
+
+__all__ = ["flash_attention"]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(
+    q: jnp.ndarray,  # (b, sq, h, d)
+    k: jnp.ndarray,  # (b, sk, h_kv, d)
+    v: jnp.ndarray,  # (b, sk, h_kv, dv)
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, sq, h, d = q.shape
+    _, sk, h_kv, dv = v.shape
+    group = h // h_kv
+    k = jnp.repeat(k, group, axis=2)
+    v = jnp.repeat(v, group, axis=2)
+
+    def to_bh(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, x.shape[1], x.shape[3])
+
+    qb, kb, vb = to_bh(q), to_bh(k), to_bh(v)
+    pad_q = (-sq) % block_q
+    pad_k = (-sk) % block_k
+    if pad_q:
+        qb = jnp.pad(qb, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kb = jnp.pad(kb, ((0, 0), (0, pad_k), (0, 0)))
+        vb = jnp.pad(vb, ((0, 0), (0, pad_k), (0, 0)))
+    out = flash_attention_call(
+        qb, kb, vb, causal=causal, block_q=block_q, block_k=block_k, interpret=interpret
+    )
+    out = out[:, :sq]
+    return out.reshape(b, h, sq, dv).transpose(0, 2, 1, 3)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, causal: bool = True) -> jnp.ndarray:
+    """(bh, sq, d) x (bh, sk, d) x (bh, sk, dv) -> (bh, sq, dv), fp32 softmax."""
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        sq, sk = s.shape[-2:]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bke->bqe", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the blocked-ELL SpMM kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["spmm_ref", "spmm_ref_transposed"]
+
+
+def spmm_ref(src: jnp.ndarray, dst: jnp.ndarray, n: int, m: jnp.ndarray) -> jnp.ndarray:
+    """``B[i] = sum_{j in N(i)} M[j]`` — edge-list segment-sum oracle, (n, C)."""
+    return jax.ops.segment_sum(m[src], dst, num_segments=n)
+
+
+def spmm_ref_transposed(src: jnp.ndarray, dst: jnp.ndarray, n: int, mt: jnp.ndarray) -> jnp.ndarray:
+    """Transposed-layout oracle: ``(C, n) -> (C, n)``."""
+    return spmm_ref(src, dst, n, mt.T).T

@@ -1,0 +1,580 @@
+"""Dry-run cell builder: (arch x shape x mesh) -> lowerable jit spec.
+
+``build_cell`` returns everything needed to ``jax.jit(fn, in_shardings=...)
+.lower(*args).compile()`` a cell with ShapeDtypeStruct stand-ins (no device
+allocation): the step function, abstract args, shardings, and analytic
+MODEL_FLOPS for the roofline's useful-compute ratio.
+
+Sharding strategy per family is documented in DESIGN.md §5; highlights:
+* LM params: TP over "model" + FSDP over the data axes on a replicated major
+  dim (required to fit 132B fp32 + Adam in 16 GB/chip HBM).
+* LM long_500k: batch=1 -> KV cache sharded along the *sequence* axis.
+* GNN: nodes over data axes, edges over every axis (the scatter psum is the
+  aggregation collective); equivariant models use edge-chunked scan.
+* recsys: tables row(vocab)-sharded over "model"; batch over data axes.
+* subgraph2vec: the paper's distributed DP (vertex 1-D partition, batched
+  all-gather SpMM) via shard_map.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import GNNConfig, LMConfig, RecsysConfig, ShapeCell
+from repro.configs.registry import get_arch
+from repro.launch.mesh import dp_axes
+from repro.models import recsys as RS
+from repro.models import transformer as T
+from repro.models.gnn.message import GraphBatch
+from repro.train.optimizer import (
+    adafactor_init,
+    adafactor_update,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+)
+
+__all__ = ["CellSpec", "build_cell"]
+
+
+@dataclass
+class CellSpec:
+    arch: str
+    shape: str
+    fn: Callable
+    args: Tuple  # pytrees of ShapeDtypeStruct
+    in_shardings: Tuple
+    donate_argnums: Tuple[int, ...]
+    model_flops: float  # analytic useful FLOPs per step (MODEL_FLOPS)
+    meta: Dict[str, Any]
+
+
+def _shard(mesh, tree_specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+
+def _fsdp_param_pspecs(cfg: LMConfig, dp: Tuple[str, ...], mesh: Mesh):
+    """TP pspecs from the model + FSDP over the data axes on a free,
+    divisible major dim (skipping the stacked layer axis).  Required to fit
+    132B fp32 params + Adam state in 16 GB/chip HBM."""
+    model_size = mesh.shape["model"]
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    specs = T.param_pspecs(cfg, model_size=model_size)
+    shapes = T.param_shapes(cfg)
+
+    def upgrade(spec, shape, start):
+        if not isinstance(spec, P):
+            return spec
+        parts = list(spec)
+        dims = shape.shape
+        for i in range(start, len(parts)):
+            if parts[i] is None and dims[i] % dp_size == 0:
+                parts[i] = dp
+                return P(*parts)
+        return spec
+
+    out = {
+        "embed": upgrade(specs["embed"], shapes["embed"], 0),
+        "final_norm": P(None),
+        "groups": [],
+    }
+    for g_spec, g_shape in zip(specs["groups"], shapes["groups"]):
+        gg = {}
+        for k, v in g_spec.items():
+            if k in ("attn_norm", "ffn_norm"):
+                gg[k] = v
+            else:
+                gg[k] = jax.tree.map(
+                    lambda sp, sh: upgrade(sp, sh, 1),
+                    v,
+                    g_shape[k],
+                    is_leaf=lambda x: isinstance(x, P),
+                )
+        out["groups"].append(gg)
+    if "unembed" in specs:
+        out["unembed"] = upgrade(specs["unembed"], shapes["unembed"], 0)
+    return out
+
+
+def _lm_train_flops(cfg: LMConfig, tokens: int) -> float:
+    return 6.0 * cfg.active_param_count() * tokens
+
+
+def _lm_fwd_flops(cfg: LMConfig, tokens: int, kv_len: int, batch: int) -> float:
+    dense = 2.0 * cfg.active_param_count() * tokens
+    # attention scores+values: 2 * 2 * h * dh * q * kv per sequence
+    attn = 4.0 * cfg.n_layers * cfg.n_heads * cfg.d_head * (tokens // max(batch, 1)) * kv_len * batch
+    return dense + attn
+
+
+def _build_lm_cell(arch, cfg: LMConfig, shape: ShapeCell, mesh, probe_n_micro_one: bool = False) -> CellSpec:
+    dp = dp_axes(mesh)
+    n_dp = int(np.prod([mesh.shape[a] for a in dp]))
+    pspecs = _fsdp_param_pspecs(cfg, dp, mesh)
+    p_shapes = T.param_shapes(cfg)
+    kind = shape.kind
+    seq = shape.params["seq_len"]
+    batch = shape.params["global_batch"]
+
+    if kind == "train":
+        # optimizer: Adafactor for the 100B-class archs (factored second
+        # moments: O(n+m) state vs Adam's 2x O(nm) — the T5/PaLM recipe;
+        # Adam moments alone would be 8.2 GB/device for dbrx-132b)
+        use_adafactor = cfg.param_count() > 6e10
+
+        def _row_spec(spec, shape):
+            return P(*spec[: max(len(shape.shape) - 1, 0)]) if len(shape.shape) >= 2 else spec
+
+        def _col_spec(spec, shape):
+            nd = len(shape.shape)
+            if nd < 2:
+                return P()
+            full = tuple(spec) + (None,) * (nd - len(spec))
+            return P(*(full[: nd - 2] + (full[nd - 1],)))
+
+        if use_adafactor:
+            opt_shapes = jax.eval_shape(adafactor_init, p_shapes)
+            row_specs = jax.tree.map(_row_spec, pspecs, p_shapes, is_leaf=lambda x: isinstance(x, P))
+            col_specs = jax.tree.map(_col_spec, pspecs, p_shapes, is_leaf=lambda x: isinstance(x, P))
+            opt_specs = type(opt_shapes)(row=row_specs, col=col_specs, count=P())
+            opt_update = adafactor_update
+        else:
+            opt_shapes = jax.eval_shape(adamw_init, p_shapes)
+            opt_specs = type(opt_shapes)(mu=pspecs, nu=pspecs, count=P())
+            opt_update = adamw_update
+
+        act_spec = P(dp, "model", None)  # batch x sequence-parallel residual
+        # gradient-accumulation microbatching: activation memory scales with
+        # batch/n_micro while params/optimizer stay resident (the standard
+        # big-model memory lever)
+        pc = cfg.param_count()
+        n_micro = 1 if probe_n_micro_one else (16 if pc > 6e10 else (2 if pc > 1.4e10 else 1))
+        micro = max(batch // max(n_micro, 1), n_dp)
+        n_micro = batch // micro
+
+        def train_step(params, opt_state, tokens, labels):
+            t_m = tokens.reshape(n_micro, micro, seq)
+            l_m = labels.reshape(n_micro, micro, seq)
+
+            def micro_step(acc, inp):
+                tm, lm = inp
+                tm = jax.lax.with_sharding_constraint(tm, P(dp, None))
+                loss, grads = jax.value_and_grad(T.loss_fn)(
+                    params, cfg, tm, lm, act_spec, 512  # chunked vocab loss
+                )
+                acc_g, acc_l = acc
+                acc_g = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), acc_g, grads)
+                return (acc_g, acc_l + loss), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            if n_micro == 1:
+                loss, grads = jax.value_and_grad(T.loss_fn)(
+                    params, cfg, tokens, labels, act_spec, 512
+                )
+            else:
+                (grads, loss), _ = jax.lax.scan(micro_step, (zeros, 0.0), (t_m, l_m))
+                grads = jax.tree.map(lambda g: g / n_micro, grads)
+                loss = loss / n_micro
+            grads, gnorm = clip_by_global_norm(grads, 1.0)
+            params, opt_state = opt_update(grads, opt_state, params, 3e-4)
+            return params, opt_state, {"loss": loss, "gnorm": gnorm}
+
+        args = (
+            p_shapes,
+            opt_shapes,
+            jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+            jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        )
+        in_sh = (
+            _shard(mesh, pspecs),
+            _shard(mesh, opt_specs),
+            NamedSharding(mesh, P(dp, None)),
+            NamedSharding(mesh, P(dp, None)),
+        )
+        return CellSpec(
+            arch, shape.name, train_step, args, in_sh, (0, 1),
+            _lm_train_flops(cfg, batch * seq),
+            {"family": "lm", "kind": kind, "tokens": batch * seq, "n_micro": n_micro},
+        )
+
+    dtype = jnp.dtype(cfg.dtype)
+    if kind == "prefill":
+        cache_shapes = T.kv_cache_shapes(cfg, batch, seq)
+        cache_specs = T.kv_cache_pspecs(cfg, dp, model_size=mesh.shape["model"])
+
+        act_spec = P(dp, "model", None)
+
+        def prefill_step(params, caches, tokens):
+            logits, new_caches = T.prefill(params, cfg, tokens, caches, act_spec=act_spec)
+            return logits[:, -1], new_caches
+
+        args = (p_shapes, cache_shapes, jax.ShapeDtypeStruct((batch, seq), jnp.int32))
+        in_sh = (_shard(mesh, pspecs), _shard(mesh, cache_specs), NamedSharding(mesh, P(dp, None)))
+        return CellSpec(
+            arch, shape.name, prefill_step, args, in_sh, (1,),
+            _lm_fwd_flops(cfg, batch * seq, seq, batch),
+            {"family": "lm", "kind": kind, "tokens": batch * seq},
+        )
+
+    # decode: one new token against a seq-length cache
+    shard_seq = batch < n_dp  # long_500k: batch=1 -> shard the sequence axis
+    cache_shapes = T.kv_cache_shapes(cfg, batch, seq)
+    cache_specs = T.kv_cache_pspecs(cfg, dp, shard_seq=shard_seq, model_size=mesh.shape["model"])
+    tok_spec = P(dp, None) if not shard_seq else P(None, None)
+
+    def decode(params, caches, token, index):
+        return T.decode_step(params, cfg, token, caches, index)
+
+    args = (
+        p_shapes,
+        cache_shapes,
+        jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    in_sh = (
+        _shard(mesh, pspecs),
+        _shard(mesh, cache_specs),
+        NamedSharding(mesh, tok_spec),
+        NamedSharding(mesh, P()),
+    )
+    return CellSpec(
+        arch, shape.name, decode, args, in_sh, (1,),
+        _lm_fwd_flops(cfg, batch, seq, batch),
+        {"family": "lm", "kind": "decode", "tokens": batch, "kv_len": seq},
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+
+def _gnn_batch_specs(n: int, e: int, d_feat: int, mesh, equivariant: bool, n_graphs: int):
+    dp = dp_axes(mesh)
+    every = tuple(mesh.axis_names)
+    shapes = GraphBatch(
+        node_feat=jax.ShapeDtypeStruct((n, d_feat), jnp.float32),
+        positions=jax.ShapeDtypeStruct((n, 3), jnp.float32) if equivariant else None,
+        src=jax.ShapeDtypeStruct((e,), jnp.int32),
+        dst=jax.ShapeDtypeStruct((e,), jnp.int32),
+        edge_mask=jax.ShapeDtypeStruct((e,), jnp.float32),
+        node_mask=jax.ShapeDtypeStruct((n,), jnp.float32),
+        graph_id=jax.ShapeDtypeStruct((n,), jnp.int32),
+        n_graphs=n_graphs,
+    )
+    specs = GraphBatch(
+        node_feat=P(dp, None),
+        positions=P(dp, None) if equivariant else None,
+        src=P(every),
+        dst=P(every),
+        edge_mask=P(every),
+        node_mask=P(dp),
+        graph_id=P(dp),
+        n_graphs=n_graphs,
+    )
+    return shapes, specs
+
+
+def _gnn_flops(cfg: GNNConfig, n: int, e: int, d_feat: int) -> float:
+    c = cfg.d_hidden
+    if cfg.model == "gcn":
+        return 2.0 * cfg.n_layers * (e * c + n * d_feat * c)
+    if cfg.model == "gat":
+        return 2.0 * cfg.n_layers * (e * cfg.n_heads * c * 3 + n * d_feat * cfg.n_heads * c)
+    # equivariant: tp paths ~ 60c muls per edge per degree set + radial MLP
+    per_edge = 60.0 * c + 2.0 * cfg.n_rbf * c + 6.0 * c * c
+    per_node = 2.0 * (13 * c) * (3 * c) * 3  # linear mixes on s/v/t
+    order = {1: 1, 2: 2, 3: 3}[max(cfg.correlation_order, 1)]
+    return cfg.n_layers * (e * per_edge + n * per_node * order)
+
+
+def _build_gnn_cell(arch, cfg: GNNConfig, shape: ShapeCell, mesh) -> CellSpec:
+    equivariant = cfg.model in ("nequip", "mace")
+    lanes = 512  # pad node/edge counts to a multiple that divides every mesh
+
+    if shape.kind == "molecule":
+        bsz = shape.params["batch"]
+        n = _pad_to(shape.params["n_nodes"] * bsz, lanes)
+        e = _pad_to(shape.params["n_edges"] * bsz * 2, lanes)
+        d_feat, n_graphs = 16, bsz
+    elif shape.kind == "minibatch":
+        b = shape.params["batch_nodes"]
+        f0, f1 = shape.params["fanout0"], shape.params["fanout1"]
+        n = _pad_to(b * (1 + f0 + f0 * f1), lanes)
+        e = _pad_to(2 * b * (f0 + f0 * f1), lanes)
+        d_feat, n_graphs = 128, 1
+    else:  # full_graph
+        n = _pad_to(shape.params["n_nodes"], lanes)
+        e = _pad_to(shape.params["n_edges"], lanes)
+        d_feat, n_graphs = shape.params["d_feat"], 1
+
+    run_cfg = cfg
+    if equivariant and e > (1 << 22):
+        run_cfg = dataclasses.replace(cfg, edge_chunk=1 << 18)
+
+    from repro.models import gnn as G
+
+    dp = dp_axes(mesh)
+    p_shapes = jax.eval_shape(lambda: G.init_model(jax.random.PRNGKey(0), run_cfg, d_feat))
+    p_specs = jax.tree.map(lambda _: P(), p_shapes)
+    opt_shapes = jax.eval_shape(adamw_init, p_shapes)
+    opt_specs = type(opt_shapes)(mu=p_specs, nu=p_specs, count=P())
+    batch_shapes, batch_specs = _gnn_batch_specs(n, e, d_feat, mesh, equivariant, n_graphs)
+
+    if cfg.model in ("gcn", "gat"):
+        label_shape = jax.ShapeDtypeStruct((n,), jnp.int32)
+        label_spec = P(dp)
+    else:
+        label_shape = jax.ShapeDtypeStruct((n_graphs,), jnp.float32)
+        label_spec = P(dp) if n_graphs % max(int(np.prod([mesh.shape[a] for a in dp])), 1) == 0 and n_graphs > 1 else P(None)
+
+    # Sharding layout: node-axis sharding for small/aligned graphs; CHANNEL
+    # sharding for huge equivariant full-graph cells (edge gathers then index
+    # the replicated node axis — no per-layer node-table all-gathers).
+    huge = equivariant and n > (1 << 20)
+    node_spec = dp
+    chan_spec = "model" if huge else None
+
+    def train_step(params, opt_state, batch, labels):
+        loss, grads = jax.value_and_grad(G.loss_fn)(
+            params, run_cfg, batch, labels, node_spec, chan_spec
+        )
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        params, opt_state = adamw_update(grads, opt_state, params, 1e-3)
+        return params, opt_state, {"loss": loss, "gnorm": gnorm}
+
+    args = (p_shapes, opt_shapes, batch_shapes, label_shape)
+    in_sh = (
+        _shard(mesh, p_specs),
+        _shard(mesh, opt_specs),
+        _shard(mesh, batch_specs),
+        NamedSharding(mesh, label_spec),
+    )
+    return CellSpec(
+        arch, shape.name, train_step, args, in_sh, (0, 1),
+        3.0 * _gnn_flops(cfg, n, e, d_feat),
+        {"family": "gnn", "kind": shape.kind, "n_nodes": n, "n_edges": e},
+    )
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+
+def _recsys_param_structs(cfg: RecsysConfig, mesh):
+    p_shapes = jax.eval_shape(lambda: RS.init_params(jax.random.PRNGKey(0), cfg))
+    p_specs = RS.param_pspecs(cfg, dp=dp_axes(mesh))
+    return p_shapes, p_specs
+
+
+def _recsys_flops(cfg: RecsysConfig, batch: int) -> float:
+    d = cfg.embed_dim
+    lookups = batch * (cfg.n_user_fields + cfg.n_item_fields) * cfg.multi_hot_per_field * d
+    dims_u = [d * cfg.n_user_fields] + list(cfg.tower_mlp)
+    mlp = sum(2.0 * a * b for a, b in zip(dims_u[:-1], dims_u[1:])) * 2 * batch
+    return lookups + mlp
+
+
+def _build_recsys_cell(arch, cfg: RecsysConfig, shape: ShapeCell, mesh) -> CellSpec:
+    dp = dp_axes(mesh)
+    p_shapes, p_specs = _recsys_param_structs(cfg, mesh)
+    bag = cfg.multi_hot_per_field
+    kind = shape.kind
+    batch = shape.params["batch"]
+
+    def idx_args(b):
+        return (
+            jax.ShapeDtypeStruct((b, cfg.n_user_fields, bag), jnp.int32),
+            jax.ShapeDtypeStruct((b, cfg.n_item_fields, bag), jnp.int32),
+        )
+
+    if kind == "train":
+        opt_shapes = jax.eval_shape(adamw_init, p_shapes)
+        opt_specs = type(opt_shapes)(mu=p_specs, nu=p_specs, count=P())
+
+        def train_step(params, opt_state, user_idx, item_idx, log_q):
+            loss, grads = jax.value_and_grad(RS.loss_fn)(params, cfg, user_idx, item_idx, log_q)
+            grads, gnorm = clip_by_global_norm(grads, 1.0)
+            params, opt_state = adamw_update(grads, opt_state, params, 1e-3)
+            return params, opt_state, {"loss": loss, "gnorm": gnorm}
+
+        args = (p_shapes, opt_shapes, *idx_args(batch), jax.ShapeDtypeStruct((batch,), jnp.float32))
+        in_sh = (
+            _shard(mesh, p_specs),
+            _shard(mesh, opt_specs),
+            NamedSharding(mesh, P(dp, None, None)),
+            NamedSharding(mesh, P(dp, None, None)),
+            NamedSharding(mesh, P(dp)),
+        )
+        flops = 3.0 * (_recsys_flops(cfg, batch) + 2.0 * batch * batch * cfg.tower_mlp[-1])
+        return CellSpec(arch, shape.name, train_step, args, in_sh, (0, 1), flops,
+                        {"family": "recsys", "kind": kind, "batch": batch})
+
+    if kind == "serve":
+        # bulk scoring: chunk the batch (lax.map) so the per-field gathered
+        # (b, bag, d) embeddings never exceed ~1 GB concurrently
+        chunk = 16384
+
+        def serve(params, user_idx, item_idx):
+            b = user_idx.shape[0]
+            if b <= chunk or b % chunk:
+                return RS.serve_scores(params, cfg, user_idx, item_idx)
+            u_c = user_idx.reshape(b // chunk, chunk, *user_idx.shape[1:])
+            i_c = item_idx.reshape(b // chunk, chunk, *item_idx.shape[1:])
+            out = jax.lax.map(lambda ui: RS.serve_scores(params, cfg, ui[0], ui[1]), (u_c, i_c))
+            return out.reshape(b)
+
+        args = (p_shapes, *idx_args(batch))
+        in_sh = (
+            _shard(mesh, p_specs),
+            NamedSharding(mesh, P(dp, None, None)),
+            NamedSharding(mesh, P(dp, None, None)),
+        )
+        return CellSpec(arch, shape.name, serve, args, in_sh, (), _recsys_flops(cfg, batch),
+                        {"family": "recsys", "kind": kind, "batch": batch})
+
+    # retrieval: one query against n_candidates precomputed item vectors
+    n_cand = shape.params["n_candidates"]
+    d_out = cfg.tower_mlp[-1]
+
+    def retrieve(params, user_idx, candidates):
+        scores = RS.retrieval_scores(params, cfg, user_idx, candidates)
+        return RS.retrieval_topk(scores, 100)
+
+    args = (
+        p_shapes,
+        jax.ShapeDtypeStruct((1, cfg.n_user_fields, bag), jnp.int32),
+        jax.ShapeDtypeStruct((n_cand, d_out), jnp.float32),
+    )
+    in_sh = (
+        _shard(mesh, p_specs),
+        NamedSharding(mesh, P(None, None, None)),
+        NamedSharding(mesh, P("model", None)),
+    )
+    flops = 2.0 * n_cand * d_out + _recsys_flops(cfg, 1)
+    return CellSpec(arch, shape.name, retrieve, args, in_sh, (), flops,
+                    {"family": "recsys", "kind": kind, "n_candidates": n_cand})
+
+
+# ---------------------------------------------------------------------------
+# SubGraph2Vec (paper) cells
+# ---------------------------------------------------------------------------
+
+
+def _subgraph_flops(plan, n: int, e_directed: int) -> float:
+    """SpMM: 2*E*C_p per stage; eMA: 3*n*C_out*splits per stage."""
+    from repro.core.colorsets import binom
+
+    total = 0.0
+    for sub, table in zip(plan.partition.subs, plan.tables):
+        if table is None:
+            continue
+        c_p = binom(plan.k, table.m_p)
+        total += 2.0 * e_directed * c_p
+        total += 3.0 * n * table.n_out * table.n_splits
+    return total
+
+
+def _build_subgraph_cell(arch, cfg, shape: ShapeCell, mesh, probe: bool = False) -> CellSpec:
+    from repro.core import build_counting_plan, random_tree_template
+    from repro.core.distributed import (
+        distributed_input_specs,
+        make_distributed_count_fn,
+        plan_table_specs,
+    )
+    from repro.core.templates import PAPER_TEMPLATES
+
+    k = shape.params["k"]
+    tname = {12: "u12", 14: "u14", 17: "u17", 20: "u20"}.get(k)
+    template = PAPER_TEMPLATES[tname] if tname else random_tree_template(k, seed=k)
+    plan = build_counting_plan(template)
+
+    n_shards = int(np.prod(list(mesh.shape.values())))
+    n = shape.params["n_vertices"]
+    n_padded = _pad_to(n, n_shards)
+    e_directed = 2 * shape.params["n_edges"]
+    edges_per_shard = _pad_to(int(e_directed / n_shards * 1.2), 8)
+
+    # k >= 18: ship the streamed-eMA schedule (EXPERIMENTS.md §Perf paper
+    # core iteration 1) — the batched-B baseline exceeds single-pod HBM at
+    # u20 (19.7 GB/device; see results/perf/subgraph_u20.json)
+    streamed = (k >= 18) and not probe
+    fn = make_distributed_count_fn(
+        plan, mesh, n_padded, edges_per_shard,
+        column_batch=None if probe else 128,
+        ema_mode="vectorized" if probe else ("streamed" if streamed else "loop"),
+    )
+    specs = distributed_input_specs(n_padded, n_shards, edges_per_shard)
+    if streamed:
+        from repro.core.distributed import build_streamed_tables
+
+        tbl = build_streamed_tables(plan, 128)
+        t_specs = {
+            kk: tuple(jax.ShapeDtypeStruct(a.shape, a.dtype) for a in v)
+            for kk, v in tbl.items()
+        }
+    else:
+        t_specs = plan_table_specs(plan)
+    every = tuple(mesh.axis_names)
+    in_sh = (
+        NamedSharding(mesh, P(every)),
+        NamedSharding(mesh, P(every)),
+        NamedSharding(mesh, P(every)),
+        NamedSharding(mesh, P(every)),
+        jax.tree.map(
+            lambda x: NamedSharding(mesh, P(None, None)),
+            t_specs,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+        ),
+    )
+    return CellSpec(
+        arch, shape.name, fn, (*specs, t_specs), in_sh, (),
+        _subgraph_flops(plan, n_padded, e_directed),
+        {"family": "subgraph", "kind": "count", "k": k, "n": n, "edges": e_directed},
+    )
+
+
+# ---------------------------------------------------------------------------
+
+
+def build_cell(
+    arch: str,
+    shape: ShapeCell,
+    mesh: Mesh,
+    cfg_override=None,
+    subgraph_probe: bool = False,
+) -> CellSpec:
+    family, module = get_arch(arch)
+    cfg = cfg_override if cfg_override is not None else module.CONFIG
+    if family == "lm":
+        return _build_lm_cell(arch, cfg, shape, mesh, probe_n_micro_one=(cfg_override is not None))
+    if family == "gnn":
+        return _build_gnn_cell(arch, cfg, shape, mesh)
+    if family == "recsys":
+        return _build_recsys_cell(arch, cfg, shape, mesh)
+    if family == "subgraph":
+        return _build_subgraph_cell(arch, cfg, shape, mesh, probe=subgraph_probe)
+    raise ValueError(f"unknown family {family}")

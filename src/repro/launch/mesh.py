@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before the first
+jax call.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+__all__ = ["make_production_mesh", "dp_axes", "all_axes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16, 16) data x model single pod (256 chips) or (2, 16, 16)
+    pod x data x model for the 2-pod, 512-chip configuration."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    """Batch-like axes: ("pod", "data") on the multi-pod mesh."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def all_axes(mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)

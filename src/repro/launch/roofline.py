@@ -1,0 +1,177 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), in seconds (v5e constants):
+
+    compute    = HLO_FLOPs / (chips * 197e12)           [bf16 peak]
+    memory     = HLO_bytes / (chips * 819e9)            [HBM bw]
+    collective = collective_bytes / (chips * 50e9)      [per-link ICI]
+
+``cost_analysis()`` reports *per-device* flops/bytes post-partitioning, so
+chips==1 in the denominators here (we keep the constants explicit for
+clarity).  Collective bytes are parsed from the optimized HLO: every
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute
+operand, costed with ring-algorithm wire volume per device:
+
+    all-reduce:      2 * (G-1)/G * bytes
+    all-gather:          (G-1)/G * bytes   (of the gathered output)
+    reduce-scatter:      (G-1)/G * bytes   (of the input)
+    all-to-all:          (G-1)/G * bytes
+    collective-permute:  bytes
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["PEAK_FLOPS", "HBM_BW", "ICI_BW", "RooflineReport", "analyze_compiled"]
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9       # bytes/s / chip
+ICI_BW = 50e9        # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"(?P<shape>[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_GROUP_RE = re.compile(r"replica_groups=\[(?P<ng>\d+),(?P<gs>\d+)\]")
+_GROUP_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _tensor_bytes(shape_str: str) -> int:
+    """Total bytes of a possibly-tuple HLO shape string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    hlo_flops: float            # per device
+    hlo_bytes: float            # per device
+    collective_bytes: float     # wire bytes per device (ring-costed)
+    collective_counts: Dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float          # analytic useful flops (global)
+    useful_flops_ratio: float   # model_flops / (hlo_flops * n_devices)
+    per_device_memory_bytes: Optional[float] = None
+    argument_bytes: Optional[float] = None
+    meta: Dict = field(default_factory=dict)
+
+    def to_json(self) -> Dict:
+        return asdict(self)
+
+
+def collective_wire_bytes(hlo_text: str) -> Tuple[float, Dict[str, int]]:
+    """Sum ring-costed per-device wire bytes over every collective op."""
+    total = 0.0
+    counts: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        nbytes = _tensor_bytes(m.group("shape"))
+        g = 1
+        mg = _GROUP_RE.search(line)
+        if mg:
+            g = int(mg.group("gs"))
+        else:
+            ml = _GROUP_LIST_RE.search(line)
+            if ml:
+                g = len(ml.group(1).split(","))
+        if g <= 1 and op != "collective-permute":
+            continue
+        frac = (g - 1) / g if g > 1 else 1.0
+        if op == "all-reduce":
+            total += 2.0 * frac * nbytes
+        elif op in ("all-gather", "reduce-scatter", "all-to-all"):
+            total += frac * nbytes
+        else:  # collective-permute
+            total += nbytes
+        counts[op] = counts.get(op, 0) + 1
+    return total, counts
+
+
+def analyze_compiled(
+    compiled,
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    n_devices: int,
+    model_flops: float,
+    meta: Optional[Dict] = None,
+) -> RooflineReport:
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    bytes_accessed = float(ca.get("bytes accessed", 0.0))
+    txt = compiled.as_text()
+    coll_bytes, coll_counts = collective_wire_bytes(txt)
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = coll_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+
+    mem_stats = None
+    arg_bytes = None
+    try:
+        ms = compiled.memory_analysis()
+        if ms is not None:
+            # resident = arguments + temps + non-aliased outputs (donated
+            # outputs alias their argument buffers — no double count)
+            mem_stats = float(
+                ms.argument_size_in_bytes
+                + ms.temp_size_in_bytes
+                + max(ms.output_size_in_bytes - ms.alias_size_in_bytes, 0)
+            )
+            arg_bytes = float(ms.argument_size_in_bytes)
+    except Exception:
+        pass
+
+    denom = flops * n_devices
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        n_devices=n_devices,
+        hlo_flops=flops,
+        hlo_bytes=bytes_accessed,
+        collective_bytes=coll_bytes,
+        collective_counts=coll_counts,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops=model_flops,
+        useful_flops_ratio=(model_flops / denom) if denom else 0.0,
+        per_device_memory_bytes=mem_stats,
+        argument_bytes=arg_bytes,
+        meta=meta or {},
+    )

@@ -1,0 +1,162 @@
+"""E(3)-equivariant building blocks in Cartesian form (l <= 2).
+
+Irreps are represented as Cartesian tensors — mathematically equivalent to
+real spherical-harmonic irreps for l <= 2 and far more TPU-friendly (all
+ops are einsums, no Wigner machinery):
+
+* l=0 scalars:  ``(n, c0)``
+* l=1 vectors:  ``(n, c1, 3)``         — transform as ``R v``
+* l=2 tensors:  ``(n, c2, 3, 3)``      — symmetric traceless, ``R T R^T``
+
+Tensor-product contractions (the Clebsch-Gordan paths of NequIP/MACE) become
+dot / cross / outer products; equivariance is verified numerically in tests
+by conjugating with random rotations.  See DESIGN.md §4 (hardware-adaptation
+note: the O(L^6) CG contraction collapses to dense einsums at L=2).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Irreps",
+    "spherical_l1",
+    "spherical_l2",
+    "bessel_basis",
+    "cutoff_envelope",
+    "tp_paths_order2",
+    "linear_mix",
+    "gate",
+]
+
+
+class Irreps(NamedTuple):
+    """A bundle of l=0,1,2 feature channels."""
+
+    s: jnp.ndarray  # (n, c0)
+    v: jnp.ndarray  # (n, c1, 3)
+    t: jnp.ndarray  # (n, c2, 3, 3) symmetric traceless
+
+    def rotate(self, r: jnp.ndarray) -> "Irreps":
+        """Apply a global rotation (test utility)."""
+        return Irreps(
+            s=self.s,
+            v=jnp.einsum("ij,ncj->nci", r, self.v),
+            t=jnp.einsum("ij,ncjk,lk->ncil", r, self.t, r),
+        )
+
+
+def spherical_l1(unit: jnp.ndarray) -> jnp.ndarray:
+    """Y1 = r_hat; (e, 3)."""
+    return unit
+
+
+def spherical_l2(unit: jnp.ndarray) -> jnp.ndarray:
+    """Y2 = r_hat r_hat^T - I/3 (symmetric traceless); (e, 3, 3)."""
+    eye = jnp.eye(3, dtype=unit.dtype)
+    return unit[:, :, None] * unit[:, None, :] - eye / 3.0
+
+
+def bessel_basis(r: jnp.ndarray, n_rbf: int, cutoff: float) -> jnp.ndarray:
+    """NequIP radial basis: sin(n pi r / r_c) / r, n = 1..n_rbf; (e, n_rbf)."""
+    n = jnp.arange(1, n_rbf + 1, dtype=r.dtype)
+    rs = jnp.maximum(r, 1e-9)[:, None]
+    return jnp.sqrt(2.0 / cutoff) * jnp.sin(n * np.pi * rs / cutoff) / rs
+
+
+def cutoff_envelope(r: jnp.ndarray, cutoff: float, p: int = 6) -> jnp.ndarray:
+    """Polynomial cutoff (smooth to p-th order) — zero outside the cutoff."""
+    x = jnp.clip(r / cutoff, 0.0, 1.0)
+    out = (
+        1.0
+        - ((p + 1.0) * (p + 2.0) / 2.0) * x**p
+        + p * (p + 2.0) * x ** (p + 1)
+        - (p * (p + 1.0) / 2.0) * x ** (p + 2)
+    )
+    return jnp.where(r < cutoff, out, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Tensor-product contraction paths (order 2): all CG-allowed combinations of
+# two irreps (a from set A, b from set B) into l=0/1/2 outputs.
+# ---------------------------------------------------------------------------
+
+
+def _sym_traceless(m: jnp.ndarray) -> jnp.ndarray:
+    sym = 0.5 * (m + jnp.swapaxes(m, -1, -2))
+    tr = jnp.trace(sym, axis1=-2, axis2=-1)[..., None, None]
+    return sym - tr * jnp.eye(3, dtype=m.dtype) / 3.0
+
+
+def tp_paths_order2(a: Irreps, b: Irreps) -> Irreps:
+    """Channel-aligned tensor product a (x) b -> irreps.
+
+    Channels are contracted elementwise (requires equal channel counts — the
+    "uvu" mode of e3nn); outputs concatenate every allowed path per l.
+    """
+    # --- l = 0 outputs ---
+    s_parts = [
+        a.s * b.s,                                        # 0x0 -> 0
+        jnp.einsum("nci,nci->nc", a.v, b.v),              # 1x1 -> 0
+        jnp.einsum("ncij,ncij->nc", a.t, b.t),            # 2x2 -> 0
+    ]
+    # --- l = 1 outputs ---
+    v_parts = [
+        a.s[..., None] * b.v,                             # 0x1 -> 1
+        b.s[..., None] * a.v,                             # 1x0 -> 1
+        jnp.cross(a.v, b.v),                              # 1x1 -> 1
+        jnp.einsum("ncij,ncj->nci", a.t, b.v),            # 2x1 -> 1
+        jnp.einsum("ncij,ncj->nci", b.t, a.v),            # 1x2 -> 1
+    ]
+    # --- l = 2 outputs ---
+    t_parts = [
+        a.s[..., None, None] * b.t,                       # 0x2 -> 2
+        b.s[..., None, None] * a.t,                       # 2x0 -> 2
+        _sym_traceless(a.v[..., :, None] * b.v[..., None, :]),  # 1x1 -> 2
+        _sym_traceless(jnp.einsum("ncik,nckj->ncij", a.t, b.t)),  # 2x2 -> 2
+    ]
+    return Irreps(
+        s=jnp.concatenate(s_parts, axis=-1),
+        v=jnp.concatenate(v_parts, axis=-2),
+        t=jnp.concatenate(t_parts, axis=-3),
+    )
+
+
+def linear_mix(params: Dict[str, jnp.ndarray], x: Irreps) -> Irreps:
+    """Per-l channel mixing (the equivariant 'self-interaction' linear)."""
+    return Irreps(
+        s=jnp.einsum("nc,cd->nd", x.s, params["w_s"]),
+        v=jnp.einsum("nci,cd->ndi", x.v, params["w_v"]),
+        t=jnp.einsum("ncij,cd->ndij", x.t, params["w_t"]),
+    )
+
+
+def init_linear_mix(key, c_in: Tuple[int, int, int], c_out: Tuple[int, int, int]) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+
+    def w(k, ci, co):
+        return jax.random.normal(k, (ci, co), jnp.float32) / np.sqrt(max(ci, 1))
+
+    return {"w_s": w(k1, c_in[0], c_out[0]), "w_v": w(k2, c_in[1], c_out[1]), "w_t": w(k3, c_in[2], c_out[2])}
+
+
+def gate(x: Irreps) -> Irreps:
+    """Equivariant gate (NequIP): the trailing ``c1 + c2`` scalar channels are
+    consumed as sigmoid gates for the vector / tensor channels; the leading
+    channels pass through silu.  The pre-gate linear must therefore emit
+    ``feat + c1 + c2`` scalars."""
+    c1, c2 = x.v.shape[1], x.t.shape[1]
+    feat = x.s.shape[1] - c1 - c2
+    if feat <= 0:
+        raise ValueError(f"gate needs {c1 + c2} gate scalars on top of features; got s width {x.s.shape[1]}")
+    gates_v = jax.nn.sigmoid(x.s[:, feat : feat + c1])
+    gates_t = jax.nn.sigmoid(x.s[:, feat + c1 :])
+    return Irreps(
+        s=jax.nn.silu(x.s[:, :feat]),
+        v=x.v * gates_v[..., None],
+        t=x.t * gates_t[..., None, None],
+    )

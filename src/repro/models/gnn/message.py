@@ -1,0 +1,112 @@
+"""Message-passing primitives: segment reductions over an edge index.
+
+JAX has no native sparse message passing (BCOO only) — per the assignment,
+scatter/gather aggregation is built from ``jax.ops.segment_sum`` /
+``segment_max`` and IS part of the system.  These primitives are shared with
+the paper core: ``aggregate_sum`` over an edge list is exactly the SpMM
+``B = A_G @ M`` of SUBGRAPH2VEC (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "GraphBatch",
+    "aggregate_sum",
+    "aggregate_mean",
+    "aggregate_max",
+    "edge_softmax",
+    "degree",
+    "sym_norm_coeffs",
+]
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class GraphBatch:
+    """Padded device-ready graph batch.
+
+    ``src``/``dst`` are edge endpoints (messages flow src -> dst); invalid
+    (padding) edges carry ``edge_mask == 0`` and point at node 0.  Batched
+    small graphs (molecule cells) are block-diagonal with ``graph_id`` used
+    for per-graph readout.
+    """
+
+    node_feat: jnp.ndarray          # (n, d) float
+    positions: Optional[jnp.ndarray]  # (n, 3) or None
+    src: jnp.ndarray                # (e,) int32
+    dst: jnp.ndarray                # (e,) int32
+    edge_mask: jnp.ndarray          # (e,) float32
+    node_mask: jnp.ndarray          # (n,) float32
+    graph_id: Optional[jnp.ndarray] = None  # (n,) int32 for batched graphs
+    n_graphs: int = dataclasses.field(default=1, metadata=dict(static=True))
+
+    @property
+    def n_nodes(self) -> int:
+        return self.node_feat.shape[0]
+
+    @property
+    def n_edges(self) -> int:
+        return self.src.shape[0]
+
+
+def aggregate_sum(messages: jnp.ndarray, dst: jnp.ndarray, n: int, edge_mask=None) -> jnp.ndarray:
+    if edge_mask is not None:
+        shape = (-1,) + (1,) * (messages.ndim - 1)
+        messages = messages * edge_mask.reshape(shape).astype(messages.dtype)
+    return jax.ops.segment_sum(messages, dst, num_segments=n)
+
+
+def aggregate_mean(messages: jnp.ndarray, dst: jnp.ndarray, n: int, edge_mask=None) -> jnp.ndarray:
+    total = aggregate_sum(messages, dst, n, edge_mask)
+    ones = jnp.ones((messages.shape[0],), messages.dtype) if edge_mask is None else edge_mask.astype(messages.dtype)
+    deg = jax.ops.segment_sum(ones, dst, num_segments=n)
+    shape = (-1,) + (1,) * (messages.ndim - 1)
+    return total / jnp.maximum(deg, 1.0).reshape(shape)
+
+
+def aggregate_max(messages: jnp.ndarray, dst: jnp.ndarray, n: int, edge_mask=None) -> jnp.ndarray:
+    if edge_mask is not None:
+        shape = (-1,) + (1,) * (messages.ndim - 1)
+        messages = jnp.where(edge_mask.reshape(shape) > 0, messages, -jnp.inf)
+    out = jax.ops.segment_max(messages, dst, num_segments=n)
+    return jnp.where(jnp.isfinite(out), out, 0.0)
+
+
+def edge_softmax(logits: jnp.ndarray, dst: jnp.ndarray, n: int, edge_mask=None) -> jnp.ndarray:
+    """Numerically-stable softmax over incoming edges of each dst node.
+
+    logits: (e, ...) — per-edge scores; returns same-shape weights summing to
+    one per destination (the GAT attention normalizer).
+    """
+    if edge_mask is not None:
+        shape = (-1,) + (1,) * (logits.ndim - 1)
+        logits = jnp.where(edge_mask.reshape(shape) > 0, logits, -1e30)
+    seg_max = jax.ops.segment_max(logits, dst, num_segments=n)
+    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    shifted = jnp.exp(logits - seg_max[dst])
+    if edge_mask is not None:
+        shape = (-1,) + (1,) * (logits.ndim - 1)
+        shifted = shifted * edge_mask.reshape(shape)
+    denom = jax.ops.segment_sum(shifted, dst, num_segments=n)
+    return shifted / jnp.maximum(denom[dst], 1e-16)
+
+
+def degree(dst: jnp.ndarray, n: int, edge_mask=None) -> jnp.ndarray:
+    ones = jnp.ones_like(dst, jnp.float32) if edge_mask is None else edge_mask.astype(jnp.float32)
+    return jax.ops.segment_sum(ones, dst, num_segments=n)
+
+
+def sym_norm_coeffs(src, dst, n, edge_mask=None) -> jnp.ndarray:
+    """GCN symmetric normalization ``1/sqrt(d_i d_j)`` per edge (self-loops
+    are the caller's responsibility)."""
+    deg = degree(dst, n, edge_mask)
+    inv_sqrt = 1.0 / jnp.sqrt(jnp.maximum(deg, 1.0))
+    return inv_sqrt[src] * inv_sqrt[dst]

@@ -1,0 +1,293 @@
+"""NequIP (arXiv:2101.03164) and MACE (arXiv:2206.07697) interatomic
+potentials on the Cartesian l<=2 irrep stack.
+
+Both follow the published architecture shape:
+
+* **NequIP**: ``n_layers`` interaction blocks.  Each block builds edge
+  messages as (radial-MLP-weighted) tensor products of neighbor features with
+  the edge spherical harmonics, segment-sums them, then applies an
+  equivariant linear + gate.  Energy readout from final scalars.
+* **MACE**: 2 layers; each builds the one-particle basis ``A_i`` (same
+  message as NequIP), then the higher-order ACE basis ``B_i`` via repeated
+  tensor products of ``A_i`` with itself up to ``correlation_order`` (=3),
+  linearly mixed — message passing is cheap, the power is in the product
+  basis.  Per-layer energy readouts are summed.
+
+Inputs are ``GraphBatch`` with ``positions``; node features seed the l=0
+channels.  Predicts per-graph energy (and forces via ``jax.grad`` w.r.t.
+positions in the training substrate).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GNNConfig
+from .equivariant import (
+    Irreps,
+    bessel_basis,
+    cutoff_envelope,
+    gate,
+    init_linear_mix,
+    linear_mix,
+    spherical_l1,
+    spherical_l2,
+    tp_paths_order2,
+)
+from .message import GraphBatch, aggregate_sum
+
+__all__ = ["init_nequip", "nequip_forward", "init_mace", "mace_forward"]
+
+
+def _wsc_irreps(x: Irreps, node_spec, chan_spec=None) -> Irreps:
+    """Pin node irreps under pjit.  Two layouts:
+
+    * ``node_spec`` (tuple of mesh axes): shard the node axis — right when
+      per-node state dominates and edges align with nodes.
+    * ``chan_spec`` (mesh axis name): shard the CHANNEL axis instead — right
+      for huge graphs where edge gathers index arbitrary nodes: gathers hit
+      the replicated node axis (collective-free) and every tensor-product
+      path is channel-local (DESIGN.md §5 / EXPERIMENTS.md §Perf cell 3).
+    """
+    if node_spec is None and chan_spec is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    def c(v):
+        spec = (node_spec, chan_spec) + (None,) * (v.ndim - 2)
+        return jax.lax.with_sharding_constraint(v, P(*spec))
+
+    return Irreps(s=c(x.s), v=c(x.v), t=c(x.t))
+
+
+def _mlp_init(key, dims):
+    keys = jax.random.split(key, len(dims) - 1)
+    return [
+        {
+            "w": jax.random.normal(k, (dims[i], dims[i + 1]), jnp.float32) / np.sqrt(dims[i]),
+            "b": jnp.zeros((dims[i + 1],)),
+        }
+        for i, k in enumerate(keys)
+    ]
+
+
+def _mlp_apply(layers, x):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i < len(layers) - 1:
+            x = jax.nn.silu(x)
+    return x
+
+
+def _edge_geometry(batch: GraphBatch, cfg: GNNConfig):
+    rel = batch.positions[batch.dst] - batch.positions[batch.src]  # (e, 3)
+    r = jnp.sqrt(jnp.sum(rel * rel, axis=-1) + 1e-18)
+    unit = rel / r[:, None]
+    rbf = bessel_basis(r, cfg.n_rbf, cfg.cutoff)
+    env = cutoff_envelope(r, cfg.cutoff) * batch.edge_mask
+    return unit, rbf * env[:, None], env
+
+
+def _edge_messages(params, cfg: GNNConfig, feats: Irreps, positions, src, dst, edge_mask):
+    """Per-edge tensor-product messages for one edge (chunk)."""
+    rel = positions[dst] - positions[src]
+    r = jnp.sqrt(jnp.sum(rel * rel, axis=-1) + 1e-18)
+    unit = rel / r[:, None]
+    rbf = bessel_basis(r, cfg.n_rbf, cfg.cutoff)
+    env = cutoff_envelope(r, cfg.cutoff) * edge_mask
+    rbf = rbf * env[:, None]
+    y1 = spherical_l1(unit)
+    y2 = spherical_l2(unit)
+    rw = _mlp_apply(params["radial"], rbf)  # (e, 3*c)
+    w0, w1, w2 = jnp.split(rw, 3, axis=-1)
+    h_src = Irreps(s=feats.s[src], v=feats.v[src], t=feats.t[src])
+    edge = Irreps(
+        s=w0,
+        v=w1[..., None] * y1[:, None, :],
+        t=w2[..., None, None] * y2[:, None, :, :],
+    )
+    return tp_paths_order2(h_src, edge)
+
+
+def _message_block(params, cfg: GNNConfig, batch: GraphBatch, feats: Irreps, node_spec=None, chan_spec=None) -> Irreps:
+    """One-particle basis: A_i = sum_j R(r_ij) * (Y(r_ij) (x) h_j).
+
+    With ``cfg.edge_chunk > 0`` the per-edge message tensors are built and
+    reduced one chunk at a time under ``lax.scan`` — peak edge-message memory
+    becomes O(edge_chunk * channels) instead of O(n_edges * channels), which
+    is what makes the 61M-edge full-graph cells fit HBM.
+    """
+    n = batch.n_nodes
+    e_total = batch.n_edges
+    chunk = cfg.edge_chunk
+    if chunk <= 0 or e_total <= chunk or e_total % chunk != 0:
+        msg = _edge_messages(params, cfg, feats, batch.positions, batch.src, batch.dst, batch.edge_mask)
+        return Irreps(
+            s=aggregate_sum(msg.s, batch.dst, n, batch.edge_mask),
+            v=aggregate_sum(msg.v, batch.dst, n, batch.edge_mask),
+            t=aggregate_sum(msg.t, batch.dst, n, batch.edge_mask),
+        )
+
+    n_chunks = e_total // chunk
+    src_c = batch.src.reshape(n_chunks, chunk)
+    dst_c = batch.dst.reshape(n_chunks, chunk)
+    mask_c = batch.edge_mask.reshape(n_chunks, chunk)
+    c = feats.v.shape[1]
+    init = _wsc_irreps(
+        Irreps(
+            s=jnp.zeros((n, 3 * c), jnp.float32),
+            v=jnp.zeros((n, 5 * c, 3), jnp.float32),
+            t=jnp.zeros((n, 4 * c, 3, 3), jnp.float32),
+        ),
+        node_spec,
+        chan_spec,
+    )
+
+    # remat the chunk body: without it the scan saves every chunk's edge
+    # messages for backward (29 x ~3.5 GB/device at ogb scale); with it the
+    # messages are recomputed during the backward sweep.
+    @jax.checkpoint
+    def chunk_update(acc, src_i, dst_i, mask_i):
+        msg = _edge_messages(params, cfg, feats, batch.positions, src_i, dst_i, mask_i)
+        # constrain INSIDE the scan: the carry (the accumulated node irreps)
+        # otherwise replicates per device (100+ GB on the 2.4M-node cells)
+        return _wsc_irreps(
+            Irreps(
+                s=acc.s + aggregate_sum(msg.s, dst_i, n, mask_i),
+                v=acc.v + aggregate_sum(msg.v, dst_i, n, mask_i),
+                t=acc.t + aggregate_sum(msg.t, dst_i, n, mask_i),
+            ),
+            node_spec,
+            chan_spec,
+        )
+
+    def body(acc, inp):
+        src_i, dst_i, mask_i = inp
+        return chunk_update(acc, src_i, dst_i, mask_i), None
+
+    agg, _ = jax.lax.scan(body, init, (src_c, dst_c, mask_c))
+    return agg
+
+
+def _tp_out_channels(c: int) -> Tuple[int, int, int]:
+    """Channel counts produced by tp_paths_order2 on equal-width inputs."""
+    return (3 * c, 5 * c, 4 * c)
+
+
+# ---------------------------------------------------------------------------
+# NequIP
+# ---------------------------------------------------------------------------
+
+
+def init_nequip(key, cfg: GNNConfig, d_in: int) -> Dict:
+    c = cfg.d_hidden
+    keys = jax.random.split(key, cfg.n_layers * 3 + 2)
+    params: Dict = {
+        "embed": _mlp_init(keys[0], [d_in, c]),
+        "blocks": [],
+        "readout": _mlp_init(keys[1], [c, c, 1]),
+    }
+    for i in range(cfg.n_layers):
+        kb = keys[2 + i * 3 : 2 + i * 3 + 3]
+        block = {
+            "radial": _mlp_init(kb[0], [cfg.n_rbf, c, 3 * c]),
+            # scalar output width 3c: c features + c vector gates + c tensor gates
+            "mix": init_linear_mix(kb[1], _tp_out_channels(c), (3 * c, c, c)),
+            "self": init_linear_mix(kb[2], (c, c, c), (3 * c, c, c)),
+        }
+        params["blocks"].append(block)
+    return params
+
+
+def nequip_forward(params: Dict, cfg: GNNConfig, batch: GraphBatch, node_spec=None, chan_spec=None) -> jnp.ndarray:
+    """Per-graph energies (n_graphs,)."""
+    n, c = batch.n_nodes, cfg.d_hidden
+    feats = Irreps(
+        s=_mlp_apply(params["embed"], batch.node_feat),
+        v=jnp.zeros((n, c, 3), jnp.float32),
+        t=jnp.zeros((n, c, 3, 3), jnp.float32),
+    )
+    feats = _wsc_irreps(feats, node_spec, chan_spec)
+    for block in params["blocks"]:
+        agg = _wsc_irreps(
+            _message_block(block, cfg, batch, feats, node_spec, chan_spec), node_spec, chan_spec
+        )
+        mixed = linear_mix(block["mix"], agg)
+        res = linear_mix(block["self"], feats)
+        feats = _wsc_irreps(
+            gate(Irreps(s=mixed.s + res.s, v=mixed.v + res.v, t=mixed.t + res.t)),
+            node_spec,
+            chan_spec,
+        )
+    node_e = _mlp_apply(params["readout"], feats.s)[:, 0] * batch.node_mask
+    gid = batch.graph_id if batch.graph_id is not None else jnp.zeros((n,), jnp.int32)
+    return jax.ops.segment_sum(node_e, gid, num_segments=batch.n_graphs)
+
+
+# ---------------------------------------------------------------------------
+# MACE
+# ---------------------------------------------------------------------------
+
+
+def init_mace(key, cfg: GNNConfig, d_in: int) -> Dict:
+    c = cfg.d_hidden
+    n_keys = cfg.n_layers * 5 + 2
+    keys = jax.random.split(key, n_keys)
+    params: Dict = {"embed": _mlp_init(keys[0], [d_in, c]), "blocks": []}
+    for i in range(cfg.n_layers):
+        kb = keys[1 + i * 5 : 1 + i * 5 + 5]
+        block = {
+            "radial": _mlp_init(kb[0], [cfg.n_rbf, c, 3 * c]),
+            "mix_a": init_linear_mix(kb[1], _tp_out_channels(c), (c, c, c)),
+            # symmetric contractions: A^2 and A^3 mixed back to width c
+            "mix_b2": init_linear_mix(kb[2], _tp_out_channels(c), (c, c, c)),
+            "mix_b3": init_linear_mix(kb[3], _tp_out_channels(c), (c, c, c)),
+            # scalar width 3c for the gate (c features + c + c gates)
+            "update": init_linear_mix(kb[4], (3 * c, 3 * c, 3 * c), (3 * c, c, c)),
+            "readout": _mlp_init(jax.random.fold_in(kb[4], 7), [c, 1]),
+        }
+        params["blocks"].append(block)
+    return params
+
+
+def mace_forward(params: Dict, cfg: GNNConfig, batch: GraphBatch, node_spec=None, chan_spec=None) -> jnp.ndarray:
+    """Per-graph energies; higher-order ACE basis up to correlation order."""
+    n, c = batch.n_nodes, cfg.d_hidden
+    feats = Irreps(
+        s=_mlp_apply(params["embed"], batch.node_feat),
+        v=jnp.zeros((n, c, 3), jnp.float32),
+        t=jnp.zeros((n, c, 3, 3), jnp.float32),
+    )
+    energy = None
+    feats = _wsc_irreps(feats, node_spec, chan_spec)
+    for block in params["blocks"]:
+        a = linear_mix(
+            block["mix_a"],
+            _wsc_irreps(_message_block(block, cfg, batch, feats, node_spec, chan_spec), node_spec, chan_spec),
+        )
+        a = _wsc_irreps(a, node_spec, chan_spec)
+        # ACE product basis: B1 = A, B2 = mix(A (x) A), B3 = mix(B2 (x) A)
+        basis = [a]
+        if cfg.correlation_order >= 2:
+            b2 = linear_mix(block["mix_b2"], tp_paths_order2(a, a))
+            basis.append(b2)
+        if cfg.correlation_order >= 3:
+            b3 = linear_mix(block["mix_b3"], tp_paths_order2(basis[-1], a))
+            basis.append(b3)
+        while len(basis) < 3:
+            basis.append(basis[-1])
+        stacked = Irreps(
+            s=jnp.concatenate([b.s for b in basis], axis=-1),
+            v=jnp.concatenate([b.v for b in basis], axis=-2),
+            t=jnp.concatenate([b.t for b in basis], axis=-3),
+        )
+        feats = _wsc_irreps(gate(linear_mix(block["update"], stacked)), node_spec, chan_spec)
+        node_e = _mlp_apply(block["readout"], feats.s)[:, 0] * batch.node_mask
+        gid = batch.graph_id if batch.graph_id is not None else jnp.zeros((n,), jnp.int32)
+        e = jax.ops.segment_sum(node_e, gid, num_segments=batch.n_graphs)
+        energy = e if energy is None else energy + e
+    return energy

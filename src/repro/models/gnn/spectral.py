@@ -1,0 +1,117 @@
+"""GCN (Kipf & Welling 2017) and GAT (Velickovic et al. 2018).
+
+Both run on the shared segment-sum message-passing primitives — the same
+SpMM regime as the paper's counting kernel (kernel taxonomy §GNN:
+SpMM / SDDMM family).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GNNConfig
+from .message import GraphBatch, aggregate_sum, edge_softmax, sym_norm_coeffs
+
+__all__ = ["init_gcn", "gcn_forward", "init_gat", "gat_forward"]
+
+
+def _glorot(key, shape):
+    fan_in, fan_out = shape[0], shape[-1]
+    scale = np.sqrt(2.0 / (fan_in + fan_out))
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# GCN
+# ---------------------------------------------------------------------------
+
+
+def init_gcn(key, cfg: GNNConfig, d_in: int) -> Dict:
+    dims = [d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    keys = jax.random.split(key, cfg.n_layers)
+    return {
+        "layers": [
+            {"w": _glorot(keys[i], (dims[i], dims[i + 1])), "b": jnp.zeros((dims[i + 1],))}
+            for i in range(cfg.n_layers)
+        ]
+    }
+
+
+def _wsc_nodes(x, node_spec):
+    if node_spec is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    return jax.lax.with_sharding_constraint(x, P(node_spec, *([None] * (x.ndim - 1))))
+
+
+def gcn_forward(params: Dict, cfg: GNNConfig, batch: GraphBatch, node_spec=None) -> jnp.ndarray:
+    """Returns (n, n_classes) logits.  ``Ã X W`` with symmetric normalization
+    and implicit self-loops (added via the normalized self term)."""
+    h = batch.node_feat
+    n = batch.n_nodes
+    coef = sym_norm_coeffs(batch.src, batch.dst, n, batch.edge_mask)
+    deg_inv = 1.0 / jnp.maximum(
+        jax.ops.segment_sum(batch.edge_mask, batch.dst, num_segments=n) + 1.0, 1.0
+    )
+    for i, layer in enumerate(params["layers"]):
+        hw = h @ layer["w"]
+        msg = hw[batch.src] * coef[:, None]
+        agg = aggregate_sum(msg, batch.dst, n, batch.edge_mask)
+        # self-loop term of the renormalized adjacency
+        agg = agg + hw * deg_inv[:, None]
+        h = agg + layer["b"]
+        if i < cfg.n_layers - 1:
+            h = jax.nn.relu(h)
+        h = _wsc_nodes(h, node_spec)
+    return h * batch.node_mask[:, None]
+
+
+# ---------------------------------------------------------------------------
+# GAT
+# ---------------------------------------------------------------------------
+
+
+def init_gat(key, cfg: GNNConfig, d_in: int) -> Dict:
+    layers = []
+    d_prev = d_in
+    for i in range(cfg.n_layers):
+        k1, k2, k3, key = jax.random.split(key, 4)
+        last = i == cfg.n_layers - 1
+        heads = 1 if last else cfg.n_heads
+        d_out = cfg.n_classes if last else cfg.d_hidden
+        layers.append(
+            {
+                "w": _glorot(k1, (d_prev, heads, d_out)),
+                "a_src": _glorot(k2, (heads, d_out)),
+                "a_dst": _glorot(k3, (heads, d_out)),
+            }
+        )
+        d_prev = heads * d_out if not last else d_out
+    return {"layers": layers}
+
+
+def gat_forward(params: Dict, cfg: GNNConfig, batch: GraphBatch, node_spec=None) -> jnp.ndarray:
+    """SDDMM (edge scores) -> edge softmax -> SpMM, per head."""
+    h = batch.node_feat
+    n = batch.n_nodes
+    for i, layer in enumerate(params["layers"]):
+        last = i == len(params["layers"]) - 1
+        hw = jnp.einsum("nd,dhe->nhe", h, layer["w"])  # (n, heads, d_out)
+        # attention logits per edge (GATv1 split form)
+        alpha_src = jnp.einsum("nhe,he->nh", hw, layer["a_src"])
+        alpha_dst = jnp.einsum("nhe,he->nh", hw, layer["a_dst"])
+        logits = jax.nn.leaky_relu(alpha_src[batch.src] + alpha_dst[batch.dst], 0.2)
+        att = edge_softmax(logits, batch.dst, n, batch.edge_mask)  # (e, heads)
+        msg = hw[batch.src] * att[..., None]
+        agg = aggregate_sum(msg, batch.dst, n, batch.edge_mask)  # (n, heads, d_out)
+        if last:
+            h = agg.mean(axis=1)
+        else:
+            h = jax.nn.elu(agg).reshape(n, -1)
+        h = _wsc_nodes(h, node_spec)
+    return h * batch.node_mask[:, None]

@@ -1,0 +1,395 @@
+"""Decoder-only transformer LM covering all five assigned LM architectures.
+
+Supports: GQA / MQA (``n_kv_heads``), DeepSeek-V2 MLA, dense and MoE FFN
+(fine-grained + shared experts), SwiGLU / squared-ReLU / GELU, RoPE,
+per-layer activation checkpointing, KV-cache prefill/decode.
+
+**Layer stacking**: layers are stored stacked in homogeneous *groups*
+(e.g. DeepSeek's dense prefix + MoE body) and executed with ``jax.lax.scan``
+— one compiled layer body per group instead of ``n_layers`` HLO copies.
+This keeps 512-device lowering tractable and is the standard production
+pattern (MaxText-style).  ``cfg.scan_layers=False`` unrolls (smoke tests).
+
+Entry points:
+  * ``init_params(key, cfg)`` / ``param_shapes(cfg)`` (eval_shape, no alloc)
+  * ``forward(params, cfg, tokens)``            -> (logits, aux, caches)
+  * ``loss_fn(params, cfg, tokens, labels)``
+  * ``init_kv_cache(cfg, batch, max_len)`` / ``kv_cache_shapes``
+  * ``prefill`` / ``decode_step``
+  * ``param_pspecs(cfg)`` / ``kv_cache_pspecs(cfg)`` for pjit.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import LMConfig
+from repro.models import layers as L
+
+__all__ = [
+    "init_params",
+    "param_shapes",
+    "forward",
+    "loss_fn",
+    "init_kv_cache",
+    "prefill",
+    "decode_step",
+    "param_pspecs",
+    "kv_cache_pspecs",
+    "layer_groups",
+]
+
+Params = Dict
+
+
+def layer_groups(cfg: LMConfig) -> List[Tuple[int, bool]]:
+    """[(n_layers_in_group, is_moe_group)] — homogeneous scan groups."""
+    if cfg.moe and cfg.first_k_dense > 0:
+        return [(cfg.first_k_dense, False), (cfg.n_layers - cfg.first_k_dense, True)]
+    return [(cfg.n_layers, cfg.moe)]
+
+
+def _init_layer(key, cfg: LMConfig, moe: bool) -> Params:
+    k_attn, k_ffn = jax.random.split(key)
+    layer = {
+        "attn_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "ffn_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": L.init_attention(k_attn, cfg),
+    }
+    if moe:
+        layer["moe"] = L.init_moe(k_ffn, cfg)
+    else:
+        layer["ffn"] = L.init_ffn(k_ffn, cfg.d_model, cfg.d_ff, cfg.ffn_activation)
+    return layer
+
+
+def init_params(key: jax.Array, cfg: LMConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    groups = []
+    for g, (n, moe) in enumerate(layer_groups(cfg)):
+        layer_params = [
+            _init_layer(jax.random.fold_in(ks[0], g * 1000 + i), cfg, moe) for i in range(n)
+        ]
+        groups.append(jax.tree.map(lambda *xs: jnp.stack(xs), *layer_params))
+    params = {
+        "embed": jax.random.normal(ks[1], (cfg.vocab_size, cfg.d_model), jnp.float32) * 0.02,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "groups": groups,
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = (
+            jax.random.normal(ks[2], (cfg.d_model, cfg.vocab_size), jnp.float32)
+            / np.sqrt(cfg.d_model)
+        )
+    return params
+
+
+def param_shapes(cfg: LMConfig):
+    """ShapeDtypeStruct pytree without allocating (dry-run input specs)."""
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def _layer_apply(cfg: LMConfig, moe: bool, layer: Params, x, positions, cache, cache_index, act_spec=None):
+    h, new_cache = L.attention_apply(
+        layer["attn"], cfg, L.rmsnorm(x, layer["attn_norm"], cfg.norm_eps), positions, cache, cache_index
+    )
+    x = x + h
+    hn = L.rmsnorm(x, layer["ffn_norm"], cfg.norm_eps)
+    if moe:
+        h, aux = L.moe_apply(layer["moe"], cfg, hn, act_spec=act_spec)
+    else:
+        h, aux = L.ffn_apply(layer["ffn"], cfg.ffn_activation, hn), jnp.zeros((), jnp.float32)
+    return x + h, aux, new_cache
+
+
+def _constrain(x, spec):
+    """Residual-stream sharding constraint (None = let XLA choose).
+
+    Training/prefill cells pass ``P(dp, "model", None)`` — batch over the
+    data axes plus Megatron-style sequence parallelism over "model" — which
+    pins the scan carry (the per-layer saved activation under remat) to its
+    minimal footprint instead of letting the partitioner propagate weight
+    shardings onto it."""
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _run_group(cfg, moe, stacked, n, x, positions, cache, cache_index, act_spec=None):
+    """Scan (or unroll) one homogeneous group.  Returns (x, aux, new_cache)."""
+    if cfg.scan_layers and n > 1:
+
+        def body(carry, inp):
+            xc = carry
+            layer, cache_l = inp
+            fn = _layer_apply
+            if cfg.remat:
+                fn = jax.checkpoint(_layer_apply, static_argnums=(0, 1, 7))
+            xc, aux, new_cache_l = fn(cfg, moe, layer, xc, positions, cache_l, cache_index, act_spec)
+            xc = _constrain(xc, act_spec)
+            return xc, (aux, new_cache_l)
+
+        x, (auxs, new_cache) = jax.lax.scan(body, x, (stacked, cache))
+        return x, jnp.sum(auxs), new_cache
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_layers = []
+    for i in range(n):
+        layer = jax.tree.map(lambda p: p[i], stacked)
+        cache_l = None if cache is None else jax.tree.map(lambda c: c[i], cache)
+        fn = _layer_apply
+        if cfg.remat and cache is None:
+            fn = jax.checkpoint(_layer_apply, static_argnums=(0, 1, 7))
+        x, aux, new_cache_l = fn(cfg, moe, layer, x, positions, cache_l, cache_index, act_spec)
+        x = _constrain(x, act_spec)
+        aux_total = aux_total + aux
+        new_layers.append(new_cache_l)
+    new_cache = None
+    if cache is not None:
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *new_layers)
+    return x, aux_total, new_cache
+
+
+def forward(
+    params: Params,
+    cfg: LMConfig,
+    tokens: jnp.ndarray,  # (b, s) int32
+    caches: Optional[list] = None,
+    cache_index: Optional[jnp.ndarray] = None,
+    positions: Optional[jnp.ndarray] = None,
+    act_spec=None,
+    return_hidden: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[list]]:
+    """Returns (logits, aux_loss, new_caches); final hidden states instead of
+    logits when ``return_hidden`` (chunked-loss path)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = _constrain(params["embed"][tokens].astype(dtype), act_spec)
+    s = tokens.shape[1]
+    if positions is None:
+        positions = jnp.arange(s)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = [] if caches is not None else None
+    for g, (n, moe) in enumerate(layer_groups(cfg)):
+        cache_g = caches[g] if caches is not None else None
+        x, aux, new_cache_g = _run_group(
+            cfg, moe, params["groups"][g], n, x, positions, cache_g, cache_index,
+            act_spec=act_spec,
+        )
+        aux_total = aux_total + aux
+        if new_caches is not None:
+            new_caches.append(new_cache_g)
+
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x, aux_total, new_caches
+    unembed = params.get("unembed")
+    if unembed is None:
+        unembed = params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, unembed.astype(dtype))
+    return logits, aux_total, new_caches
+
+
+def loss_fn(
+    params: Params,
+    cfg: LMConfig,
+    tokens: jnp.ndarray,
+    labels: jnp.ndarray,
+    act_spec=None,
+    loss_chunk: int = 0,
+) -> jnp.ndarray:
+    """Next-token cross entropy.  ``loss_chunk > 0`` computes the vocab
+    projection + softmax in sequence chunks (lax.map) so the full
+    (b, s, vocab) fp32 logits tensor is never materialized — required for the
+    256k-vocab archs at 65k tokens/device."""
+    if loss_chunk and tokens.shape[1] > loss_chunk and tokens.shape[1] % loss_chunk == 0:
+        x, aux, _ = forward(params, cfg, tokens, act_spec=act_spec, return_hidden=True)
+        unembed = params.get("unembed")
+        if unembed is None:
+            unembed = params["embed"].T
+        unembed = unembed.astype(x.dtype)
+        b, s, d = x.shape
+        n_chunks = s // loss_chunk
+        x_c = x.reshape(b, n_chunks, loss_chunk, d).swapaxes(0, 1)
+        l_c = labels.reshape(b, n_chunks, loss_chunk).swapaxes(0, 1)
+
+        def chunk_nll(args):
+            xc, lc = args
+            logits = jnp.einsum("bsd,dv->bsv", xc, unembed)
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            return -jnp.take_along_axis(logp, lc[..., None], axis=-1)[..., 0]
+
+        nll = jax.lax.map(chunk_nll, (x_c, l_c))
+        return nll.mean() + aux
+    logits, aux, _ = forward(params, cfg, tokens, act_spec=act_spec)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return nll.mean() + aux
+
+
+# ---------------------------------------------------------------------------
+# KV cache / serving
+# ---------------------------------------------------------------------------
+
+
+def _cache_layer_shape(cfg: LMConfig, batch: int, max_len: int):
+    if cfg.attention == "mla":
+        return {
+            "c_kv": (batch, max_len, cfg.kv_lora_rank),
+            "k_rope": (batch, max_len, cfg.qk_rope_head_dim),
+        }
+    return {
+        "k": (batch, max_len, cfg.n_kv_heads, cfg.d_head),
+        "v": (batch, max_len, cfg.n_kv_heads, cfg.d_head),
+    }
+
+
+def init_kv_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None) -> list:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    shapes = _cache_layer_shape(cfg, batch, max_len)
+    return [
+        {k: jnp.zeros((n,) + s, dtype) for k, s in shapes.items()}
+        for (n, _) in layer_groups(cfg)
+    ]
+
+
+def kv_cache_shapes(cfg: LMConfig, batch: int, max_len: int, dtype=None) -> list:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    shapes = _cache_layer_shape(cfg, batch, max_len)
+    return [
+        {k: jax.ShapeDtypeStruct((n,) + s, dtype) for k, s in shapes.items()}
+        for (n, _) in layer_groups(cfg)
+    ]
+
+
+def prefill(params: Params, cfg: LMConfig, tokens: jnp.ndarray, caches: list, act_spec=None):
+    logits, _, new_caches = forward(
+        params, cfg, tokens, caches=caches, cache_index=jnp.int32(0), act_spec=act_spec
+    )
+    return logits, new_caches
+
+
+def decode_step(params: Params, cfg: LMConfig, token: jnp.ndarray, caches: list, index: jnp.ndarray):
+    positions = jnp.asarray(index)[None]
+    logits, _, new_caches = forward(
+        params, cfg, token, caches=caches, cache_index=index, positions=positions
+    )
+    return logits[:, -1], new_caches
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules
+# ---------------------------------------------------------------------------
+
+
+def _attn_specs(cfg: LMConfig, l: Optional[str], model_size: int):
+    """l is the stacked-layer leading axis (None entry prepended)."""
+    mp = "model"
+
+    def s(*axes):
+        return P(l, *axes)
+
+    if cfg.attention == "mla":
+        return {
+            "w_q": s(None, mp, None),
+            "w_dkv": s(None, None),
+            "w_krope": s(None, None),
+            "w_uk": s(None, mp, None),
+            "w_uv": s(None, mp, None),
+            "w_o": s(mp, None, None),
+            "kv_norm": s(None),
+        }
+    kv_shardable = cfg.n_kv_heads % model_size == 0
+    # GQA with few kv heads: shard K/V projections on d_model instead
+    return {
+        "w_q": s(None, mp, None),
+        "w_k": s(None, mp, None) if kv_shardable else s(mp, None, None),
+        "w_v": s(None, mp, None) if kv_shardable else s(mp, None, None),
+        "w_o": s(mp, None, None),
+    }
+
+
+def _ffn_specs(cfg: LMConfig, l: Optional[str]):
+    gated = cfg.ffn_activation in ("swiglu", "geglu")
+    specs = {"w_up": P(l, None, "model"), "w_down": P(l, "model", None)}
+    if gated:
+        specs["w_gate"] = P(l, None, "model")
+    return specs
+
+
+def _moe_specs(cfg: LMConfig, l: Optional[str]):
+    gated = cfg.ffn_activation in ("swiglu", "geglu")
+    moe = {
+        "router": P(l, None, None),
+        "w_up": P(l, "model", None, None),
+        "w_down": P(l, "model", None, None),
+    }
+    if gated:
+        moe["w_gate"] = P(l, "model", None, None)
+    if cfg.n_shared_experts:
+        moe["shared"] = _ffn_specs(cfg, l)
+    return moe
+
+
+def param_pspecs(cfg: LMConfig, model_size: int = 16) -> Params:
+    """Megatron-style TP over "model": attention heads + FFN hidden + vocab;
+    experts sharded over "model" (EP); stacked layer axis replicated."""
+    l = None  # stacked leading axis: replicated
+    groups = []
+    for (n, moe) in layer_groups(cfg):
+        g = {
+            "attn_norm": P(l, None),
+            "ffn_norm": P(l, None),
+            "attn": _attn_specs(cfg, l, model_size),
+        }
+        if moe:
+            g["moe"] = _moe_specs(cfg, l)
+        else:
+            g["ffn"] = _ffn_specs(cfg, l)
+        groups.append(g)
+    specs = {"embed": P("model", None), "final_norm": P(None), "groups": groups}
+    if not cfg.tie_embeddings:
+        specs["unembed"] = P(None, "model")
+    return specs
+
+
+def kv_cache_pspecs(cfg: LMConfig, dp_axes: Tuple[str, ...], shard_seq: bool = False, model_size: int = 16) -> list:
+    """Cache shardings (stacked: leading layer axis).
+
+    * default: batch over data axes; kv heads (GQA) or latent (replicated)
+      over model.
+    * ``shard_seq=True``: sequence axis sharded over every mesh axis — the
+      split-K layout for ``long_500k`` (batch=1).
+    """
+    dp = dp_axes
+    seq_axes = tuple(dp) + ("model",)
+    specs = []
+    for _ in layer_groups(cfg):
+        if cfg.attention == "mla":
+            if shard_seq:
+                specs.append({"c_kv": P(None, None, seq_axes, None), "k_rope": P(None, None, seq_axes, None)})
+            else:
+                # batch over data axes AND sequence over model: the latent
+                # cache is the whole decode working set — sharding seq keeps
+                # the per-device slice (and its update copies) small
+                specs.append({"c_kv": P(None, dp, "model", None), "k_rope": P(None, dp, "model", None)})
+        else:
+            if shard_seq:
+                specs.append(
+                    {"k": P(None, None, seq_axes, None, None), "v": P(None, None, seq_axes, None, None)}
+                )
+            elif cfg.n_kv_heads % model_size == 0:
+                specs.append(
+                    {"k": P(None, dp, None, "model", None), "v": P(None, dp, None, "model", None)}
+                )
+            else:  # few kv heads (GQA/MQA) — shard the sequence over model
+                specs.append(
+                    {"k": P(None, dp, "model", None, None), "v": P(None, dp, "model", None, None)}
+                )
+    return specs

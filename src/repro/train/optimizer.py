@@ -1,0 +1,135 @@
+"""Optimizers (AdamW, Adafactor), gradient clipping, LR schedules.
+
+Self-contained (no optax): ``init(params) -> state``, ``update(grads, state,
+params, lr) -> (new_params, new_state)``.  All states are pytrees matching
+``params`` — they shard with the same PartitionSpecs (optimizer-state
+sharding comes free).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "adafactor_init",
+    "adafactor_update",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "linear_warmup_cosine",
+]
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jnp.ndarray
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return AdamWState(mu=zeros, nu=jax.tree.map(jnp.zeros_like, params), count=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    lr: jnp.ndarray,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Tuple[Any, AdamWState]:
+    count = state.count + 1
+    cf = count.astype(jnp.float32)
+    bc1 = 1.0 - b1**cf
+    bc2 = 1.0 - b2**cf
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+
+    def step(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        return p - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+
+    new_params = jax.tree.map(step, params, mu, nu)
+    return new_params, AdamWState(mu=mu, nu=nu, count=count)
+
+
+class AdafactorState(NamedTuple):
+    row: Any   # row second-moment (or full for <2D tensors)
+    col: Any
+    count: jnp.ndarray
+
+
+def adafactor_init(params) -> AdafactorState:
+    def rows(p):
+        return jnp.zeros(p.shape[:-1], p.dtype) if p.ndim >= 2 else jnp.zeros_like(p)
+
+    def cols(p):
+        return jnp.zeros(p.shape[:-2] + p.shape[-1:], p.dtype) if p.ndim >= 2 else jnp.zeros((), p.dtype)
+
+    return AdafactorState(
+        row=jax.tree.map(rows, params), col=jax.tree.map(cols, params), count=jnp.zeros((), jnp.int32)
+    )
+
+
+def adafactor_update(
+    grads, state: AdafactorState, params, lr, decay: float = 0.8, eps: float = 1e-30
+):
+    """Factored second-moment (Shazeer & Stern 2018) — O(n+m) state per (n,m)
+    matrix instead of O(nm); the memory-saving default for huge models."""
+    count = state.count + 1
+    beta = 1.0 - count.astype(jnp.float32) ** -decay
+
+    def upd(p, g, r, c):
+        if p.ndim >= 2:
+            r2 = beta * r + (1 - beta) * (g * g).mean(-1)
+            c2 = beta * c + (1 - beta) * (g * g).mean(-2)
+            denom = jnp.sqrt(
+                r2[..., :, None] * c2[..., None, :] / jnp.maximum(r2.mean(-1)[..., None, None], eps) + eps
+            )
+            return p - lr * g / denom, r2, c2
+        r2 = beta * r + (1 - beta) * g * g
+        return p - lr * g / (jnp.sqrt(r2) + 1e-8), r2, c
+
+    out = jax.tree.map(upd, params, grads, state.row, state.col)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3)
+    new_row = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3)
+    new_col = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3)
+    return new_params, AdafactorState(row=new_row, col=new_col, count=count)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gnorm
+
+
+def cosine_schedule(base_lr: float, total_steps: int, min_frac: float = 0.1) -> Callable:
+    def lr(step):
+        frac = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        return base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(np.pi * frac)))
+
+    return lr
+
+
+def linear_warmup_cosine(base_lr: float, warmup: int, total_steps: int, min_frac: float = 0.1):
+    cos = cosine_schedule(base_lr, max(total_steps - warmup, 1), min_frac)
+
+    def lr(step):
+        warm = base_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        return jnp.where(step < warmup, warm, cos(step - warmup))
+
+    return lr

@@ -1,0 +1,81 @@
+"""Unit + property tests for combinadic indexing and split tables."""
+
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.colorsets import (
+    binom,
+    build_split_table,
+    colorful_probability,
+    enumerate_subsets,
+    rank_subsets,
+    unrank_subsets,
+)
+
+
+def test_binom_matches_math():
+    import math
+
+    for n in range(0, 15):
+        for r in range(0, n + 1):
+            assert binom(n, r) == math.comb(n, r)
+    assert binom(5, 7) == 0
+    assert binom(3, -1) == 0
+
+
+@pytest.mark.parametrize("k,m", [(5, 2), (7, 3), (8, 4), (10, 1), (6, 6), (9, 0)])
+def test_enumerate_rank_roundtrip(k, m):
+    subsets = enumerate_subsets(k, m)
+    assert subsets.shape == (binom(k, m), m)
+    ranks = rank_subsets(subsets)
+    # enumerate returns colex order == identity ranks
+    np.testing.assert_array_equal(ranks, np.arange(binom(k, m)))
+    if m > 0:
+        back = unrank_subsets(ranks, k, m)
+        np.testing.assert_array_equal(back, subsets)
+
+
+@given(
+    k=st.integers(min_value=2, max_value=10),
+    data=st.data(),
+)
+@settings(max_examples=50, deadline=None)
+def test_rank_is_bijection_property(k, data):
+    m = data.draw(st.integers(min_value=1, max_value=k))
+    subsets = enumerate_subsets(k, m)
+    ranks = rank_subsets(subsets)
+    assert len(set(ranks.tolist())) == binom(k, m)
+    assert ranks.min() == 0 and ranks.max() == binom(k, m) - 1
+
+
+@pytest.mark.parametrize("k,m,m_a", [(5, 3, 1), (7, 5, 3), (8, 4, 2), (6, 6, 3), (9, 2, 1)])
+def test_split_table_completeness(k, m, m_a):
+    """Every (C_s, split) must decompose into disjoint subsets that union to C_s."""
+    t = build_split_table(k, m, m_a)
+    assert t.n_out == binom(k, m)
+    assert t.n_splits == binom(m, m_a)
+    sets_m = enumerate_subsets(k, m)
+    sets_a = enumerate_subsets(k, m_a)
+    sets_p = enumerate_subsets(k, m - m_a)
+    for out in range(min(t.n_out, 40)):
+        full = set(sets_m[out].tolist())
+        seen_splits = set()
+        for s in range(t.n_splits):
+            a = set(sets_a[t.idx_a[out, s]].tolist())
+            p = set(sets_p[t.idx_p[out, s]].tolist())
+            assert a | p == full
+            assert not (a & p)
+            seen_splits.add(frozenset(a))
+        # all C(m, m_a) distinct active subsets appear exactly once
+        assert len(seen_splits) == t.n_splits
+
+
+def test_colorful_probability():
+    import math
+
+    for k in range(1, 12):
+        assert colorful_probability(k) == pytest.approx(math.factorial(k) / k**k, rel=1e-12)

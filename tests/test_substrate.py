@@ -1,0 +1,245 @@
+"""Training-substrate tests: optimizers, checkpoint/restart, fault tolerance,
+compression, elastic planning, samplers, data determinism, serving engine."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+
+def test_adamw_converges_quadratic():
+    from repro.train.optimizer import adamw_init, adamw_update
+
+    params = {"w": jnp.array([5.0, -3.0, 2.0])}
+    st_ = adamw_init(params)
+    for _ in range(300):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, st_ = adamw_update(g, st_, params, 0.05, weight_decay=0.0)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_adafactor_state_is_factored():
+    from repro.train.optimizer import adafactor_init
+
+    params = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((32,))}
+    s = adafactor_init(params)
+    assert s.row["w"].shape == (64,) and s.col["w"].shape == (32,)
+    assert s.row["b"].shape == (32,)
+
+
+def test_clip_by_global_norm():
+    from repro.train.optimizer import clip_by_global_norm
+
+    g = {"a": jnp.ones((10,)) * 10.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(1000.0))
+    new_norm = float(jnp.linalg.norm(clipped["a"]))
+    assert new_norm == pytest.approx(1.0, rel=1e-5)
+
+
+def test_checkpoint_roundtrip_and_atomicity():
+    from repro.train.checkpoint import restore_latest, save_checkpoint
+
+    with tempfile.TemporaryDirectory() as d:
+        tree = {"a": jnp.arange(5.0), "b": {"c": jnp.ones((2, 3))}}
+        save_checkpoint(d, 3, tree)
+        save_checkpoint(d, 7, jax.tree.map(lambda x: x * 2, tree))
+        # a torn write must be ignored
+        os.makedirs(os.path.join(d, "step_00000009.tmp"), exist_ok=True)
+        restored, manifest = restore_latest(d, tree)
+        assert manifest["step"] == 7
+        np.testing.assert_allclose(np.asarray(restored["a"]), np.arange(5.0) * 2)
+
+
+def test_checkpoint_shape_mismatch_raises():
+    from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+
+    with tempfile.TemporaryDirectory() as d:
+        path = save_checkpoint(d, 1, {"a": jnp.zeros((4,))})
+        with pytest.raises(ValueError):
+            restore_checkpoint(path, {"a": jnp.zeros((5,))})
+
+
+def test_async_checkpointer_gc():
+    from repro.train.checkpoint import AsyncCheckpointer
+
+    with tempfile.TemporaryDirectory() as d:
+        ck = AsyncCheckpointer(d, keep=2)
+        for step in (1, 2, 3, 4):
+            ck.save(step, {"x": jnp.full((3,), float(step))})
+        ck.wait()
+        kept = sorted(p for p in os.listdir(d) if p.startswith("step_"))
+        assert kept == ["step_00000003", "step_00000004"]
+
+
+def test_loop_crash_restart_bitexact():
+    from repro.train.loop import LoopConfig, TrainLoop
+
+    def train_step(s, b):
+        return {"p": s["p"] * 1.5 + b, "n": s["n"] + 1}, {"loss": jnp.sum(s["p"])}
+
+    def data(start):
+        def gen():
+            i = start
+            while True:
+                yield jnp.float32(i % 3)
+                i += 1
+        return gen()
+
+    init = {"p": jnp.ones(()), "n": jnp.zeros(())}
+    with tempfile.TemporaryDirectory() as d:
+        cfg = LoopConfig(total_steps=20, ckpt_dir=d, ckpt_every=5, log_every=100)
+        straight = TrainLoop(cfg, train_step, data, init)
+        expected = straight.run()
+
+    with tempfile.TemporaryDirectory() as d:
+        cfg = LoopConfig(total_steps=20, ckpt_dir=d, ckpt_every=5, log_every=100)
+        loop = TrainLoop(cfg, train_step, data, init)
+        loop.inject_fault_at(13)
+        with pytest.raises(RuntimeError):
+            loop.run()
+        loop2 = TrainLoop(cfg, train_step, data, init)
+        assert loop2.try_restore() and loop2.step == 10
+        resumed = loop2.run()
+
+    np.testing.assert_allclose(np.asarray(resumed["p"]), np.asarray(expected["p"]), rtol=1e-6)
+    assert float(resumed["n"]) == 20
+
+
+def test_straggler_watchdog_raises():
+    import time
+
+    from repro.train.loop import LoopConfig, TrainLoop
+
+    calls = {"i": 0}
+
+    def train_step(s, b):
+        calls["i"] += 1
+        if calls["i"] == 15:
+            time.sleep(0.25)
+        else:
+            time.sleep(0.005)
+        return s, {"loss": jnp.zeros(())}
+
+    def data(start):
+        def gen():
+            while True:
+                yield 0.0
+        return gen()
+
+    cfg = LoopConfig(total_steps=30, straggler_factor=5.0, straggler_policy="raise", log_every=100)
+    loop = TrainLoop(cfg, train_step, data, {"x": jnp.zeros(())})
+    with pytest.raises(RuntimeError, match="straggler"):
+        loop.run()
+    assert loop.straggler_events and loop.straggler_events[0].step == 14
+
+
+@given(seed=st.integers(min_value=0, max_value=100))
+@settings(max_examples=10, deadline=None)
+def test_compression_error_feedback_property(seed):
+    """sum of decompressed grads -> true sum as steps accumulate (EF property)."""
+    from repro.train.compression import compress_with_feedback
+
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(256).astype(np.float32))
+    res = jnp.zeros_like(x)
+    acc = jnp.zeros_like(x)
+    n = 16
+    for _ in range(n):
+        dec, res = compress_with_feedback(x, res, codec="int8")
+        acc = acc + dec
+    err = float(jnp.abs(acc / n - x).max()) / (float(jnp.abs(x).max()) + 1e-9)
+    assert err < 0.02
+
+
+def test_topk_sparsify():
+    from repro.train.compression import topk_sparsify
+
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(1000).astype(np.float32))
+    y = topk_sparsify(x, frac=0.05)
+    nz = int((y != 0).sum())
+    assert 50 <= nz <= 60  # ties allowed
+    # surviving entries are the largest magnitudes
+    assert float(jnp.abs(y[y != 0]).min()) >= float(jnp.sort(jnp.abs(x))[-60])
+
+
+def test_elastic_plan_and_reshard():
+    from repro.train.elastic import plan_elastic_mesh, survivors_after_failure
+
+    assert plan_elastic_mesh(16, model_parallel=4) == (4, 4)
+    assert plan_elastic_mesh(13, model_parallel=4) == (3, 4)  # drops a straggler
+    with pytest.raises(ValueError):
+        plan_elastic_mesh(3, model_parallel=4)
+    devs = list(range(8))
+    assert survivors_after_failure(devs, [2, 5]) == [0, 1, 3, 4, 6, 7]
+
+
+def test_neighbor_sampler_shapes_and_validity():
+    from repro.core.graph import rmat_graph
+    from repro.models.gnn.sampler import node_flow_to_batch, sample_node_flow
+
+    g = rmat_graph(500, 3000, seed=0)
+    row_ptr, col_idx = g.csr()
+    seeds = jnp.arange(32)
+    flow = sample_node_flow(
+        jax.random.PRNGKey(0), jnp.asarray(row_ptr), jnp.asarray(col_idx), seeds, (5, 3)
+    )
+    assert [x.shape[0] for x in flow.layer_nodes] == [32, 160, 480]
+    # every valid sampled neighbor is a real neighbor of its parent
+    parents = np.asarray(flow.layer_nodes[0])
+    children = np.asarray(flow.layer_nodes[1]).reshape(32, 5)
+    valid = np.asarray(flow.layer_valid[1]).reshape(32, 5)
+    rp, ci = np.asarray(row_ptr), np.asarray(col_idx)
+    for i, p in enumerate(parents):
+        nbrs = set(ci[rp[p] : rp[p + 1]].tolist())
+        for j in range(5):
+            if valid[i, j]:
+                assert int(children[i, j]) in nbrs
+
+    batch = node_flow_to_batch(flow, jnp.ones((500, 8)))
+    assert batch.n_nodes == 32 + 160 + 480
+    assert batch.n_edges == 2 * (160 + 480)
+
+
+def test_data_pipeline_determinism_and_resume():
+    from repro.configs.granite_8b import SMOKE_CONFIG as cfg
+    from repro.data.pipeline import token_batches
+
+    a = token_batches(cfg, 2, 16, seed=5, start_step=0)
+    b = token_batches(cfg, 2, 16, seed=5, start_step=0)
+    t1, _ = next(a)
+    t2, _ = next(b)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    # resume semantics: start_step=1 stream matches the second batch
+    c = token_batches(cfg, 2, 16, seed=5, start_step=1)
+    t1b, _ = next(a)
+    t3, _ = next(c)
+    np.testing.assert_array_equal(np.asarray(t1b), np.asarray(t3))
+
+
+def test_serve_engine_matches_offline_greedy():
+    import dataclasses
+
+    from repro.configs.granite_8b import SMOKE_CONFIG
+    from repro.models import transformer as T
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = dataclasses.replace(SMOKE_CONFIG, n_layers=2)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = [np.array([3, 5, 7], np.int32), np.array([11, 2, 9], np.int32)]
+    engine = ServeEngine(cfg, params, max_batch=2, max_len=32)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=5) for i, p in enumerate(prompts)]
+    engine.run(reqs)
+    for req, prompt in zip(reqs, prompts):
+        assert len(req.generated) == 5
+        # offline greedy reference
+        toks = list(prompt)
+        for _ in range(5):
+            logits, _, _ = T.forward(params, cfg, jnp.asarray(toks, jnp.int32)[None, :])
+            toks.append(int(jnp.argmax(logits[0, -1])))
+        assert req.generated == toks[len(prompt):], (req.generated, toks[len(prompt):])

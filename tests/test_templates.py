@@ -1,0 +1,75 @@
+"""Tests for tree templates, partitioning, and automorphism counting."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.templates import (
+    PAPER_TEMPLATES,
+    Template,
+    binary_tree_template,
+    get_template,
+    partition_template,
+    path_template,
+    random_tree_template,
+    star_template,
+    tree_automorphisms,
+)
+
+
+def test_known_automorphisms():
+    assert tree_automorphisms(path_template(2)) == 2
+    assert tree_automorphisms(path_template(5)) == 2
+    assert tree_automorphisms(star_template(5)) == 24  # (k-1)!
+    assert tree_automorphisms(star_template(7)) == 720
+    # "H" tree: path 0-1-2 with leaves 3,4 on 0 and 5,6 on 2 -> 2*2*2 = 8
+    h = Template("h", ((0, 1), (1, 2), (0, 3), (0, 4), (2, 5), (2, 6)))
+    assert tree_automorphisms(h) == 8
+    # single edge center flip
+    assert tree_automorphisms(path_template(4)) == 2
+
+
+def test_partition_structure():
+    for name, t in PAPER_TEMPLATES.items():
+        if t.k > 14:
+            continue
+        part = partition_template(t)
+        subs = part.subs
+        # binary recursion tree over k leaves => 2k-1 sub-templates
+        assert len(subs) == 2 * t.k - 1
+        # last is the full template
+        assert subs[-1].vertices == tuple(range(t.k))
+        for i, s in enumerate(subs):
+            if s.is_leaf:
+                assert s.size == 1
+            else:
+                a, p = subs[s.active], subs[s.passive]
+                assert s.active < i and s.passive < i  # topological order
+                assert set(a.vertices) | set(p.vertices) == set(s.vertices)
+                assert not (set(a.vertices) & set(p.vertices))
+                assert a.root == s.root  # active keeps the root
+                assert s.size == a.size + p.size
+
+
+@given(k=st.integers(min_value=2, max_value=12), seed=st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=60, deadline=None)
+def test_random_tree_valid_and_partitionable(k, seed):
+    t = random_tree_template(k, seed)
+    t.validate()
+    assert t.k == k
+    part = partition_template(t)
+    assert len(part.subs) == 2 * k - 1
+    assert tree_automorphisms(t) >= 1
+
+
+def test_get_template_constructors():
+    assert get_template("path6").k == 6
+    assert get_template("star4").k == 4
+    assert get_template("bintree7").k == 7
+    assert get_template("u12").k == 12
+    with pytest.raises(KeyError):
+        get_template("nope")
+    for name, t in PAPER_TEMPLATES.items():
+        t.validate()
+        assert t.name == name
