@@ -1,25 +1,45 @@
-"""Table III analog: SUBGRAPH2VEC (S) vs the graph-traversal model (F).
+"""Table III analog: SUBGRAPH2VEC (S) vs the graph-traversal model (F),
+plus the batched CountingEngine vs the per-coloring dispatch loop.
 
-The baseline implements FASCIA's Algorithm 2 access pattern *in JAX* for a
-fair comparison: the neighbor reduction (an SpMV) is re-executed for every
-(output color set, split) pair — exactly the redundancy Equation 1 removes.
-SUBGRAPH2VEC runs Algorithm 5: ONE batched SpMM per stage + vertex-local eMA.
+Two comparisons, both on RMAT graphs (the paper's synthetic family):
 
-Scaled to CPU budgets: RMAT graphs (the paper's synthetic family, including
-the skew sweep a=0.45/0.57/0.7 mirroring K=3/5/8) x templates u5-u10.
-Reported ``derived`` = speedup (traversal_us / vectorized_us).
+* **tableIII** — per coloring, Algorithm 5 (ONE batched SpMM per stage +
+  vertex-local eMA) vs FASCIA's Algorithm 2 access pattern implemented in
+  JAX for fairness: the neighbor reduction (an SpMV) re-executed for every
+  (output color set, split) pair — exactly the redundancy Equation 1
+  removes.
+* **engine** — a full 64-iteration estimation run: the legacy per-coloring
+  jit-dispatch loop (one device call + one host sync per coloring) vs the
+  :class:`~repro.core.engine.CountingEngine`, which fuses a chunk of
+  colorings into the column dimension of the DP state and runs the whole
+  thing in one jit.  Estimates are cross-checked to fp32 tolerance before
+  timing; ``derived`` records the speedup.
+
+Run standalone for the CI smoke:  ``python -m benchmarks.bench_counting --quick``
 """
 
 from __future__ import annotations
 
+import argparse
+import sys
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import build_counting_plan, count_colorful_vectorized, get_template, rmat_graph, spmm_edges
-from .common import record, time_fn
+from repro.core import (
+    CountingEngine,
+    build_counting_plan,
+    count_colorful_vectorized,
+    get_template,
+    make_count_step,
+    rmat_graph,
+    spmm_edges,
+)
+from .common import emit_header, record, time_fn
+
+ENGINE_ITERATIONS = 64
 
 
 def traversal_count_jax(plan, src, dst, n, colors):
@@ -48,15 +68,8 @@ def traversal_count_jax(plan, src, dst, n, colors):
     return jnp.sum(slots[plan.partition.root_index])
 
 
-def run() -> None:
-    datasets = {
-        "rmat2k": rmat_graph(2048, 20_000, seed=1),
-        "rmat2k-skew": rmat_graph(2048, 20_000, seed=1, a=0.7, b=0.12, c=0.12),
-        "rmat8k": rmat_graph(8192, 80_000, seed=2),
-    }
-    templates = ["u5-1", "u5-2", "u6", "u7"]
+def _run_table_iii(datasets, templates) -> None:
     rng = np.random.default_rng(0)
-
     for dname, g in datasets.items():
         src, dst = jnp.asarray(g.src), jnp.asarray(g.dst)
         spmm = partial(spmm_edges, src, dst, g.n)
@@ -77,3 +90,79 @@ def run() -> None:
             us_t = time_fn(trav, colors)
             record(f"tableIII/{dname}/{tname}/subgraph2vec", us_v, f"count={v:.3e}")
             record(f"tableIII/{dname}/{tname}/traversal", us_t, f"speedup={us_t / us_v:.1f}x")
+
+
+def _run_engine_vs_loop(datasets, templates, iterations: int, timing_iters: int) -> None:
+    for dname, g in datasets.items():
+        src, dst = jnp.asarray(g.src), jnp.asarray(g.dst)
+        spmm = partial(spmm_edges, src, dst, g.n)
+        for tname in templates:
+            t = get_template(tname)
+            plan = build_counting_plan(t)
+            keys = jax.random.split(jax.random.PRNGKey(0), iterations)
+            engine = CountingEngine(g, [t], plans=[plan])
+
+            # the seed estimator loop: one jit dispatch + one host sync per
+            # coloring (this first run doubles as the step's jit warmup)
+            step = make_count_step(plan, g.n, spmm)
+
+            def run_loop():
+                return np.array([float(step(key)) for key in keys])
+
+            def run_engine():
+                return engine.count_keys(keys)
+
+            loop_vals = run_loop()
+            engine_vals = engine.count_keys(keys)[:, 0]
+            # same keys => same colorings: estimates must agree to fp32 tolerance
+            assert np.allclose(engine_vals, loop_vals, rtol=1e-5), (
+                tname,
+                float(np.max(np.abs(engine_vals - loop_vals))),
+            )
+
+            # both sides are warm from the cross-check run above
+            us_loop = time_fn(run_loop, warmup=1, iters=timing_iters)
+            us_engine = time_fn(run_engine, warmup=1, iters=timing_iters)
+            speedup = us_loop / max(us_engine, 1e-9)
+            record(
+                f"engine/{dname}/{tname}/loop{iterations}",
+                us_loop,
+                "per_coloring_dispatch",
+            )
+            record(
+                f"engine/{dname}/{tname}/batched{iterations}",
+                us_engine,
+                f"speedup={speedup:.2f}x;chunk={engine.chunk_size};backend={engine.backend}",
+            )
+
+
+def run(quick: bool = False) -> None:
+    if quick:
+        datasets = {"rmat2k": rmat_graph(2048, 20_000, seed=1)}
+        _run_engine_vs_loop(datasets, ["u5-1", "u6"], iterations=16, timing_iters=1)
+        return
+    datasets = {
+        "rmat2k": rmat_graph(2048, 20_000, seed=1),
+        "rmat2k-skew": rmat_graph(2048, 20_000, seed=1, a=0.7, b=0.12, c=0.12),
+        "rmat8k": rmat_graph(8192, 80_000, seed=2),
+    }
+    _run_table_iii(datasets, ["u5-1", "u5-2", "u6", "u7"])
+    _run_engine_vs_loop(
+        {"rmat2k": datasets["rmat2k"]},
+        ["u5-1", "u5-2", "u6", "u7"],
+        iterations=ENGINE_ITERATIONS,
+        timing_iters=3,
+    )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="~30s CI smoke subset")
+    args = ap.parse_args()
+    emit_header()
+    run(quick=args.quick)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

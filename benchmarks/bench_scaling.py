@@ -26,6 +26,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json, time
 import jax, jax.numpy as jnp, numpy as np
+from repro import compat
 from repro.core import build_counting_plan, get_template, rmat_graph
 from repro.core.distributed import (make_distributed_count_fn, plan_tables,
                                     plan_table_specs, shard_graph, distributed_input_specs)
@@ -42,7 +43,7 @@ for n_dev in (1, 2, 4, 8):
     tables = plan_tables(plan)
     colors = jnp.asarray(np.random.default_rng(0).integers(0, t.k, size=sg.n_padded))
     args = (colors, jnp.asarray(sg.src), jnp.asarray(sg.dst_local), jnp.asarray(sg.edge_mask), tables)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         jitted = jax.jit(fn)
         compiled = jitted.lower(*args).compile()
         val = float(jitted(*args))

@@ -2,17 +2,21 @@
 
   PYTHONPATH=src python -m benchmarks.run [--only tableIII,fig14,...]
 
-Emits ``name,us_per_call,derived`` CSV rows.
+Emits ``name,us_per_call,derived`` CSV rows, and writes every recorded row
+(plus the derived engine speedups) to ``BENCH_counting.json`` so the perf
+trajectory is tracked across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import re
 import sys
 import traceback
 
 from . import bench_counting, bench_error, bench_kernels, bench_scaling, bench_template_scaling
-from .common import emit_header
+from .common import ROWS, emit_header
 
 BENCHES = {
     "tableIII": bench_counting.run,        # S vs F execution time + speedup
@@ -24,9 +28,41 @@ BENCHES = {
 }
 
 
+def emit_json(path: str = "BENCH_counting.json") -> None:
+    """Persist all recorded rows + headline engine speedups for trend tracking.
+
+    Merges into an existing file (rows keyed by name, new results win) so a
+    partial ``--only`` run refreshes its own rows without clobbering the
+    speedup record of the last full run.
+    """
+    existing_rows: dict = {}
+    speedups: dict = {}
+    try:
+        with open(path) as fh:
+            prev = json.load(fh)
+        existing_rows = {r["name"]: r for r in prev.get("rows", [])}
+        speedups = dict(prev.get("engine_speedup_vs_loop", {}))
+    except (FileNotFoundError, json.JSONDecodeError, KeyError, TypeError):
+        pass
+    for name, us, derived in ROWS:
+        existing_rows[name] = {"name": name, "us_per_call": us, "derived": derived}
+        m = re.match(r"engine/(.+)/batched(\d+)$", name)
+        sp = re.search(r"speedup=([0-9.]+)x", derived)
+        if m and sp:
+            speedups[f"{m.group(1)}/{m.group(2)}iter"] = float(sp.group(1))
+    payload = {
+        "rows": sorted(existing_rows.values(), key=lambda r: r["name"]),
+        "engine_speedup_vs_loop": speedups,
+    }
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=2)
+    print(f"wrote {path} ({len(ROWS)} new rows)", file=sys.stderr)
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated bench keys")
+    ap.add_argument("--json", default="BENCH_counting.json", help="output JSON path")
     args = ap.parse_args()
     keys = list(dict.fromkeys(args.only.split(","))) if args.only else [
         "tableIII", "fig12", "fig13", "fig14", "kernels"
@@ -40,6 +76,7 @@ def main() -> int:
         except Exception:
             traceback.print_exc()
             failed.append(key)
+    emit_json(args.json)
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
         return 1

@@ -15,6 +15,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
+from repro import compat
 
 from repro.core import (
     build_counting_plan,
@@ -45,7 +46,7 @@ def main():
     # so any assignment is valid for the estimate.
     colors = jnp.asarray(rng.integers(0, template.k, size=sharded.n_padded))
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         raw = count_fn(
             colors,
             jnp.asarray(sharded.src),
@@ -58,7 +59,7 @@ def main():
 
     # single-device reference over the same coloring (identity labeling)
     plain = shard_graph(graph, mesh.devices.size)  # no relabel
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         raw_plain = count_fn(
             colors,
             jnp.asarray(plain.src),

@@ -13,8 +13,8 @@ distance.
 import numpy as np
 
 from repro.core import (
+    CountingEngine,
     Template,
-    estimate_embeddings,
     erdos_renyi_graph,
     rmat_graph,
 )
@@ -39,10 +39,12 @@ NETWORKS = {
 
 
 def treelet_distribution(graph, iterations=12, seed=0):
-    counts = []
-    for t in TREELETS:
-        est = estimate_embeddings(graph, t, iterations=iterations, seed=seed)
-        counts.append(max(est.mean, 0.0))
+    # ONE engine counts all five treelets per coloring: the leaf one-hot and
+    # every coinciding passive sub-template (shared canonical form) is
+    # computed once, and the same colorings serve every template.
+    engine = CountingEngine(graph, TREELETS)
+    results = engine.estimate(iterations=iterations, seed=seed)
+    counts = [max(r.mean, 0.0) for r in results]
     total = sum(counts) or 1.0
     return np.array([c / total for c in counts])
 

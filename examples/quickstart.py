@@ -6,6 +6,7 @@
 import numpy as np
 
 from repro.core import (
+    CountingEngine,
     brute_force_embeddings,
     estimate_embeddings,
     get_template,
@@ -21,8 +22,13 @@ def main():
           f"avg degree {graph.avg_degree:.1f}")
     print(f"template: {template.name} (k={template.k})")
 
-    # SUBGRAPH2VEC color-coding estimate (Algorithm 5: SpMM + eMA stages).
-    result = estimate_embeddings(graph, template, iterations=24, seed=1)
+    # SUBGRAPH2VEC color-coding estimate: the CountingEngine picks the SpMM
+    # backend from graph statistics and runs all colorings batched in one jit
+    # (a chunk of colorings fused into the M-matrix column dimension).
+    engine = CountingEngine(graph, [template])
+    print(f"engine: backend={engine.backend} chunk_size={engine.chunk_size} "
+          f"peak_columns={engine.peak_columns()}")
+    result = engine.estimate(iterations=24, seed=1)[0]
     print(f"estimated embeddings: {result.mean:.4g}  "
           f"(std over colorings {result.std:.3g}, {result.iterations} iterations)")
 

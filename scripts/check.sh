@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# CI / local gate: tier-1 test suite + a ~30s benchmark smoke.
+#
+#   bash scripts/check.sh
+#
+# Works without optional dev deps (hypothesis): the suite installs a
+# fixed-seed fallback when the real package is missing.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== smoke: batched engine vs per-coloring loop =="
+python -m benchmarks.bench_counting --quick
+
+echo "check.sh: all green"

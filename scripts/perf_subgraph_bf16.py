@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs.registry import SUBGRAPH_SHAPES
 from repro.core import build_counting_plan
 from repro.core.distributed import (build_streamed_tables, distributed_input_specs,
@@ -36,7 +37,7 @@ for name, gd in (("fp32_gather", None), ("bf16_gather", jnp.bfloat16)):
         jax.tree.map(lambda x: NamedSharding(mesh, P(None, None)), t_specs,
                      is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)),
     )
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         compiled = jax.jit(fn, in_shardings=in_sh).lower(*specs, t_specs).compile()
     ms = compiled.memory_analysis()
     resident = ms.argument_size_in_bytes + ms.temp_size_in_bytes + max(

@@ -17,6 +17,7 @@ import json
 
 import jax
 import numpy as np
+from repro import compat
 
 from repro.configs.registry import SUBGRAPH_SHAPES
 from repro.core import build_counting_plan
@@ -49,7 +50,7 @@ def compile_variant(mesh, plan, n_padded, edges_per_shard, mode, column_batch=12
     in_sh = tuple(NamedSharding(mesh, P(every)) for _ in specs) + (
         jax.tree.map(lambda _: NamedSharding(mesh, P(None, None)), t_specs),
     )
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         compiled = jax.jit(fn, in_shardings=in_sh).lower(*specs, t_specs).compile()
     ms = compiled.memory_analysis()
     resident = ms.argument_size_in_bytes + ms.temp_size_in_bytes + max(

@@ -1,0 +1,112 @@
+"""Cross-version JAX compatibility shims (0.4.x <-> >= 0.5).
+
+The repo targets the newest public JAX API (``jax.shard_map``,
+``jax.set_mesh``, ``jax.typeof(...).vma``, ``jax.lax.pvary``), but CI and
+laptop environments routinely pin older 0.4.x releases where those names
+either live under ``jax.experimental`` or do not exist at all.  Every
+mesh/shard_map call site in the repo goes through this module so the same
+code runs on both API generations.
+
+Resolution rules (checked once at import):
+
+* ``shard_map``    — ``jax.shard_map`` if present, else
+  ``jax.experimental.shard_map.shard_map``.  Replication/vma checking is
+  disabled on the legacy path: the callers annotate varying-ness with
+  :func:`pvary`, which is an identity on 0.4.x where the vma type system
+  does not exist.
+* ``set_mesh``     — ``jax.set_mesh`` > ``jax.sharding.use_mesh`` > the
+  legacy ``with mesh:`` context (Mesh has been a context manager since
+  the xmap era, and NamedSharding-carrying code never needed the global
+  mesh anyway).
+* ``current_mesh`` — ``jax.sharding.get_abstract_mesh()`` when available
+  and non-trivial, else the thread-resident physical mesh set by the
+  legacy context.
+* ``pvary`` / ``varying_axes`` — no-ops on JAX without the vma system.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Callable, FrozenSet, Sequence
+
+import jax
+
+__all__ = [
+    "HAS_VMA",
+    "shard_map",
+    "set_mesh",
+    "current_mesh",
+    "pvary",
+    "varying_axes",
+]
+
+
+def _resolve_shard_map():
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn, True
+    from jax.experimental.shard_map import shard_map as legacy_fn
+
+    return legacy_fn, False
+
+
+_SHARD_MAP, _SHARD_MAP_IS_PUBLIC = _resolve_shard_map()
+
+#: True when this JAX has the varying-manual-axes type system (jax.typeof().vma).
+HAS_VMA = hasattr(jax, "typeof") and hasattr(jax.lax, "pvary")
+
+
+def shard_map(f: Callable, *, mesh, in_specs, out_specs) -> Callable:
+    """``jax.shard_map`` portable across the public/experimental split."""
+    if _SHARD_MAP_IS_PUBLIC:
+        return _SHARD_MAP(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    # Legacy (jax.experimental) path: no vma types, so static replication
+    # checking would reject loop carries our pvary() cannot annotate.
+    return _SHARD_MAP(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )
+
+
+def set_mesh(mesh):
+    """Context manager activating ``mesh`` for the enclosed block."""
+    setter = getattr(jax, "set_mesh", None)
+    if setter is not None:
+        return setter(mesh)
+    use_mesh = getattr(jax.sharding, "use_mesh", None)
+    if use_mesh is not None:
+        return use_mesh(mesh)
+    return _legacy_mesh_context(mesh)
+
+
+@contextlib.contextmanager
+def _legacy_mesh_context(mesh):
+    with mesh:
+        yield mesh
+
+
+def current_mesh():
+    """The mesh activated by :func:`set_mesh` (abstract or physical)."""
+    get_abstract = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abstract is not None:
+        m = get_abstract()
+        if m is not None and getattr(m, "axis_names", ()):
+            return m
+    from jax.interpreters import pxla
+
+    return pxla.thread_resources.env.physical_mesh
+
+
+def pvary(x: Any, axes: Sequence[Any]):
+    """``jax.lax.pvary`` where it exists; identity on pre-vma JAX."""
+    fn = getattr(jax.lax, "pvary", None)
+    if fn is None or not axes:
+        return x
+    return fn(x, tuple(axes))
+
+
+def varying_axes(x: Any) -> FrozenSet[Any]:
+    """Mesh axes ``x`` is varying over (empty set on pre-vma JAX)."""
+    typeof = getattr(jax, "typeof", None)
+    if typeof is None:
+        return frozenset()
+    return frozenset(getattr(typeof(x), "vma", frozenset()))

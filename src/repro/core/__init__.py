@@ -20,6 +20,13 @@ from .counting import (
     spmm_edges,
     spmm_ell,
 )
+from .engine import (
+    CountingEngine,
+    DtypePolicy,
+    pick_chunk_size,
+    select_backend,
+    sub_template_canonical,
+)
 from .estimator import EstimateResult, estimate_embeddings, make_count_step, required_iterations
 from .graph import BlockedELL, Graph, build_blocked_ell, erdos_renyi_graph, grid_graph, rmat_graph
 from .templates import (

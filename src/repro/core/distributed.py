@@ -34,6 +34,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from .. import compat
 from .colorsets import binom
 from .counting import CountingPlan, _ema_apply
 from .graph import Graph
@@ -125,10 +126,11 @@ def _compressed_gather(x, axes, gather_dtype):
 
 def _pvary_missing(x, axes):
     """Mark ``x`` varying over any mesh axes it is not already varying on
-    (loop-carry inits must match the varying type of the loop body)."""
-    vma = getattr(jax.typeof(x), "vma", frozenset())
+    (loop-carry inits must match the varying type of the loop body).  On JAX
+    without the vma type system this is an identity (compat shims)."""
+    vma = compat.varying_axes(x)
     missing = tuple(a for a in axes if a not in vma)
-    return jax.lax.pvary(x, missing) if missing else x
+    return compat.pvary(x, missing) if missing else x
 
 
 def build_streamed_tables(plan: CountingPlan, column_batch: int):
@@ -305,7 +307,7 @@ def make_distributed_count_fn(
     table_specs = {
         i: (P(None, None),) * per_stage for i, t in enumerate(plan.tables) if t is not None
     }
-    count = jax.shard_map(
+    count = compat.shard_map(
         local_count,
         mesh=mesh,
         in_specs=(sharded, sharded, sharded, sharded, table_specs),

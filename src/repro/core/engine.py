@@ -1,0 +1,483 @@
+"""CountingEngine: batched multi-coloring, multi-template color-coding runs.
+
+The estimator loop in early revisions dispatched ONE jit call per coloring —
+re-entering Python, re-shipping split tables, and syncing a scalar back to
+the host every iteration.  This module amortizes all static work across the
+whole (epsilon, delta) estimation run, the way the paper's Algorithm 5
+amortizes the neighbor reduction across color sets:
+
+* **Plans and tables once** — ``CountingPlan``s are built per template and
+  their split tables land on the device a single time, de-duplicated by
+  ``(k, m, m_a)``.
+* **Backend auto-selection** — the SpMM kernel is picked from graph
+  statistics (:func:`select_backend`): edge-list segment-sum for skewed
+  degree distributions, padded ELL for flat ones, dense adjacency for tiny
+  graphs, and the Pallas blocked-ELL kernel for large graphs on TPU.
+* **Batched colorings** — a chunk of ``B`` colorings is fused into the
+  *column* dimension of the DP state: every M matrix is ``(n, B, C)`` and
+  each stage's SpMM is ONE wide neighbor reduction over ``B * C`` columns
+  (``lax.map`` walks the chunks inside a single jit).  This is the paper's
+  "batch more columns into one SpMM" principle applied across colorings —
+  a plain ``vmap`` over the leading axis lowers to batched scatters that
+  XLA:CPU executes far slower than one wide scatter.
+* **Chunk-size picker** — the live M-matrix footprint per coloring is
+  derived from ``CountingPlan.peak_columns()`` (plus the per-stage neighbor
+  gather transient, the real high-water mark for the edge backend) and the
+  chunk size is chosen to keep ``chunk * footprint`` under a configurable
+  VMEM/HBM budget.
+* **Multi-template sharing** — several same-``k`` templates are counted per
+  coloring; sub-template DP states and SpMM products are memoized by the
+  rooted canonical form (AHU string) of the sub-template, so coinciding
+  passive sub-templates (and the leaf one-hot + its neighbor sum, shared by
+  *every* template) are computed once per coloring.
+* **Dtype policy** — fp32 end-to-end, or bf16 storage/gather traffic with
+  fp32 accumulation (paper §VI bf16 discussion).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .colorsets import binom, colorful_probability
+from .counting import CountingPlan, build_counting_plan
+from .graph import Graph
+from .templates import Template
+
+__all__ = [
+    "DtypePolicy",
+    "EstimateResult",
+    "CountingEngine",
+    "select_backend",
+    "pick_chunk_size",
+    "sub_template_canonical",
+    "DEFAULT_MEMORY_BUDGET_BYTES",
+    "MAX_CHUNK_SIZE",
+]
+
+#: Default live-footprint budget for one chunk of colorings (bytes).  Sized
+#: for the CPU/laptop case; on real TPUs pass the per-core VMEM/HBM figure.
+DEFAULT_MEMORY_BUDGET_BYTES = 32 * 1024 * 1024
+
+#: Hard cap on colorings fused into one chunk (diminishing returns beyond).
+MAX_CHUNK_SIZE = 64
+
+#: Graphs at or below this vertex count use the dense-adjacency backend.
+DENSE_MAX_VERTICES = 256
+
+#: ELL is chosen only when padding waste is bounded: ``n * max_deg`` must not
+#: exceed this factor times the true directed edge count.
+ELL_PAD_FACTOR = 1.5
+
+#: On TPU, graphs at least this large route to the Pallas blocked-ELL kernel.
+BLOCKED_MIN_VERTICES = 4096
+
+
+@dataclass(frozen=True)
+class DtypePolicy:
+    """Storage vs accumulation dtypes for the DP state.
+
+    ``store_dtype`` is what M matrices (and therefore the SpMM gather
+    traffic) are kept in; ``accum_dtype`` is what neighbor reductions and
+    eMA FMAs accumulate in.  ``fp32`` keeps both at float32; ``bf16`` halves
+    the storage/gather bytes while accumulating in float32 (paper §VI).
+    """
+
+    store_dtype: jnp.dtype
+    accum_dtype: jnp.dtype
+
+    @staticmethod
+    def resolve(policy: Union[str, "DtypePolicy", jnp.dtype, None]) -> "DtypePolicy":
+        if policy is None:
+            return DtypePolicy(jnp.float32, jnp.float32)
+        if isinstance(policy, DtypePolicy):
+            return policy
+        if isinstance(policy, str):
+            if policy in ("fp32", "float32"):
+                return DtypePolicy(jnp.float32, jnp.float32)
+            if policy in ("bf16", "bfloat16"):
+                return DtypePolicy(jnp.bfloat16, jnp.float32)
+            raise ValueError(f"unknown dtype policy {policy!r} (fp32 | bf16)")
+        dt = jnp.dtype(policy)
+        accum = jnp.float32 if dt in (jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16)) else dt
+        return DtypePolicy(dt, accum)
+
+
+@dataclass
+class EstimateResult:
+    """Per-template estimation summary (kept API-compatible with the old
+    ``estimator.EstimateResult``)."""
+
+    mean: float
+    std: float
+    per_iteration: np.ndarray
+    iterations: int
+
+
+def select_backend(graph: Graph, platform: Optional[str] = None) -> str:
+    """Pick the SpMM backend from graph statistics.
+
+    * ``dense``   — tiny graphs: one (n, n) matmul beats gather/scatter.
+    * ``blocked`` — large graphs on TPU: the Pallas blocked-ELL kernel.
+    * ``ell``     — flat degree distributions where row padding is cheap.
+    * ``edges``   — everything else (skewed / power-law graphs: a hub row
+      would blow the ELL padding up to ``n * max_deg``).
+    """
+    platform = platform or jax.default_backend()
+    if graph.n <= DENSE_MAX_VERTICES:
+        return "dense"
+    if platform == "tpu" and graph.n >= BLOCKED_MIN_VERTICES:
+        return "blocked"
+    max_deg = graph.max_degree()
+    if graph.n * max_deg <= ELL_PAD_FACTOR * max(graph.num_directed, 1):
+        return "ell"
+    return "edges"
+
+
+def pick_chunk_size(
+    bytes_per_coloring: int,
+    memory_budget_bytes: int,
+    max_chunk: int = MAX_CHUNK_SIZE,
+) -> int:
+    """Largest chunk whose live footprint stays under the budget (>= 1)."""
+    if bytes_per_coloring <= 0:
+        return max_chunk
+    return max(1, min(max_chunk, int(memory_budget_bytes // bytes_per_coloring)))
+
+
+def sub_template_canonical(template: Template, vertices: Tuple[int, ...], root: int) -> str:
+    """AHU canonical string of the rooted sub-template induced by ``vertices``.
+
+    Two sub-templates with equal strings have identical count matrices
+    ``M_s`` for every coloring — the key used to share DP state and SpMM
+    products across templates (and across stages within one template).
+    """
+    allowed = set(vertices)
+    adj: Dict[int, List[int]] = {v: [] for v in vertices}
+    for u, v in template.edges:
+        if u in allowed and v in allowed:
+            adj[u].append(v)
+            adj[v].append(u)
+
+    def canon(node: int, parent: int) -> str:
+        forms = sorted(canon(c, node) for c in adj[node] if c != parent)
+        return "(" + "".join(forms) + ")"
+
+    return canon(root, -1)
+
+
+class CountingEngine:
+    """Batched color-coding counting runs over one graph.
+
+    Args:
+      graph: the network.
+      templates: one :class:`Template` or a sequence of same-``k`` templates
+        counted together per coloring (shared leaf one-hot / SpMM products).
+      backend: ``auto`` | ``edges`` | ``ell`` | ``dense`` | ``blocked``.
+        Ignored when ``spmm_fn`` is given.
+      spmm_fn: optional custom ``(n, C) -> (n, C)`` neighbor-sum kernel.
+      dtype_policy: ``fp32`` | ``bf16`` | a :class:`DtypePolicy` | a dtype.
+      memory_budget_bytes: live-footprint budget steering the chunk picker.
+      chunk_size: explicit colorings-per-chunk override (skips the picker).
+      plans: optional pre-built :class:`CountingPlan` per template.
+      block_size / interpret: Pallas blocked-ELL kernel knobs.
+    """
+
+    def __init__(
+        self,
+        graph: Graph,
+        templates: Union[Template, Sequence[Template]],
+        *,
+        backend: str = "auto",
+        spmm_fn: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None,
+        dtype_policy: Union[str, DtypePolicy, jnp.dtype, None] = "fp32",
+        memory_budget_bytes: int = DEFAULT_MEMORY_BUDGET_BYTES,
+        chunk_size: Optional[int] = None,
+        plans: Optional[Sequence[CountingPlan]] = None,
+        block_size: int = 256,
+        interpret: bool = False,
+    ):
+        if isinstance(templates, Template):
+            templates = [templates]
+        if not templates:
+            raise ValueError("CountingEngine needs at least one template")
+        ks = {t.k for t in templates}
+        if len(ks) != 1:
+            raise ValueError(
+                f"all templates must share one k to share colorings, got k={sorted(ks)}"
+            )
+        self.graph = graph
+        self.templates: Tuple[Template, ...] = tuple(templates)
+        self.k = ks.pop()
+        self.policy = DtypePolicy.resolve(dtype_policy)
+        self.memory_budget_bytes = int(memory_budget_bytes)
+        self.interpret = interpret
+
+        if plans is None:
+            self.plans: Tuple[CountingPlan, ...] = tuple(
+                build_counting_plan(t) for t in self.templates
+            )
+        else:
+            if len(plans) != len(self.templates):
+                raise ValueError("plans must align with templates")
+            self.plans = tuple(plans)
+
+        # --- static schedule: canonical keys + de-duplicated device tables.
+        self._canons: List[List[str]] = [
+            [
+                sub_template_canonical(plan.template, sub.vertices, sub.root)
+                for sub in plan.partition.subs
+            ]
+            for plan in self.plans
+        ]
+        table_cache: Dict[Tuple[int, int, int], Tuple[jnp.ndarray, jnp.ndarray]] = {}
+        self._stage_tables: Dict[Tuple[int, int], Tuple[jnp.ndarray, jnp.ndarray]] = {}
+        for p_idx, plan in enumerate(self.plans):
+            for i, table in enumerate(plan.tables):
+                if table is None:
+                    continue
+                key = (table.k, table.m, table.m_a)
+                if key not in table_cache:
+                    table_cache[key] = (jnp.asarray(table.idx_a), jnp.asarray(table.idx_p))
+                self._stage_tables[(p_idx, i)] = table_cache[key]
+
+        norm = colorful_probability(self.k)
+        self._norm_factors = jnp.asarray(
+            [1.0 / (norm * plan.automorphisms) for plan in self.plans], jnp.float32
+        )
+
+        # --- SpMM backend (device-resident operands built once).
+        if spmm_fn is not None:
+            self.backend = "custom"
+            self._custom_spmm = spmm_fn
+        else:
+            self.backend = select_backend(graph) if backend == "auto" else backend
+            self._custom_spmm = None
+        self._build_spmm_operands(block_size)
+
+        self.chunk_size = int(chunk_size) if chunk_size else pick_chunk_size(
+            self.bytes_per_coloring(), self.memory_budget_bytes
+        )
+
+        self._run_fn = None  # built lazily (jit cache)
+
+    # ------------------------------------------------------------------
+    # Memory planning
+    # ------------------------------------------------------------------
+
+    def peak_columns(self) -> int:
+        """Live M columns per coloring across the shared multi-template DP.
+
+        With cross-template memoization every unique sub-template state and
+        SpMM product stays resident for the whole coloring, so the figure is
+        the sum over unique canonical forms — never less than the in-place
+        single-template bound ``CountingPlan.peak_columns()``.
+        """
+        slot_cols: Dict[str, int] = {}
+        prod_cols: Dict[str, int] = {}
+        for p_idx, plan in enumerate(self.plans):
+            for i, sub in enumerate(plan.partition.subs):
+                slot_cols.setdefault(self._canons[p_idx][i], binom(self.k, sub.size))
+                if not sub.is_leaf:
+                    passive = plan.partition.subs[sub.passive]
+                    prod_cols.setdefault(
+                        self._canons[p_idx][sub.passive], binom(self.k, passive.size)
+                    )
+        unique_total = sum(slot_cols.values()) + sum(prod_cols.values())
+        return max(unique_total, max(p.peak_columns() for p in self.plans))
+
+    def _max_passive_columns(self) -> int:
+        cp = 1
+        for plan in self.plans:
+            for sub in plan.partition.subs:
+                if not sub.is_leaf:
+                    passive = plan.partition.subs[sub.passive]
+                    cp = max(cp, binom(self.k, passive.size))
+        return cp
+
+    def bytes_per_coloring(self) -> int:
+        """Estimated live bytes one coloring contributes to a chunk.
+
+        Resident term: ``n * peak_columns`` M-matrix floats.  Transient
+        term: the widest per-stage neighbor gather — ``(edges, C_p)`` for
+        the edge-list backend, ``(n * max_deg, C_p)`` for ELL — which is the
+        true high-water mark on scatter/gather backends.
+        """
+        itemsize = jnp.dtype(self.policy.store_dtype).itemsize
+        max_cp = self._max_passive_columns()
+        if self.backend in ("edges", "custom"):
+            transient = self.graph.num_directed * max_cp
+        elif self.backend == "ell":
+            transient = self.graph.n * max(self.graph.max_degree(), 1) * max_cp
+        else:  # dense / blocked: no edge-wide gather intermediate
+            transient = self.graph.n * max_cp
+        resident = self.graph.n * self.peak_columns()
+        return (transient + resident) * itemsize
+
+    # ------------------------------------------------------------------
+    # SpMM backends — all operate on the fused (n, B, C) layout
+    # ------------------------------------------------------------------
+
+    def _build_spmm_operands(self, block_size: int) -> None:
+        g = self.graph
+        if self.backend == "custom":
+            pass  # the caller's spmm_fn owns its operands
+        elif self.backend == "edges":
+            self._src = jnp.asarray(g.src)
+            self._dst = jnp.asarray(g.dst)
+        elif self.backend == "ell":
+            nbr, mask = g.ell()
+            self._nbr = jnp.asarray(nbr)
+            self._ell_mask = jnp.asarray(mask)
+        elif self.backend == "dense":
+            self._adj = jnp.asarray(g.dense_adjacency())
+        elif self.backend == "blocked":
+            from repro.kernels.spmm_blocked.ops import prepare_operand
+
+            self._blocked_op = prepare_operand(g, block_size=block_size)
+        else:
+            raise ValueError(f"unknown backend {self.backend!r}")
+
+    def _spmm(self, m: jnp.ndarray) -> jnp.ndarray:
+        """One neighbor reduction over ALL fused columns; returns accum dtype."""
+        g, pol = self.graph, self.policy
+        n, b, c = m.shape
+        if self.backend == "custom":
+            out = self._custom_spmm(m.reshape(n, b * c))
+            return out.reshape(n, b, c).astype(pol.accum_dtype)
+        if self.backend == "edges":
+            return jax.ops.segment_sum(
+                m[self._src].astype(pol.accum_dtype),
+                self._dst,
+                num_segments=n,
+                indices_are_sorted=True,
+            )
+        if self.backend == "ell":
+            gathered = m[self._nbr].astype(pol.accum_dtype)  # (n, max_deg, B, C)
+            return jnp.einsum("ndbc,nd->nbc", gathered, self._ell_mask.astype(pol.accum_dtype))
+        if self.backend == "dense":
+            out = jnp.matmul(
+                self._adj.astype(pol.store_dtype),
+                m.reshape(n, b * c),
+                preferred_element_type=pol.accum_dtype,
+            )
+            return out.reshape(n, b, c).astype(pol.accum_dtype)
+        # blocked (Pallas): kernel is 2-D (n, C) — fuse batch into columns.
+        from repro.kernels.spmm_blocked.ops import spmm_blocked
+
+        out = spmm_blocked(
+            self._blocked_op, m.reshape(n, b * c).astype(jnp.float32), interpret=self.interpret
+        )
+        return out.reshape(n, b, c).astype(pol.accum_dtype)
+
+    def _ema(self, m_a, b_mat, idx_a, idx_p):
+        """Vertex-local eMA on fused (n, B, C) state, fp accumulation."""
+        pol = self.policy
+        n, bsz, _ = m_a.shape
+        n_out, n_splits = idx_a.shape
+
+        def body(t, acc):
+            ga = jnp.take(m_a, idx_a[:, t], axis=2).astype(pol.accum_dtype)
+            gp = jnp.take(b_mat, idx_p[:, t], axis=2).astype(pol.accum_dtype)
+            return acc + ga * gp
+
+        acc = jax.lax.fori_loop(
+            0, n_splits, body, jnp.zeros((n, bsz, n_out), pol.accum_dtype)
+        )
+        return acc.astype(pol.store_dtype)
+
+    # ------------------------------------------------------------------
+    # The fused multi-template DP
+    # ------------------------------------------------------------------
+
+    def _raw_counts_batch(self, colors: jnp.ndarray) -> jnp.ndarray:
+        """(B, n) colorings -> (B, T) un-normalized colorful totals.
+
+        Sub-template states and SpMM products are memoized by canonical
+        form, so templates sharing passive sub-templates (and every
+        template's leaf stage) reuse one computation per coloring.
+        """
+        pol = self.policy
+        leaf = jax.nn.one_hot(colors.T, self.k, dtype=pol.store_dtype)  # (n, B, k)
+        slots: Dict[str, jnp.ndarray] = {}
+        prods: Dict[str, jnp.ndarray] = {}
+        totals = []
+        for p_idx, plan in enumerate(self.plans):
+            canons = self._canons[p_idx]
+            for i, sub in enumerate(plan.partition.subs):
+                key = canons[i]
+                if key in slots:
+                    continue
+                if sub.is_leaf:
+                    slots[key] = leaf
+                    continue
+                p_key = canons[sub.passive]
+                if p_key not in prods:
+                    prods[p_key] = self._spmm(slots[p_key])
+                idx_a, idx_p = self._stage_tables[(p_idx, i)]
+                slots[key] = self._ema(slots[canons[sub.active]], prods[p_key], idx_a, idx_p)
+            root = slots[canons[plan.partition.root_index]].astype(pol.accum_dtype)
+            # reduce color sets first, then vertices: the per-coloring order
+            # is independent of the batch size (bit-exact across chunkings)
+            totals.append(root.sum(axis=2).sum(axis=0).astype(jnp.float32))
+        return jnp.stack(totals, axis=1)  # (B, T)
+
+    def _counts_for_keys_chunk(self, keys_chunk: jnp.ndarray) -> jnp.ndarray:
+        colors = jax.vmap(
+            lambda key: jax.random.randint(key, (self.graph.n,), 0, self.k)
+        )(keys_chunk)
+        return self._raw_counts_batch(colors) * self._norm_factors[None, :]
+
+    def _get_run_fn(self):
+        if self._run_fn is None:
+            self._run_fn = jax.jit(
+                lambda keys: jax.lax.map(self._counts_for_keys_chunk, keys)
+            )
+        return self._run_fn
+
+    # ------------------------------------------------------------------
+    # Public API
+    # ------------------------------------------------------------------
+
+    def raw_counts(self, colors) -> jnp.ndarray:
+        """(n,) coloring -> (T,) raw colorful totals (test/inspection hook)."""
+        colors = jnp.asarray(colors)
+        return self._raw_counts_batch(colors[None, :])[0]
+
+    def count_keys(self, keys) -> np.ndarray:
+        """Normalized per-iteration estimates for explicit PRNG keys.
+
+        ``keys``: (iters, 2) uint32 PRNG keys (``jax.random.split`` output).
+        Returns an (iters, T) float64 host array; all device work happens in
+        one jit call (chunked ``lax.map`` over ``chunk_size``-wide batches).
+        """
+        keys = jnp.asarray(keys)
+        iters = keys.shape[0]
+        chunk = max(1, min(self.chunk_size, iters))
+        n_chunks = -(-iters // chunk)
+        pad = n_chunks * chunk - iters
+        if pad:
+            keys = jnp.concatenate([keys, keys[-1:].repeat(pad, axis=0)], axis=0)
+        vals = self._get_run_fn()(keys.reshape(n_chunks, chunk, *keys.shape[1:]))
+        flat = np.asarray(vals, dtype=np.float64).reshape(n_chunks * chunk, -1)
+        return flat[:iters]
+
+    def estimate(self, iterations: int = 32, seed: int = 0) -> List[EstimateResult]:
+        """Run ``iterations`` random colorings; one :class:`EstimateResult`
+        per template (paper Algorithm 1, batched)."""
+        keys = jax.random.split(jax.random.PRNGKey(seed), iterations)
+        vals = self.count_keys(keys)  # (iters, T)
+        return [
+            EstimateResult(
+                mean=float(vals[:, t].mean()),
+                std=float(vals[:, t].std()),
+                per_iteration=vals[:, t],
+                iterations=iterations,
+            )
+            for t in range(len(self.templates))
+        ]

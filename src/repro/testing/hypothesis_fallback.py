@@ -1,0 +1,166 @@
+"""Minimal, dependency-free stand-in for the ``hypothesis`` package.
+
+The property tests in ``tests/`` use a small, stable subset of hypothesis:
+``@given(**strategies)``, ``@settings(max_examples=..., deadline=...)``,
+``st.integers(min_value=..., max_value=...)``, and ``st.data()`` with
+``data.draw(...)``.  When the real package is installed it is always
+preferred (see ``tests/conftest.py``); this module only exists so the suite
+still collects and runs in minimal environments.
+
+Semantics of the fallback: each ``@given`` test runs ``max_examples``
+examples drawn from a **fixed-seed** PRNG derived from the test name, so
+failures are reproducible run-to-run (no shrinking, no example database).
+"""
+
+from __future__ import annotations
+
+import random
+import sys
+import types
+from typing import Any, Callable, Dict, Optional, Sequence
+
+__all__ = ["given", "settings", "strategies", "install", "DEFAULT_MAX_EXAMPLES"]
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class SearchStrategy:
+    """Base strategy: knows how to produce one example from a PRNG."""
+
+    def example_from(self, rng: random.Random) -> Any:
+        raise NotImplementedError
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value: Optional[int] = None, max_value: Optional[int] = None):
+        self.min_value = -(2**31) if min_value is None else min_value
+        self.max_value = 2**31 - 1 if max_value is None else max_value
+
+    def example_from(self, rng: random.Random) -> int:
+        return rng.randint(self.min_value, self.max_value)
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, min_value: float = 0.0, max_value: float = 1.0, **_ignored):
+        self.min_value = min_value
+        self.max_value = max_value
+
+    def example_from(self, rng: random.Random) -> float:
+        return rng.uniform(self.min_value, self.max_value)
+
+
+class _Booleans(SearchStrategy):
+    def example_from(self, rng: random.Random) -> bool:
+        return rng.random() < 0.5
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements: Sequence[Any]):
+        self.elements = list(elements)
+
+    def example_from(self, rng: random.Random) -> Any:
+        return rng.choice(self.elements)
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elements: SearchStrategy, min_size: int = 0, max_size: int = 10, **_ignored):
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = max_size
+
+    def example_from(self, rng: random.Random) -> list:
+        size = rng.randint(self.min_size, self.max_size)
+        return [self.elements.example_from(rng) for _ in range(size)]
+
+
+class DataObject:
+    """Interactive draw handle (the fallback for ``st.data()``)."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: SearchStrategy, label: str = "") -> Any:
+        return strategy.example_from(self._rng)
+
+
+class _DataStrategy(SearchStrategy):
+    def example_from(self, rng: random.Random) -> DataObject:
+        return DataObject(rng)
+
+
+def settings(*args, max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    """Decorator recording ``max_examples``; order-independent wrt @given."""
+
+    def decorate(fn: Callable) -> Callable:
+        fn._shim_settings = {"max_examples": max_examples}
+        return fn
+
+    if args and callable(args[0]):  # bare @settings usage
+        return decorate(args[0])
+    return decorate
+
+
+def given(*arg_strategies: SearchStrategy, **kw_strategies: SearchStrategy):
+    """Run the test over fixed-seed examples of the declared strategies."""
+
+    def decorate(fn: Callable) -> Callable:
+        def wrapper():
+            conf = getattr(wrapper, "_shim_settings", None) or getattr(
+                fn, "_shim_settings", {}
+            )
+            max_examples = conf.get("max_examples", DEFAULT_MAX_EXAMPLES)
+            for example in range(max_examples):
+                rng = random.Random(f"{fn.__module__}.{fn.__qualname__}:{example}")
+                args = [s.example_from(rng) for s in arg_strategies]
+                kwargs = {name: s.example_from(rng) for name, s in kw_strategies.items()}
+                try:
+                    fn(*args, **kwargs)
+                except Exception as err:
+                    raise AssertionError(
+                        f"falsifying example #{example} for {fn.__qualname__}: "
+                        f"args={args} kwargs={kwargs}"
+                    ) from err
+
+        # NOTE: no functools.wraps — pytest must see the zero-arg signature,
+        # not the strategy parameters of the wrapped test.
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.hypothesis_fallback = True
+        return wrapper
+
+    return decorate
+
+
+def _build_strategies_module() -> types.ModuleType:
+    st = types.ModuleType("hypothesis.strategies")
+    st.SearchStrategy = SearchStrategy
+    st.integers = lambda min_value=None, max_value=None: _Integers(min_value, max_value)
+    st.floats = lambda *a, **kw: _Floats(*a, **kw)
+    st.booleans = lambda: _Booleans()
+    st.sampled_from = lambda elements: _SampledFrom(elements)
+    st.lists = lambda elements, **kw: _Lists(elements, **kw)
+    st.data = lambda: _DataStrategy()
+    return st
+
+
+#: module-level alias so ``from hypothesis import strategies as st`` works
+strategies = _build_strategies_module()
+
+
+def install() -> None:
+    """Register this fallback as ``hypothesis`` in ``sys.modules``.
+
+    A no-op when the real package is importable — the real thing always wins.
+    """
+    if "hypothesis" in sys.modules:
+        return
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = strategies
+    mod.HealthCheck = types.SimpleNamespace(too_slow=None, data_too_large=None)
+    mod.__is_repro_fallback__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

@@ -1,0 +1,20 @@
+"""Test bootstrap: make ``src`` importable and soften optional deps.
+
+``hypothesis`` is an *optional* dev dependency (requirements-dev.txt): when
+it is missing, a fixed-seed fallback implementing the subset the suite uses
+is installed so all modules still collect and run.
+"""
+
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+try:
+    import hypothesis  # noqa: F401  (the real package always wins)
+except ImportError:
+    from repro.testing import hypothesis_fallback
+
+    hypothesis_fallback.install()

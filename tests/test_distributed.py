@@ -26,6 +26,7 @@ def test_distributed_count_matches_single_device():
     out = _run_child(
         r"""
 import jax, jax.numpy as jnp, numpy as np
+from repro.compat import set_mesh, shard_map
 from functools import partial
 from repro.core import (build_counting_plan, count_colorful_vectorized, get_template,
                         rmat_graph, spmm_edges)
@@ -38,7 +39,7 @@ plan = build_counting_plan(t)
 sg = shard_graph(g, 8)
 fn = make_distributed_count_fn(plan, mesh, sg.n_padded, sg.edges_per_shard, column_batch=8)
 colors = np.random.default_rng(1).integers(0, t.k, size=sg.n_padded).astype(np.int32)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     dist = float(fn(jnp.asarray(colors), jnp.asarray(sg.src), jnp.asarray(sg.dst_local),
                     jnp.asarray(sg.edge_mask), plan_tables(plan)))
 ref = float(count_colorful_vectorized(plan, jnp.asarray(colors[:g.n]),
@@ -54,6 +55,7 @@ def test_distributed_count_balance_degrees():
     out = _run_child(
         r"""
 import jax, jax.numpy as jnp, numpy as np
+from repro.compat import set_mesh, shard_map
 from functools import partial
 from repro.core import (build_counting_plan, count_colorful_vectorized, get_template,
                         rmat_graph, spmm_edges)
@@ -77,7 +79,7 @@ perm = np.empty(g.n, dtype=np.int64); perm[order] = np.arange(g.n)
 colors_bal = np.zeros(sg_bal.n_padded, np.int32)
 colors_bal[:g.n][perm] = colors_g  # color follows the vertex relabeling
 fn = make_distributed_count_fn(plan, mesh, sg_bal.n_padded, sg_bal.edges_per_shard, column_batch=8)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     dist = float(fn(jnp.asarray(colors_bal), jnp.asarray(sg_bal.src),
                     jnp.asarray(sg_bal.dst_local), jnp.asarray(sg_bal.edge_mask), plan_tables(plan)))
 assert abs(dist - ref) / max(abs(ref), 1e-9) < 1e-5, (dist, ref)
@@ -93,6 +95,7 @@ def test_streamed_ema_equals_baseline():
     out = _run_child(
         r"""
 import jax, jax.numpy as jnp, numpy as np
+from repro.compat import set_mesh, shard_map
 from repro.core import build_counting_plan, get_template, rmat_graph
 from repro.core.distributed import (build_streamed_tables, make_distributed_count_fn,
                                     plan_tables, shard_graph)
@@ -107,7 +110,7 @@ args = (colors, jnp.asarray(sg.src), jnp.asarray(sg.dst_local), jnp.asarray(sg.e
 f_base = make_distributed_count_fn(plan, mesh, sg.n_padded, sg.edges_per_shard, column_batch=8)
 f_str = make_distributed_count_fn(plan, mesh, sg.n_padded, sg.edges_per_shard,
                                   column_batch=8, ema_mode="streamed")
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     base = float(f_base(*args, plan_tables(plan)))
     streamed = float(f_str(*args, build_streamed_tables(plan, 8)))
 assert abs(base - streamed) / max(abs(base), 1e-9) < 1e-6, (base, streamed)
@@ -124,6 +127,7 @@ def test_moe_ep_shard_map_matches_dense_path():
         r"""
 import dataclasses
 import jax, jax.numpy as jnp, numpy as np
+from repro.compat import set_mesh, shard_map
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.configs import dbrx_132b
 from repro.models import layers as L
@@ -141,7 +145,7 @@ def param_sharding(a):
     spec = P("model", None, None) if a.ndim == 3 else P(*([None] * a.ndim))
     return NamedSharding(mesh, spec)
 
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     params_d = jax.device_put(params, jax.tree.map(param_sharding, params))
     x_d = jax.device_put(x, NamedSharding(mesh, act_spec))
     @jax.jit
@@ -160,6 +164,7 @@ def test_compressed_psum_preserves_mean():
     out = _run_child(
         r"""
 import jax, jax.numpy as jnp, numpy as np
+from repro.compat import set_mesh, shard_map
 from functools import partial
 from jax.sharding import PartitionSpec as P
 from repro.train.compression import compressed_psum
@@ -167,11 +172,11 @@ from repro.train.compression import compressed_psum
 mesh = jax.make_mesh((8,), ("data",))
 def f(x, res):
     return compressed_psum(x, ("data",), res)
-g = jax.shard_map(f, mesh=mesh, in_specs=(P("data"), P("data")), out_specs=(P("data"), P("data")))
+g = shard_map(f, mesh=mesh, in_specs=(P("data"), P("data")), out_specs=(P("data"), P("data")))
 rng = np.random.default_rng(0)
 x = jnp.asarray(rng.standard_normal((8, 64)).astype(np.float32))
 res = jnp.zeros_like(x)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     mean, new_res = g(x, res)
 true_mean = np.asarray(x).mean(0)
 got = np.asarray(mean)[0]
@@ -189,6 +194,7 @@ def test_lm_pjit_train_step_on_mesh():
         r"""
 import dataclasses
 import jax, jax.numpy as jnp
+from repro.compat import set_mesh
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.configs import granite_8b
 from repro.models import transformer as T
@@ -198,7 +204,7 @@ cfg = dataclasses.replace(granite_8b.SMOKE_CONFIG, n_heads=8, n_kv_heads=4, scan
 mesh = jax.make_mesh((2, 4), ("data", "model"))
 params = T.init_params(jax.random.PRNGKey(0), cfg)
 pspecs = T.param_pspecs(cfg, model_size=4)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     params = jax.device_put(params, jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
                                                  is_leaf=lambda x: isinstance(x, P)))
     opt = adamw_init(params)

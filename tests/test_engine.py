@@ -1,0 +1,222 @@
+"""CountingEngine tests: backend auto-selection, batched-vs-sequential
+bit-exactness, multi-template sharing, and the memory-budget chunk picker."""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CountingEngine,
+    build_counting_plan,
+    count_colorful_vectorized,
+    get_template,
+    grid_graph,
+    pick_chunk_size,
+    rmat_graph,
+    select_backend,
+    spmm_edges,
+)
+from repro.core.engine import DtypePolicy, MAX_CHUNK_SIZE, sub_template_canonical
+from repro.core.graph import Graph
+
+
+def _star_graph(n: int) -> Graph:
+    """Hub 0 connected to all others — the ELL worst case (max_deg = n-1)."""
+    src = np.concatenate([np.zeros(n - 1, np.int32), np.arange(1, n, dtype=np.int32)])
+    dst = np.concatenate([np.arange(1, n, dtype=np.int32), np.zeros(n - 1, np.int32)])
+    order = np.lexsort((src, dst))
+    return Graph(n=n, src=src[order], dst=dst[order])
+
+
+# ---------------------------------------------------------------------------
+# Backend auto-selection
+# ---------------------------------------------------------------------------
+
+
+def test_backend_star_graph_picks_edges_not_ell():
+    # high max-degree: ELL padding would cost n * (n-1) slots for 2(n-1) edges
+    assert select_backend(_star_graph(600), platform="cpu") == "edges"
+
+
+def test_backend_flat_degrees_pick_ell():
+    # grid: max_deg == 4 == avg degree, padding waste is bounded
+    assert select_backend(grid_graph(30, 30), platform="cpu") == "ell"
+
+
+def test_backend_tiny_graph_picks_dense():
+    assert select_backend(grid_graph(8, 8), platform="cpu") == "dense"
+
+
+def test_backend_large_tpu_graph_picks_blocked():
+    assert select_backend(rmat_graph(8192, 40_000, seed=0), platform="tpu") == "blocked"
+
+
+def test_engine_resolves_auto_backend():
+    eng = CountingEngine(_star_graph(600), get_template("u3"))
+    assert eng.backend == "edges"
+
+
+# ---------------------------------------------------------------------------
+# Correctness vs the reference DP, across backends
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["edges", "ell", "dense"])
+def test_engine_raw_counts_match_reference(backend):
+    g = rmat_graph(300, 1500, seed=2)
+    t = get_template("u6")
+    plan = build_counting_plan(t)
+    colors = np.random.default_rng(0).integers(0, t.k, size=g.n)
+    ref = float(
+        count_colorful_vectorized(
+            plan, jnp.asarray(colors), partial(spmm_edges, jnp.asarray(g.src), jnp.asarray(g.dst), g.n)
+        )
+    )
+    eng = CountingEngine(g, [t], backend=backend)
+    got = float(eng.raw_counts(colors)[0])
+    assert got == pytest.approx(ref, rel=1e-5)
+
+
+def test_engine_blocked_pallas_backend_matches_edges():
+    g = rmat_graph(200, 800, seed=3)
+    t = get_template("u5-2")
+    keys = jax.random.split(jax.random.PRNGKey(1), 2)
+    ref = CountingEngine(g, [t], backend="edges", chunk_size=2).count_keys(keys)
+    got = CountingEngine(g, [t], backend="blocked", interpret=True, chunk_size=2).count_keys(keys)
+    assert np.allclose(got, ref, rtol=1e-5)
+
+
+def test_engine_custom_spmm_fn():
+    g = rmat_graph(300, 1200, seed=4)
+    t = get_template("u5-1")
+    keys = jax.random.split(jax.random.PRNGKey(2), 3)
+    ref = CountingEngine(g, [t], backend="edges", chunk_size=3).count_keys(keys)
+    custom = partial(spmm_edges, jnp.asarray(g.src), jnp.asarray(g.dst), g.n)
+    got = CountingEngine(g, [t], spmm_fn=custom, chunk_size=3).count_keys(keys)
+    assert got.shape == ref.shape
+    assert np.allclose(got, ref, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Batched vs sequential: same keys => bit-exact same estimates
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["edges", "ell"])
+def test_batched_equals_sequential_bit_exact(backend):
+    g = rmat_graph(400, 2400, seed=5)
+    t = get_template("u6")
+    keys = jax.random.split(jax.random.PRNGKey(0), 13)  # ragged: 13 = 2*5 + 3
+    batched = CountingEngine(g, [t], backend=backend, chunk_size=5).count_keys(keys)
+    sequential = CountingEngine(g, [t], backend=backend, chunk_size=1).count_keys(keys)
+    assert np.array_equal(batched, sequential)
+
+
+def test_estimate_deterministic_across_chunk_sizes():
+    g = rmat_graph(300, 1500, seed=6)
+    t = get_template("u5-2")
+    r8 = CountingEngine(g, [t], chunk_size=8).estimate(iterations=16, seed=3)[0]
+    r3 = CountingEngine(g, [t], chunk_size=3).estimate(iterations=16, seed=3)[0]
+    assert np.array_equal(r8.per_iteration, r3.per_iteration)
+    assert r8.mean == r3.mean
+
+
+# ---------------------------------------------------------------------------
+# Multi-template sharing
+# ---------------------------------------------------------------------------
+
+
+def test_multi_template_matches_independent_runs():
+    g = rmat_graph(300, 1500, seed=2)
+    treelets = [get_template(n) for n in ("path6", "star6", "bintree6", "u6")]
+    keys = jax.random.split(jax.random.PRNGKey(7), 8)
+    multi = CountingEngine(g, treelets, chunk_size=4).count_keys(keys)
+    assert multi.shape == (8, len(treelets))
+    for ti, t in enumerate(treelets):
+        single = CountingEngine(g, [t], chunk_size=4).count_keys(keys)[:, 0]
+        assert np.allclose(multi[:, ti], single, rtol=1e-6), t.name
+
+
+def test_multi_template_shares_subtemplate_state():
+    """Isomorphic sub-templates across templates map to one canonical key,
+    so the shared DP computes strictly fewer stages than the independent
+    runs would (leaf + coinciding passive sub-templates)."""
+    g = rmat_graph(200, 800, seed=1)
+    treelets = [get_template(n) for n in ("path6", "star6", "u6")]
+    eng = CountingEngine(g, treelets)
+    unique_keys = {k for canons in eng._canons for k in canons}
+    total_subs = sum(len(c) for c in eng._canons)
+    assert len(unique_keys) < total_subs  # sharing actually happened
+    # all leaves collapse onto a single canonical key
+    leaf_key = sub_template_canonical(treelets[0], (0,), 0)
+    assert leaf_key == "()"
+    assert sum(1 for c in eng._canons for k in c if k == leaf_key) >= 3
+
+
+def test_multi_template_requires_same_k():
+    g = grid_graph(6, 6)
+    with pytest.raises(ValueError, match="share one k"):
+        CountingEngine(g, [get_template("u3"), get_template("u6")])
+
+
+# ---------------------------------------------------------------------------
+# Chunk-size picker / memory budget
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_picker_respects_tiny_budget():
+    g = rmat_graph(300, 1500, seed=2)
+    t = get_template("u6")
+    eng = CountingEngine(g, [t], memory_budget_bytes=1)
+    assert eng.chunk_size == 1
+    # ... and the engine still produces correct results at chunk 1
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    wide = CountingEngine(g, [t], memory_budget_bytes=1 << 30)
+    assert wide.chunk_size > 1
+    assert np.array_equal(eng.count_keys(keys), wide.count_keys(keys))
+
+
+def test_chunk_picker_scales_with_budget_and_is_capped():
+    assert pick_chunk_size(1000, 10_000) == 10
+    assert pick_chunk_size(1000, 1) == 1
+    assert pick_chunk_size(1, 1 << 40) == MAX_CHUNK_SIZE
+    # bigger per-coloring footprint => smaller chunk at a fixed budget
+    g = rmat_graph(2048, 20_000, seed=1)
+    small_t = CountingEngine(g, [get_template("u5-1")])
+    big_t = CountingEngine(g, [get_template("u7")])
+    assert big_t.bytes_per_coloring() > small_t.bytes_per_coloring()
+    assert big_t.chunk_size <= small_t.chunk_size
+
+
+def test_peak_columns_upper_bounds_plan_peak():
+    t = get_template("u7")
+    plan = build_counting_plan(t)
+    eng = CountingEngine(rmat_graph(300, 1200, seed=0), [t], plans=[plan])
+    assert eng.peak_columns() >= plan.peak_columns()
+
+
+# ---------------------------------------------------------------------------
+# Dtype policy
+# ---------------------------------------------------------------------------
+
+
+def test_dtype_policy_resolution():
+    p32 = DtypePolicy.resolve("fp32")
+    assert p32.store_dtype == jnp.float32 and p32.accum_dtype == jnp.float32
+    p16 = DtypePolicy.resolve("bf16")
+    assert p16.store_dtype == jnp.bfloat16 and p16.accum_dtype == jnp.float32
+    with pytest.raises(ValueError):
+        DtypePolicy.resolve("fp8")
+
+
+def test_bf16_policy_close_to_fp32():
+    g = rmat_graph(300, 1500, seed=2)
+    t = get_template("u6")
+    colors = np.random.default_rng(0).integers(0, t.k, size=g.n)
+    f32 = float(CountingEngine(g, [t]).raw_counts(colors)[0])
+    b16 = float(CountingEngine(g, [t], dtype_policy="bf16").raw_counts(colors)[0])
+    # bf16 storage with fp32 accumulation: ~0.4% worst-case rounding (paper §VI)
+    assert b16 == pytest.approx(f32, rel=2e-2)
