@@ -27,28 +27,26 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json, time
 import jax, jax.numpy as jnp, numpy as np
 from repro import compat
-from repro.core import build_counting_plan, get_template, rmat_graph
-from repro.core.distributed import (make_distributed_count_fn, plan_tables,
-                                    plan_table_specs, shard_graph, distributed_input_specs)
+from repro.core import CountingEngine, get_template, rmat_graph
 from repro.launch.roofline import collective_wire_bytes
 
 g = rmat_graph(16384, 160_000, seed=7)
 t = get_template("u7")
-plan = build_counting_plan(t)
+colors = jnp.asarray(np.random.default_rng(0).integers(0, t.k, size=(1, g.n)))
 out = []
 for n_dev in (1, 2, 4, 8):
     mesh = jax.make_mesh((n_dev,), ("data",))
-    sg = shard_graph(g, n_dev)
-    fn = make_distributed_count_fn(plan, mesh, sg.n_padded, sg.edges_per_shard, column_batch=8)
-    tables = plan_tables(plan)
-    colors = jnp.asarray(np.random.default_rng(0).integers(0, t.k, size=sg.n_padded))
-    args = (colors, jnp.asarray(sg.src), jnp.asarray(sg.dst_local), jnp.asarray(sg.edge_mask), tables)
+    # the engine's mesh backend: one-coloring chunk for the per-shard probe
+    eng = CountingEngine(g, [t], backend="mesh", mesh=mesh, column_batch=8,
+                         ema_mode="loop", chunk_size=1)
     with compat.set_mesh(mesh):
-        jitted = jax.jit(fn)
-        compiled = jitted.lower(*args).compile()
-        val = float(jitted(*args))
-        t0 = time.perf_counter(); jax.block_until_ready(jitted(*args)); dt = time.perf_counter() - t0
+        jitted = jax.jit(eng.backend_impl.counts_for_colors)
+        compiled = jitted.lower(colors).compile()
+        val = float(jitted(colors)[0, 0])
+        t0 = time.perf_counter(); jax.block_until_ready(jitted(colors)); dt = time.perf_counter() - t0
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # JAX 0.4.x returns [dict]
+        ca = ca[0] if ca else {}
     coll, _ = collective_wire_bytes(compiled.as_text())
     out.append({
         "devices": n_dev,

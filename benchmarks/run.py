@@ -4,7 +4,9 @@
 
 Emits ``name,us_per_call,derived`` CSV rows, and writes every recorded row
 (plus the derived engine speedups) to ``BENCH_counting.json`` so the perf
-trajectory is tracked across PRs.
+trajectory is tracked across PRs.  Before overwriting, this run's rows are
+diffed against the previous file's and a regression/trend table is printed
+(see README §Benchmarks for the workflow).
 """
 
 from __future__ import annotations
@@ -27,13 +29,65 @@ BENCHES = {
     "kernels": bench_kernels.run,          # Table IV analogue (SpMM/eMA)
 }
 
+#: Rows slower than the previous run by more than this fraction are flagged.
+REGRESSION_THRESHOLD = 0.10
+
+
+def print_trend(prev_rows: dict, threshold: float = REGRESSION_THRESHOLD) -> int:
+    """Diff this run's rows against the previous ``BENCH_counting.json``.
+
+    Prints a per-row trend table (previous vs current us_per_call, delta %)
+    to stderr, flags rows slower by more than ``threshold``, and returns the
+    number of flagged regressions.  Micro-benchmarks on shared CI hosts are
+    noisy — the flag is a prompt to re-run, not a hard failure.
+    """
+    if not prev_rows:
+        print("trend: no previous BENCH_counting.json — baseline run", file=sys.stderr)
+        return 0
+    width = max((len(name) for name, _, _ in ROWS), default=20)
+    regressions = 0
+    fresh = 0
+    print(f"\n== trend vs previous run ({len(ROWS)} rows) ==", file=sys.stderr)
+    print(f"{'name':<{width}}  {'prev_us':>12}  {'now_us':>12}  {'delta':>8}", file=sys.stderr)
+    for name, us, _ in ROWS:
+        prev = prev_rows.get(name)
+        prev_us = prev.get("us_per_call") if prev else None
+        if prev_us is None:
+            fresh += 1
+            print(f"{name:<{width}}  {'-':>12}  {us:>12.1f}  {'new':>8}", file=sys.stderr)
+            continue
+        prev_us = float(prev_us)
+        if prev_us == 0.0:
+            # legit zero baseline (e.g. derived-only rows): nothing to diff
+            print(f"{name:<{width}}  {prev_us:>12.1f}  {us:>12.1f}  {'n/a':>8}", file=sys.stderr)
+            continue
+        delta = (us - prev_us) / prev_us
+        flag = ""
+        if delta > threshold:
+            flag = "  <-- REGRESSION"
+            regressions += 1
+        print(
+            f"{name:<{width}}  {prev_us:>12.1f}  {us:>12.1f}  {delta:>+7.1%}{flag}",
+            file=sys.stderr,
+        )
+    if fresh:
+        print(f"trend: {fresh} new row(s) with no previous record", file=sys.stderr)
+    if regressions:
+        print(
+            f"trend: {regressions} row(s) regressed beyond {threshold:.0%} — "
+            "re-run to rule out machine noise",
+            file=sys.stderr,
+        )
+    return regressions
+
 
 def emit_json(path: str = "BENCH_counting.json") -> None:
     """Persist all recorded rows + headline engine speedups for trend tracking.
 
     Merges into an existing file (rows keyed by name, new results win) so a
     partial ``--only`` run refreshes its own rows without clobbering the
-    speedup record of the last full run.
+    speedup record of the last full run.  The previous file's rows are
+    diffed against this run's first (:func:`print_trend`).
     """
     existing_rows: dict = {}
     speedups: dict = {}
@@ -44,6 +98,7 @@ def emit_json(path: str = "BENCH_counting.json") -> None:
         speedups = dict(prev.get("engine_speedup_vs_loop", {}))
     except (FileNotFoundError, json.JSONDecodeError, KeyError, TypeError):
         pass
+    print_trend(existing_rows)
     for name, us, derived in ROWS:
         existing_rows[name] = {"name": name, "us_per_call": us, "derived": derived}
         m = re.match(r"engine/(.+)/batched(\d+)$", name)

@@ -1,81 +1,63 @@
-"""Distributed SUBGRAPH2VEC on an 8-device host mesh (Fig 13 structure).
+"""Distributed SUBGRAPH2VEC through the CountingEngine mesh backend.
 
-Runs the shard_map DP (vertex 1-D partition + column-batched all-gather
-SpMM) and cross-checks against the single-device count.
+Runs the engine's ``mesh`` backend (vertex 1-D partition + column-batched
+all-gather SpMM + streamed eMA under ``shard_map``) on a multi-device host
+mesh and cross-checks against the single-device local engine.
 
   PYTHONPATH=src python examples/distributed_counting.py
+
+The device count comes from ``XLA_FLAGS`` (8 virtual host devices by
+default; set ``--xla_force_host_platform_device_count=N`` to change it).
 """
 
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-from functools import partial
-
 import jax
-import jax.numpy as jnp
 import numpy as np
-from repro import compat
 
-from repro.core import (
-    build_counting_plan,
-    count_colorful_vectorized,
-    get_template,
-    normalize_count,
-    rmat_graph,
-    spmm_edges,
-)
-from repro.core.distributed import make_distributed_count_fn, plan_tables, shard_graph
+from repro.core import CountingEngine, get_template, rmat_graph
 
 
 def main():
-    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    mesh = jax.make_mesh((len(jax.devices()),), ("dev",))
     print(f"mesh: {dict(mesh.shape)} = {mesh.devices.size} devices")
 
-    graph = rmat_graph(4096, 40_000, seed=11)
+    graph = rmat_graph(2048, 20_000, seed=11)
     template = get_template("u7")
-    plan = build_counting_plan(template)
-    sharded = shard_graph(graph, mesh.devices.size, balance_degrees=True)
-    print(f"graph: {graph.n} vertices; {sharded.edges_per_shard} edges/shard (degree-balanced)")
 
-    count_fn = make_distributed_count_fn(
-        plan, mesh, sharded.n_padded, sharded.edges_per_shard, column_batch=16
+    # The mesh backend shards the graph once (degree-balanced row partition),
+    # builds the split tables once, and runs chunks of colorings batched
+    # through the column-batched all-gather SpMM + streamed eMA.
+    engine = CountingEngine(
+        graph,
+        [template],
+        backend="mesh",
+        mesh=mesh,
+        column_batch=16,
+        balance_degrees=True,
     )
-    rng = np.random.default_rng(0)
-    # NB: shard_graph(balance_degrees=True) relabels vertices; colors are iid
-    # so any assignment is valid for the estimate.
-    colors = jnp.asarray(rng.integers(0, template.k, size=sharded.n_padded))
-
-    with compat.set_mesh(mesh):
-        raw = count_fn(
-            colors,
-            jnp.asarray(sharded.src),
-            jnp.asarray(sharded.dst_local),
-            jnp.asarray(sharded.edge_mask),
-            plan_tables(plan),
-        )
-        est = float(normalize_count(raw, plan))
-    print(f"distributed colorful-count estimate (1 coloring): {est:.4g}")
-
-    # single-device reference over the same coloring (identity labeling)
-    plain = shard_graph(graph, mesh.devices.size)  # no relabel
-    with compat.set_mesh(mesh):
-        raw_plain = count_fn(
-            colors,
-            jnp.asarray(plain.src),
-            jnp.asarray(plain.dst_local),
-            jnp.asarray(plain.edge_mask),
-            plan_tables(plan),
-        )
-    ref = float(
-        count_colorful_vectorized(
-            plan,
-            colors[: graph.n],
-            partial(spmm_edges, jnp.asarray(graph.src), jnp.asarray(graph.dst), graph.n),
-        )
+    sharded = engine.backend_impl.sharded
+    print(
+        f"graph: {graph.n} vertices; {sharded.edges_per_shard} edges/shard "
+        f"(degree-balanced); chunk_size={engine.chunk_size} "
+        f"column_batch={engine.backend_impl.column_batch}"
     )
-    rel = abs(float(raw_plain) - ref) / max(abs(ref), 1e-9)
-    print(f"distributed vs single-device: {float(raw_plain):.6g} vs {ref:.6g} (rel err {rel:.2e})")
+
+    result = engine.estimate(iterations=8, seed=0)[0]
+    print(
+        f"distributed estimate: {result.mean:.4g} "
+        f"(std over colorings {result.std:.3g}, {result.iterations} iterations)"
+    )
+
+    # cross-check one fixed coloring against the single-device local engine
+    colors = np.random.default_rng(0).integers(0, template.k, size=graph.n)
+    local = CountingEngine(graph, [template], backend="edges")
+    raw_mesh = float(engine.raw_counts(colors)[0])
+    raw_local = float(local.raw_counts(colors)[0])
+    rel = abs(raw_mesh - raw_local) / max(abs(raw_local), 1e-9)
+    print(f"mesh vs local engine: {raw_mesh:.6g} vs {raw_local:.6g} (rel err {rel:.2e})")
     assert rel < 1e-5
 
 

@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# CI / local gate: tier-1 test suite + a ~30s benchmark smoke.
+# CI / local gate: tier-1 test suite + a ~30s benchmark smoke + a
+# multi-device smoke of the engine's mesh backend (4 virtual host devices).
 #
 #   bash scripts/check.sh
 #
@@ -15,5 +16,23 @@ python -m pytest -x -q
 
 echo "== smoke: batched engine vs per-coloring loop =="
 python -m benchmarks.bench_counting --quick
+
+echo "== smoke: mesh backend on 4 virtual devices =="
+XLA_FLAGS="--xla_force_host_platform_device_count=4" python - <<'PY'
+import jax, numpy as np
+from repro.core import CountingEngine, get_template, rmat_graph
+
+g = rmat_graph(300, 1500, seed=2)
+t = get_template("u6")
+mesh = jax.make_mesh((4,), ("dev",))
+colors = np.random.default_rng(0).integers(0, t.k, size=g.n)
+local = float(CountingEngine(g, [t], backend="edges").raw_counts(colors)[0])
+dist = float(
+    CountingEngine(g, [t], backend="mesh", mesh=mesh, column_batch=8).raw_counts(colors)[0]
+)
+rel = abs(dist - local) / max(abs(local), 1e-9)
+assert rel < 1e-5, (dist, local)
+print(f"mesh smoke: {len(jax.devices())} devices, rel err {rel:.2e} -> OK")
+PY
 
 echo "check.sh: all green"

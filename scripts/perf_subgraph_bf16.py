@@ -11,8 +11,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro import compat
 from repro.configs.registry import SUBGRAPH_SHAPES
 from repro.core import build_counting_plan
-from repro.core.distributed import (build_streamed_tables, distributed_input_specs,
-                                    make_distributed_count_fn)
+from repro.core.distributed import distributed_input_specs, make_distributed_count_fn
 from repro.core.templates import PAPER_TEMPLATES
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import collective_wire_bytes
@@ -27,18 +26,14 @@ edges_per_shard = ((int(e_directed / n_shards * 1.2) + 7) // 8) * 8
 
 out = {"cell": "subgraph2vec/rmat1m_u20/single/streamed"}
 for name, gd in (("fp32_gather", None), ("bf16_gather", jnp.bfloat16)):
+    # split tables are built once inside the builder (jit constants)
     fn = make_distributed_count_fn(plan, mesh, n_padded, edges_per_shard,
                                    column_batch=128, ema_mode="streamed", gather_dtype=gd)
     specs = distributed_input_specs(n_padded, n_shards, edges_per_shard)
-    tbl = build_streamed_tables(plan, 128)
-    t_specs = {k: tuple(jax.ShapeDtypeStruct(a.shape, a.dtype) for a in v) for k, v in tbl.items()}
     every = tuple(mesh.axis_names)
-    in_sh = tuple(NamedSharding(mesh, P(every)) for _ in specs) + (
-        jax.tree.map(lambda x: NamedSharding(mesh, P(None, None)), t_specs,
-                     is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)),
-    )
+    in_sh = tuple(NamedSharding(mesh, P(every)) for _ in specs)
     with compat.set_mesh(mesh):
-        compiled = jax.jit(fn, in_shardings=in_sh).lower(*specs, t_specs).compile()
+        compiled = jax.jit(fn, in_shardings=in_sh).lower(*specs).compile()
     ms = compiled.memory_analysis()
     resident = ms.argument_size_in_bytes + ms.temp_size_in_bytes + max(
         ms.output_size_in_bytes - ms.alias_size_in_bytes, 0)

@@ -22,12 +22,7 @@ from repro import compat
 from repro.configs.registry import SUBGRAPH_SHAPES
 from repro.core import build_counting_plan
 from repro.core.colorsets import binom
-from repro.core.distributed import (
-    build_streamed_tables,
-    distributed_input_specs,
-    make_distributed_count_fn,
-    plan_table_specs,
-)
+from repro.core.distributed import distributed_input_specs, make_distributed_count_fn
 from repro.core.templates import PAPER_TEMPLATES
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import collective_wire_bytes
@@ -35,23 +30,18 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 
 def compile_variant(mesh, plan, n_padded, edges_per_shard, mode, column_batch=128):
+    # the engine's mesh-backend compute core: split tables are built once
+    # inside the builder and closure-captured (jit constants)
     fn = make_distributed_count_fn(
         plan, mesh, n_padded, edges_per_shard,
         column_batch=column_batch,
         ema_mode=mode,
     )
     specs = distributed_input_specs(n_padded, mesh.devices.size, edges_per_shard)
-    if mode == "streamed":
-        tbl = build_streamed_tables(plan, column_batch)
-        t_specs = {kk: tuple(jax.ShapeDtypeStruct(a.shape, a.dtype) for a in v) for kk, v in tbl.items()}
-    else:
-        t_specs = plan_table_specs(plan)
     every = tuple(mesh.axis_names)
-    in_sh = tuple(NamedSharding(mesh, P(every)) for _ in specs) + (
-        jax.tree.map(lambda _: NamedSharding(mesh, P(None, None)), t_specs),
-    )
+    in_sh = tuple(NamedSharding(mesh, P(every)) for _ in specs)
     with compat.set_mesh(mesh):
-        compiled = jax.jit(fn, in_shardings=in_sh).lower(*specs, t_specs).compile()
+        compiled = jax.jit(fn, in_shardings=in_sh).lower(*specs).compile()
     ms = compiled.memory_analysis()
     resident = ms.argument_size_in_bytes + ms.temp_size_in_bytes + max(
         ms.output_size_in_bytes - ms.alias_size_in_bytes, 0

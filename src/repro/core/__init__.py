@@ -21,8 +21,10 @@ from .counting import (
     spmm_ell,
 )
 from .engine import (
+    ENGINE_BACKENDS,
     CountingEngine,
     DtypePolicy,
+    EngineBackend,
     pick_chunk_size,
     select_backend,
     sub_template_canonical,

@@ -151,6 +151,30 @@ def _ema_apply(
     return jax.lax.fori_loop(0, n_splits, body, init)
 
 
+def _ema_apply_fused(
+    m_a: jnp.ndarray,
+    b: jnp.ndarray,
+    idx_a: jnp.ndarray,
+    idx_p: jnp.ndarray,
+    init: jnp.ndarray,
+) -> jnp.ndarray:
+    """:func:`_ema_apply` on the engine's fused ``(n, B, C)`` layout.
+
+    Column gathers run on axis 2; ``init`` fixes the accumulator shape and
+    dtype (and, for shard_map callers, its varying axes).  Shared by the
+    local engine backends and the mesh DP so the two cannot drift.
+    """
+    n_splits = idx_a.shape[1]
+    accum = init.dtype
+
+    def body(t, acc):
+        ga = jnp.take(m_a, idx_a[:, t], axis=2).astype(accum)
+        gp = jnp.take(b, idx_p[:, t], axis=2).astype(accum)
+        return acc + ga * gp
+
+    return jax.lax.fori_loop(0, n_splits, body, init)
+
+
 def count_colorful_vectorized(
     plan: CountingPlan,
     colors: jnp.ndarray,

@@ -1,15 +1,18 @@
-"""Distributed SUBGRAPH2VEC: the paper's MPI scheme on a TPU mesh (shard_map).
+"""Distributed SUBGRAPH2VEC: the paper's MPI scheme on a device mesh (shard_map).
 
-Decomposition (DESIGN.md §5): vertices are 1-D row-partitioned across **all**
-mesh axes (the paper's distributed layout), edges co-located with their
-destination vertex.  Per DP stage:
+This module is the device-mesh half of the :class:`~repro.core.engine.
+CountingEngine` — the engine's ``mesh`` backend is a thin wrapper over
+:func:`make_batched_count_fn` built here.  Decomposition (DESIGN.md §5):
+vertices are 1-D row-partitioned across **all** mesh axes (the paper's
+distributed layout), edges co-located with their destination vertex.  Per DP
+stage:
 
 * **SpMM** — the only communicating step.  The dense count matrix
   ``M_{s,p}`` is broadcast in **column batches** (the paper's batched SpMM,
   §V-C: "we also split columns of M_{s,p} into batches ... to save peak
   memory"): for each batch, ``all_gather`` the batch rows along the mesh,
   then a local edge segment-sum produces the batch of ``B``.
-  Peak extra memory = one batch = ``n * column_batch * 4`` bytes.
+  Peak extra memory = one batch = ``n * batch_size * column_batch * 4`` bytes.
 * **eMA** — entirely vertex-local (Equation 1's whole point), zero
   communication.
 
@@ -17,35 +20,44 @@ The final count is a ``psum`` of local totals.  Column batching makes the
 collective volume *independent* of the template size per batch; the batch
 size is the knob the perf log (§Perf) tunes against the ICI roofline.
 
+Engine integration (PR 2): :func:`make_batched_count_fn` fuses a whole chunk
+of ``B`` colorings into the batch dimension of the DP state — every local M
+matrix is ``(rows, B, C)`` and each all-gathered column batch serves all
+``B`` colorings at once — and counts several same-``k`` templates per
+coloring with DP states shared by rooted canonical form.  Split tables are
+built ONCE at construction (de-duplicated by ``(k, m, m_a)``) and
+closure-captured, not re-shipped per call.
+
 Edge-balance caveat: row-range partitions inherit degree skew (the paper's
-Fig 10 observation); ``partition_vertices`` therefore supports the
-degree-sorted balancing permutation as an option.
+Fig 10 observation); ``shard_graph`` therefore supports a round-robin
+degree-rank balancing permutation as an option (``ShardedGraph.perm``
+records the relabeling so colorings can follow it).
 """
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from .. import compat
 from .colorsets import binom
-from .counting import CountingPlan, _ema_apply
+from .counting import CountingPlan, _ema_apply_fused
 from .graph import Graph
+from .templates import sub_template_canonical
 
 __all__ = [
     "ShardedGraph",
     "shard_graph",
+    "make_batched_count_fn",
     "make_distributed_count_fn",
     "distributed_input_specs",
-    "plan_tables",
-    "plan_table_specs",
+    "build_streamed_tables",
 ]
 
 
@@ -53,7 +65,15 @@ __all__ = [
 class ShardedGraph:
     """Host-side edge partition: shard i owns vertex rows
     ``[i * rows_per_shard, (i+1) * rows_per_shard)`` and every edge whose dst
-    lies in that range, padded to ``edges_per_shard``."""
+    lies in that range, padded to ``edges_per_shard``.
+
+    ``perm`` is the old-id -> new-id vertex relabeling applied when
+    ``balance_degrees=True`` (``None`` for the identity layout).  New ids
+    range over ``[0, n_padded)`` (round-robin by degree rank leaves pad
+    slots interleaved), so callers that fix per-vertex data (colors,
+    features) must scatter it into an ``(n_padded,)`` array:
+    ``data_new[perm] = data_old``.
+    """
 
     n: int
     n_padded: int
@@ -63,21 +83,29 @@ class ShardedGraph:
     src: np.ndarray        # (n_shards * edges_per_shard,) global src ids
     dst_local: np.ndarray  # (n_shards * edges_per_shard,) dst - shard offset
     edge_mask: np.ndarray  # (n_shards * edges_per_shard,) float32
+    perm: Optional[np.ndarray] = None  # (n,) old -> new id in [0, n_padded)
 
 
 def shard_graph(graph: Graph, n_shards: int, balance_degrees: bool = False) -> ShardedGraph:
+    """1-D row partition of ``graph`` over ``n_shards`` (edges follow dst).
+
+    ``balance_degrees=True`` relabels vertices round-robin by degree rank
+    before partitioning, so consecutive hubs land on different shards
+    (reduces the max per-shard edge padding on skewed graphs).
+    """
     src, dst = graph.src, graph.dst
+    rows = max(-(-graph.n // n_shards), 1)
+    n_padded = rows * n_shards
     perm = None
     if balance_degrees:
-        # round-robin by degree rank: spreads hubs across shards
+        # round-robin by degree rank: rank r lands on shard r % n_shards at
+        # row r // n_shards, so consecutive hubs go to DIFFERENT shards.
+        # New ids live in [0, n_padded); unassigned slots are pad vertices.
         order = np.argsort(-graph.degrees(), kind="stable")
+        ranks = np.arange(graph.n)
         perm = np.empty(graph.n, dtype=np.int64)
-        perm[order] = np.arange(graph.n)
+        perm[order] = (ranks % n_shards) * rows + ranks // n_shards
         src, dst = perm[src].astype(np.int32), perm[dst].astype(np.int32)
-
-    rows = -(-graph.n // n_shards)
-    rows = max(rows, 1)
-    n_padded = rows * n_shards
     shard_of = dst // rows
     counts = np.bincount(shard_of, minlength=n_shards)
     e_max = int(counts.max(initial=1))
@@ -103,6 +131,7 @@ def shard_graph(graph: Graph, n_shards: int, balance_degrees: bool = False) -> S
         src=src_out.reshape(-1),
         dst_local=dst_out.reshape(-1),
         edge_mask=mask_out.reshape(-1),
+        perm=perm,
     )
 
 
@@ -133,6 +162,47 @@ def _pvary_missing(x, axes):
     return compat.pvary(x, missing) if missing else x
 
 
+def _streamed_stage_tables(table, column_batch: int):
+    """Re-bucket one stage's split table by passive-column batch.
+
+    Returns ``(ent_out, ent_ia, ent_ip_local, ent_valid)`` shaped
+    ``(n_batches, cap)`` (padded per batch): for batch ``bi`` the streamed
+    schedule applies exactly the (out, split) entries whose passive column
+    falls in that batch.
+    """
+    n_out, n_splits = table.idx_a.shape
+    flat_out = np.repeat(np.arange(n_out, dtype=np.int32), n_splits)
+    flat_ia = table.idx_a.reshape(-1).astype(np.int32)
+    flat_ip = table.idx_p.reshape(-1).astype(np.int32)
+    c_p = binom(table.k, table.m_p)
+    n_batches = (c_p + column_batch - 1) // column_batch
+    bucket = flat_ip // column_batch
+    order = np.argsort(bucket, kind="stable")
+    flat_out, flat_ia, flat_ip, bucket = (
+        flat_out[order], flat_ia[order], flat_ip[order], bucket[order],
+    )
+    counts = np.bincount(bucket, minlength=n_batches)
+    cap = int(counts.max(initial=1))
+    ent_out = np.zeros((n_batches, cap), np.int32)
+    ent_ia = np.zeros((n_batches, cap), np.int32)
+    ent_ip = np.zeros((n_batches, cap), np.int32)
+    ent_valid = np.zeros((n_batches, cap), np.float32)
+    starts = np.concatenate([[0], np.cumsum(counts)])
+    for b in range(n_batches):
+        lo, hi = int(starts[b]), int(starts[b + 1])
+        c = hi - lo
+        ent_out[b, :c] = flat_out[lo:hi]
+        ent_ia[b, :c] = flat_ia[lo:hi]
+        ent_ip[b, :c] = flat_ip[lo:hi] - b * column_batch
+        ent_valid[b, :c] = 1.0
+    return (
+        jnp.asarray(ent_out),
+        jnp.asarray(ent_ia),
+        jnp.asarray(ent_ip),
+        jnp.asarray(ent_valid),
+    )
+
+
 def build_streamed_tables(plan: CountingPlan, column_batch: int):
     """Per-stage split tables re-bucketed by passive-column batch.
 
@@ -146,42 +216,323 @@ def build_streamed_tables(plan: CountingPlan, column_batch: int):
     Returns ``{stage: (ent_out, ent_ia, ent_ip_local, ent_valid)}`` with
     arrays shaped ``(n_batches, cap)`` (padded per batch).
     """
-    out = {}
-    for i, t in enumerate(plan.tables):
-        if t is None:
-            continue
-        n_out, n_splits = t.idx_a.shape
-        flat_out = np.repeat(np.arange(n_out, dtype=np.int32), n_splits)
-        flat_ia = t.idx_a.reshape(-1).astype(np.int32)
-        flat_ip = t.idx_p.reshape(-1).astype(np.int32)
-        c_p = binom(plan.k, t.m_p)
-        n_batches = (c_p + column_batch - 1) // column_batch
-        bucket = flat_ip // column_batch
-        order = np.argsort(bucket, kind="stable")
-        flat_out, flat_ia, flat_ip, bucket = (
-            flat_out[order], flat_ia[order], flat_ip[order], bucket[order],
+    return {
+        i: _streamed_stage_tables(t, column_batch)
+        for i, t in enumerate(plan.tables)
+        if t is not None
+    }
+
+
+def _schedule_liveness(plans, canons, ema_mode):
+    """Last-read position for every shared DP state / SpMM product.
+
+    The multi-template schedule executes each canonical sub-template once
+    (first occurrence across plans) and reads each plan's root at the end of
+    that plan.  Returns ``free_at``: position -> list of keys (canonical
+    strings, or ``("prod", canon)`` for memoized SpMM outputs in loop mode)
+    that are dead after that position, so the DP can drop them and peak
+    memory matches Algorithm 5's in-place storage instead of growing with
+    the number of stages.
+    """
+    executed = set()
+    last_read = {}
+    pos = 0
+    for p_idx, plan in enumerate(plans):
+        pc = canons[p_idx]
+        for i, sub in enumerate(plan.partition.subs):
+            if pc[i] in executed:
+                continue
+            executed.add(pc[i])
+            if not sub.is_leaf:
+                last_read[pc[sub.active]] = pos
+                last_read[pc[sub.passive]] = pos
+                if ema_mode != "streamed":
+                    last_read[("prod", pc[sub.passive])] = pos
+            pos += 1
+        last_read[pc[plan.partition.root_index]] = pos
+        pos += 1
+    free_at = {}
+    for key, p in last_read.items():
+        free_at.setdefault(p, []).append(key)
+    return free_at
+
+
+def mesh_peak_columns(
+    plans: Sequence[CountingPlan],
+    canons: Sequence[Sequence[str]],
+    ema_mode: str,
+    pad_unit: int,
+) -> int:
+    """Peak live padded M columns per coloring under the mesh schedule.
+
+    Simulates the liveness-aware multi-template DP: per executed stage the
+    live set holds every not-yet-dead canonical state (padded to the column
+    batch), plus — in loop mode — the memoized SpMM product ``B`` of the
+    stage's passive state.  This is the resident figure the engine's
+    memory-budget chunk picker multiplies by ``rows_per_shard``.
+    """
+    k = plans[0].k
+    free_at = _schedule_liveness(plans, canons, ema_mode)
+    executed = set()
+    live = {}
+    peak = 0
+    pos = 0
+    for p_idx, plan in enumerate(plans):
+        pc = canons[p_idx]
+        for i, sub in enumerate(plan.partition.subs):
+            if pc[i] in executed:
+                continue
+            executed.add(pc[i])
+            live[pc[i]] = _pad_cols(binom(k, sub.size), pad_unit)
+            if not sub.is_leaf and ema_mode != "streamed":
+                passive = plan.partition.subs[sub.passive]
+                live.setdefault(
+                    ("prod", pc[sub.passive]),
+                    _pad_cols(binom(k, passive.size), pad_unit),
+                )
+            peak = max(peak, sum(live.values()))
+            for key in free_at.get(pos, ()):
+                live.pop(key, None)
+            pos += 1
+        peak = max(peak, sum(live.values()))
+        for key in free_at.get(pos, ()):
+            live.pop(key, None)
+        pos += 1
+    return peak
+
+
+def make_batched_count_fn(
+    plans: Sequence[CountingPlan],
+    mesh: Mesh,
+    n_padded: int,
+    edges_per_shard: int,
+    *,
+    column_batch: Optional[int] = 128,
+    ema_mode: str = "streamed",
+    gather_dtype=None,
+    canons: Optional[Sequence[Sequence[str]]] = None,
+    store_dtype=jnp.float32,
+    accum_dtype=jnp.float32,
+) -> Callable:
+    """Build the jit-able mesh count over a batched chunk of colorings.
+
+    This is the compute core of the engine's ``mesh`` backend.  Signature of
+    the returned fn::
+
+      (colors (B, n_padded) i32, src (S*E,) i32, dst_local (S*E,) i32,
+       edge_mask (S*E,) f32) -> (B, T) f32 raw colorful totals
+
+    where ``T == len(plans)``.  All split tables (plain or streamed) are
+    built HERE, once, de-duplicated by ``(k, m, m_a)``, and closure-captured
+    — they are never re-shipped per call.  A chunk of ``B`` colorings is
+    fused into the batch dimension of the DP state so every all-gathered
+    column batch serves all ``B`` colorings in one collective.
+
+    Args:
+      plans: one or more same-``k`` :class:`CountingPlan`; DP states are
+        shared across plans by rooted canonical form (see ``canons``).
+      mesh: the device mesh; tensors are sharded over every axis (1-D row
+        partition of the vertex space).
+      n_padded / edges_per_shard: the :class:`ShardedGraph` geometry.
+      column_batch: passive columns all-gathered per collective.  ``None`` is
+        probe mode: one full-width all-gather, no loop — lets
+        ``cost_analysis`` see the full per-stage work (XLA counts while-loop
+        bodies once).
+      ema_mode: ``"streamed"`` (beyond-paper fusion: every all-gathered
+        column batch is consumed immediately by the eMA updates that read
+        it; ``B`` never exists), ``"loop"`` (paper-faithful Algorithm 5:
+        full batched SpMM into B, then the eMA pass; B is memoized per
+        passive canonical form, so templates sharing a passive sub-template
+        share its SpMM), or ``"vectorized"`` (probe mode: loop-free
+        gather-FMA einsum, fully visible to ``cost_analysis``).
+      gather_dtype: ``jnp.bfloat16`` compresses the row all-gather payload 2x
+        — the counting analogue of gradient compression.  Counts are an
+        (eps, delta) ESTIMATOR, so the ~0.4% bf16 rounding is dominated by
+        coloring variance.  Accumulation stays fp32.
+      canons: per-plan, per-sub-template rooted canonical strings (computed
+        from the templates when omitted); equal strings share one DP state.
+      store_dtype / accum_dtype: the engine's dtype policy — M matrices are
+        kept (and all-gathered) in ``store_dtype``, reductions accumulate in
+        ``accum_dtype``.
+    """
+    if not plans:
+        raise ValueError("make_batched_count_fn needs at least one plan")
+    ks = {p.k for p in plans}
+    if len(ks) != 1:
+        raise ValueError(f"all plans must share one k, got {sorted(ks)}")
+    k = ks.pop()
+    if ema_mode not in ("streamed", "loop", "vectorized"):
+        raise ValueError(f"unknown ema_mode {ema_mode!r}")
+
+    axes = tuple(mesh.axis_names)
+    n_shards = int(np.prod(mesh.devices.shape))
+    rows = n_padded // n_shards
+    pad_unit = column_batch or 128
+
+    if canons is None:
+        canons = [
+            [
+                sub_template_canonical(p.template, s.vertices, s.root)
+                for s in p.partition.subs
+            ]
+            for p in plans
+        ]
+
+    # --- split tables: built once, de-duplicated by (k, m, m_a).
+    tables_dev = {}
+    table_specs = {}
+    stage_table_key = {}
+    for p_idx, plan in enumerate(plans):
+        for i, t in enumerate(plan.tables):
+            if t is None:
+                continue
+            key = f"{t.k}.{t.m}.{t.m_a}"
+            stage_table_key[(p_idx, i)] = key
+            if key in tables_dev:
+                continue
+            if ema_mode == "streamed":
+                tables_dev[key] = _streamed_stage_tables(t, pad_unit)
+                table_specs[key] = (P(None, None),) * 4
+            else:
+                tables_dev[key] = (jnp.asarray(t.idx_a), jnp.asarray(t.idx_p))
+                table_specs[key] = (P(None, None),) * 2
+
+    def spmm_batched(m_p, src, dst_local, edge_mask):
+        """Column-batched all-gather SpMM; m_p: (rows, B, C_pad) local."""
+        bsz, c_pad = m_p.shape[1], m_p.shape[2]
+        if column_batch is None:
+            full = _compressed_gather(m_p, axes, gather_dtype)
+            msgs = full[src].astype(accum_dtype) * edge_mask[:, None, None]
+            return jax.ops.segment_sum(msgs, dst_local, num_segments=rows)
+        n_batches = c_pad // column_batch
+
+        def body(b_idx, acc):
+            cols = jax.lax.dynamic_slice(
+                m_p, (0, 0, b_idx * column_batch), (rows, bsz, column_batch)
+            )
+            full = _compressed_gather(cols, axes, gather_dtype)
+            msgs = full[src].astype(accum_dtype) * edge_mask[:, None, None]
+            bcol = jax.ops.segment_sum(msgs, dst_local, num_segments=rows)
+            return jax.lax.dynamic_update_slice(acc, bcol, (0, 0, b_idx * column_batch))
+
+        init = _pvary_missing(jnp.zeros(m_p.shape, accum_dtype), axes)
+        return jax.lax.fori_loop(0, n_batches, body, init)
+
+    def spmm_ema_streamed(m_p, m_a, src, dst_local, edge_mask, n_out, stream_tbl):
+        """Fused per-batch SpMM -> eMA: gather a column batch, reduce it, and
+        immediately scatter its contributions into M_s (B never exists)."""
+        cb = pad_unit
+        bsz = m_p.shape[1]
+        n_batches = m_p.shape[2] // cb
+        ent_out, ent_ia, ent_ip, ent_valid = stream_tbl
+
+        def body(b_idx, m_s):
+            cols = jax.lax.dynamic_slice(m_p, (0, 0, b_idx * cb), (rows, bsz, cb))
+            full = _compressed_gather(cols, axes, gather_dtype)
+            msgs = full[src].astype(accum_dtype) * edge_mask[:, None, None]
+            bcol = jax.ops.segment_sum(msgs, dst_local, num_segments=rows)
+            eo = jax.lax.dynamic_index_in_dim(ent_out, b_idx, keepdims=False)
+            ia = jax.lax.dynamic_index_in_dim(ent_ia, b_idx, keepdims=False)
+            ip = jax.lax.dynamic_index_in_dim(ent_ip, b_idx, keepdims=False)
+            va = jax.lax.dynamic_index_in_dim(ent_valid, b_idx, keepdims=False)
+            prod = (
+                jnp.take(m_a, ia, axis=2).astype(accum_dtype)
+                * jnp.take(bcol, ip, axis=2)
+                * va[None, None, :].astype(accum_dtype)
+            )
+            return m_s.at[:, :, eo].add(prod)
+
+        init = _pvary_missing(jnp.zeros((rows, bsz, n_out), accum_dtype), axes)
+        return jax.lax.fori_loop(0, n_batches, body, init)
+
+    def ema_loop(m_a, b, idx_a, idx_p):
+        """Vertex-local eMA over fused (rows, B, C) state (Algorithm 5)."""
+        init = _pvary_missing(
+            jnp.zeros((rows, m_a.shape[1], idx_a.shape[0]), accum_dtype), axes
         )
-        counts = np.bincount(bucket, minlength=n_batches)
-        cap = int(counts.max(initial=1))
-        ent_out = np.zeros((n_batches, cap), np.int32)
-        ent_ia = np.zeros((n_batches, cap), np.int32)
-        ent_ip = np.zeros((n_batches, cap), np.int32)
-        ent_valid = np.zeros((n_batches, cap), np.float32)
-        starts = np.concatenate([[0], np.cumsum(counts)])
-        for b in range(n_batches):
-            lo, hi = int(starts[b]), int(starts[b + 1])
-            c = hi - lo
-            ent_out[b, :c] = flat_out[lo:hi]
-            ent_ia[b, :c] = flat_ia[lo:hi]
-            ent_ip[b, :c] = flat_ip[lo:hi] - b * column_batch
-            ent_valid[b, :c] = 1.0
-        out[i] = (
-            jnp.asarray(ent_out),
-            jnp.asarray(ent_ia),
-            jnp.asarray(ent_ip),
-            jnp.asarray(ent_valid),
-        )
-    return out
+        return _ema_apply_fused(m_a, b, idx_a, idx_p, init)
+
+    free_at = _schedule_liveness(plans, canons, ema_mode)
+
+    def local_count(colors, src, dst_local, edge_mask, tables):
+        # colors: (B, rows) local slice of the (B, n_padded) coloring batch.
+        def pad_c(m):
+            c = m.shape[-1]
+            return jnp.pad(m, ((0, 0), (0, 0), (0, _pad_cols(c, pad_unit) - c)))
+
+        def free(pos, slots, prods):
+            # Algorithm 5's in-place storage, liveness-scheduled: drop DP
+            # states / memoized SpMM products after their last reader.
+            for key in free_at.get(pos, ()):
+                if isinstance(key, tuple):
+                    prods.pop(key[1], None)
+                else:
+                    slots.pop(key, None)
+
+        leaf = pad_c(jax.nn.one_hot(colors.T, k, dtype=store_dtype))  # (rows, B, k_pad)
+        executed = set()
+        slots = {}
+        prods = {}
+        totals = []
+        pos = 0
+        for p_idx, plan in enumerate(plans):
+            pc = canons[p_idx]
+            for i, sub in enumerate(plan.partition.subs):
+                ckey = pc[i]
+                if ckey in executed:
+                    continue
+                executed.add(ckey)
+                if sub.is_leaf:
+                    slots[ckey] = leaf
+                else:
+                    m_a, m_p = slots[pc[sub.active]], slots[pc[sub.passive]]
+                    tkey = stage_table_key[(p_idx, i)]
+                    if ema_mode == "streamed":
+                        m_s = spmm_ema_streamed(
+                            m_p, m_a, src, dst_local, edge_mask,
+                            plan.tables[i].n_out, tables[tkey],
+                        )
+                    else:
+                        p_key = pc[sub.passive]
+                        if p_key not in prods:
+                            prods[p_key] = spmm_batched(m_p, src, dst_local, edge_mask)
+                        b = prods[p_key]
+                        idx_a, idx_p = tables[tkey]
+                        if ema_mode == "vectorized":
+                            # probe mode: single gather-FMA einsum (no
+                            # fori_loop) so the split-axis work is visible to
+                            # cost_analysis
+                            m_s = jnp.einsum(
+                                "rbos,rbos->rbo",
+                                jnp.take(m_a, idx_a, axis=2).astype(accum_dtype),
+                                jnp.take(b, idx_p, axis=2),
+                            )
+                        else:
+                            m_s = ema_loop(m_a, b, idx_a, idx_p)
+                    slots[ckey] = pad_c(m_s.astype(store_dtype))
+                free(pos, slots, prods)
+                pos += 1
+            root = slots[pc[plan.partition.root_index]].astype(accum_dtype)
+            # reduce color sets first, then vertices, then shards: the local
+            # order matches the single-host engine's per-coloring reduction
+            total_local = root.sum(axis=2).sum(axis=0)
+            totals.append(jax.lax.psum(total_local, axes))  # (B,), replicated
+            free(pos, slots, prods)
+            pos += 1
+        return jnp.stack(totals, axis=1).astype(jnp.float32)  # (B, T)
+
+    sharded = P(axes)
+    mapped = compat.shard_map(
+        local_count,
+        mesh=mesh,
+        in_specs=(P(None, axes), sharded, sharded, sharded, table_specs),
+        out_specs=P(None, None),
+    )
+
+    def count(colors_batch, src, dst_local, edge_mask):
+        return mapped(colors_batch, src, dst_local, edge_mask, tables_dev)
+
+    return count
 
 
 def make_distributed_count_fn(
@@ -193,152 +544,40 @@ def make_distributed_count_fn(
     ema_mode: str = "loop",
     gather_dtype=None,
 ):
-    """Build the jit-able distributed one-coloring count.
+    """One-coloring, one-template distributed count (compat / probe surface).
 
-    Signature of the returned fn:
+    A thin ``B=1`` wrapper over :func:`make_batched_count_fn` — kept for the
+    dry-run/probe tooling (``launch.cells``) and ad-hoc single-coloring
+    checks.  Estimation runs should use the engine's ``mesh`` backend
+    (``CountingEngine(..., backend="mesh", mesh=mesh)``), which batches
+    chunks of colorings into each collective.
+
+    Signature of the returned fn::
+
       (colors (n_padded,) i32, src (S*E,) i32, dst_local (S*E,) i32,
-       edge_mask (S*E,) f32, tables) -> scalar raw colorful total.
+       edge_mask (S*E,) f32) -> scalar f32 raw colorful total
 
-    ``ema_mode``:
-      * "loop" — paper-faithful Algorithm 5: full batched SpMM into B, then
-        the eMA pass (B materialized per stage).
-      * "vectorized" — probe mode (single all-gather + einsum, loop-free).
-      * "streamed" — beyond-paper fusion: every all-gathered column batch is
-        consumed immediately by the eMA updates that read it (tables from
-        :func:`build_streamed_tables`); B never exists.
-
-    ``gather_dtype=jnp.bfloat16`` compresses the row all-gather payload 2x —
-    the counting analogue of gradient compression.  Counts are an (eps,
-    delta) ESTIMATOR, so the ~0.4% bf16 rounding is dominated by coloring
-    variance; measured end-to-end count error is recorded in EXPERIMENTS.md
-    §Perf.  Accumulation stays fp32.
-
-    All tensor inputs are sharded over every mesh axis (1-D row partition of
-    the vertex space).
+    Split tables are built once here and closure-captured (they are no
+    longer an argument).
     """
-    axes = tuple(mesh.axis_names)
-    n_shards = int(np.prod(mesh.devices.shape))
-    rows = n_padded // n_shards
-    k = plan.k
-
-    def spmm_batched(m_p, src, dst_local, edge_mask):
-        """Column-batched all-gather SpMM; m_p: (rows, C_pad) local.
-
-        ``column_batch=None`` (probe mode): single full-width all-gather, no
-        loop — lets ``cost_analysis`` see the full per-stage work (XLA counts
-        while-loop bodies once)."""
-        if column_batch is None:
-            full = _compressed_gather(m_p, axes, gather_dtype)
-            msgs = full[src] * edge_mask[:, None]
-            return jax.ops.segment_sum(msgs, dst_local, num_segments=rows)
-        c_pad = m_p.shape[1]
-        n_batches = c_pad // column_batch
-
-        def body(b_idx, acc):
-            cols = jax.lax.dynamic_slice(
-                m_p, (0, b_idx * column_batch), (rows, column_batch)
-            )
-            full = _compressed_gather(cols, axes, gather_dtype)
-            msgs = full[src] * edge_mask[:, None]
-            bcol = jax.ops.segment_sum(msgs, dst_local, num_segments=rows)
-            return jax.lax.dynamic_update_slice(acc, bcol, (0, b_idx * column_batch))
-
-        init = _pvary_missing(jnp.zeros_like(m_p), axes)
-        return jax.lax.fori_loop(0, n_batches, body, init)
-
-    def spmm_ema_streamed(m_p, m_a, src, dst_local, edge_mask, n_out, stream_tbl):
-        """Fused per-batch SpMM -> eMA: gather a column batch, reduce it, and
-        immediately scatter its contributions into M_s."""
-        cb = column_batch or 128
-        c_pad = m_p.shape[1]
-        n_batches = c_pad // cb
-        ent_out, ent_ia, ent_ip, ent_valid = stream_tbl
-
-        def body(b_idx, m_s):
-            cols = jax.lax.dynamic_slice(m_p, (0, b_idx * cb), (rows, cb))
-            full = _compressed_gather(cols, axes, gather_dtype)
-            msgs = full[src] * edge_mask[:, None]
-            bcol = jax.ops.segment_sum(msgs, dst_local, num_segments=rows)  # (rows, cb)
-            eo = jax.lax.dynamic_index_in_dim(ent_out, b_idx, keepdims=False)
-            ia = jax.lax.dynamic_index_in_dim(ent_ia, b_idx, keepdims=False)
-            ip = jax.lax.dynamic_index_in_dim(ent_ip, b_idx, keepdims=False)
-            va = jax.lax.dynamic_index_in_dim(ent_valid, b_idx, keepdims=False)
-            prod = jnp.take(m_a, ia, axis=1) * jnp.take(bcol, ip, axis=1) * va[None, :]
-            return m_s.at[:, eo].add(prod)
-
-        init = _pvary_missing(jnp.zeros((rows, n_out), jnp.float32), axes)
-        return jax.lax.fori_loop(0, n_batches, body, init)
-
-    def local_count(colors, src, dst_local, edge_mask, tables):
-        leaf = jax.nn.one_hot(colors, k, dtype=jnp.float32)  # (rows, k)
-        leaf = jnp.pad(leaf, ((0, 0), (0, _pad_cols(k, column_batch or 128) - k)))
-        slots = {}
-        for i, sub in enumerate(plan.partition.subs):
-            if sub.is_leaf:
-                slots[i] = leaf
-                continue
-            m_a, m_p = slots[sub.active], slots[sub.passive]
-            if ema_mode == "streamed":
-                n_out = plan.tables[i].n_out
-                m_s = spmm_ema_streamed(
-                    m_p, m_a, src, dst_local, edge_mask, n_out, tables[i]
-                )
-            else:
-                idx_a, idx_p = tables[i]
-                b = spmm_batched(m_p, src, dst_local, edge_mask)
-                if ema_mode == "vectorized":
-                    # probe mode: single gather-FMA einsum (no fori_loop) so
-                    # the split-axis work is fully visible to cost_analysis
-                    m_s = jnp.einsum(
-                        "nos,nos->no", jnp.take(m_a, idx_a, axis=1), jnp.take(b, idx_p, axis=1)
-                    )
-                else:
-                    init = _pvary_missing(jnp.zeros((rows, idx_a.shape[0]), jnp.float32), axes)
-                    m_s = _ema_apply(m_a, b, idx_a, idx_p, init=init)  # (rows, n_out) — local!
-            cb = column_batch or 128
-            c_out_pad = _pad_cols(m_s.shape[1], cb)
-            slots[i] = jnp.pad(m_s, ((0, 0), (0, c_out_pad - m_s.shape[1])))
-            del slots[sub.active], slots[sub.passive]
-        total_local = jnp.sum(slots[plan.partition.root_index])
-        return jax.lax.psum(total_local, axes)
-
-    sharded = P(axes)
-    per_stage = 4 if ema_mode == "streamed" else 2
-    table_specs = {
-        i: (P(None, None),) * per_stage for i, t in enumerate(plan.tables) if t is not None
-    }
-    count = compat.shard_map(
-        local_count,
-        mesh=mesh,
-        in_specs=(sharded, sharded, sharded, sharded, table_specs),
-        out_specs=P(),
+    batched = make_batched_count_fn(
+        [plan],
+        mesh,
+        n_padded,
+        edges_per_shard,
+        column_batch=column_batch,
+        ema_mode=ema_mode,
+        gather_dtype=gather_dtype,
     )
+
+    def count(colors, src, dst_local, edge_mask):
+        return batched(colors[None, :], src, dst_local, edge_mask)[0, 0]
+
     return count
 
 
-def plan_tables(plan: CountingPlan):
-    """Device table pytree matching the fn's ``tables`` argument."""
-    return {
-        i: (jnp.asarray(t.idx_a), jnp.asarray(t.idx_p))
-        for i, t in enumerate(plan.tables)
-        if t is not None
-    }
-
-
-def plan_table_specs(plan: CountingPlan):
-    """ShapeDtypeStructs for the tables argument (dry-run)."""
-    return {
-        i: (
-            jax.ShapeDtypeStruct(t.idx_a.shape, jnp.int32),
-            jax.ShapeDtypeStruct(t.idx_p.shape, jnp.int32),
-        )
-        for i, t in enumerate(plan.tables)
-        if t is not None
-    }
-
-
 def distributed_input_specs(n_padded: int, n_shards: int, edges_per_shard: int):
-    """ShapeDtypeStructs for the distributed count (dry-run inputs)."""
+    """ShapeDtypeStructs for the one-coloring distributed count (dry-run)."""
     e_total = n_shards * edges_per_shard
     return (
         jax.ShapeDtypeStruct((n_padded,), jnp.int32),   # colors

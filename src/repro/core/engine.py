@@ -9,29 +9,42 @@ amortizes the neighbor reduction across color sets:
 * **Plans and tables once** — ``CountingPlan``s are built per template and
   their split tables land on the device a single time, de-duplicated by
   ``(k, m, m_a)``.
-* **Backend auto-selection** — the SpMM kernel is picked from graph
+* **Backend interface** — each execution strategy is an
+  :class:`EngineBackend`: device-operand construction, the SpMM dispatch,
+  the eMA step, and the per-coloring live-memory model all live behind one
+  interface.  The local backends (``edges`` / ``ell`` / ``dense`` /
+  ``blocked`` / ``custom``) run the fused DP on one device;
+  :class:`MeshBackend` (``mesh``) runs the same DP under ``shard_map``
+  across a device mesh with the column-batched all-gather SpMM and streamed
+  eMA from :mod:`repro.core.distributed`.
+* **Backend auto-selection** — the local SpMM kernel is picked from graph
   statistics (:func:`select_backend`): edge-list segment-sum for skewed
   degree distributions, padded ELL for flat ones, dense adjacency for tiny
   graphs, and the Pallas blocked-ELL kernel for large graphs on TPU.
+  Passing ``mesh=`` selects the ``mesh`` backend.
 * **Batched colorings** — a chunk of ``B`` colorings is fused into the
   *column* dimension of the DP state: every M matrix is ``(n, B, C)`` and
   each stage's SpMM is ONE wide neighbor reduction over ``B * C`` columns
   (``lax.map`` walks the chunks inside a single jit).  This is the paper's
   "batch more columns into one SpMM" principle applied across colorings —
   a plain ``vmap`` over the leading axis lowers to batched scatters that
-  XLA:CPU executes far slower than one wide scatter.
+  XLA:CPU executes far slower than one wide scatter.  On the mesh backend
+  the same fusion means every all-gather collective serves all ``B``
+  colorings at once.
 * **Chunk-size picker** — the live M-matrix footprint per coloring is
-  derived from ``CountingPlan.peak_columns()`` (plus the per-stage neighbor
-  gather transient, the real high-water mark for the edge backend) and the
-  chunk size is chosen to keep ``chunk * footprint`` under a configurable
-  VMEM/HBM budget.
+  derived from the backend's memory model (resident M columns plus the
+  per-stage gather transient — for the mesh backend, the per-shard gather
+  scratch and the all-gather buffer) and the chunk size is chosen to keep
+  ``chunk * footprint`` under a configurable VMEM/HBM budget.
 * **Multi-template sharing** — several same-``k`` templates are counted per
   coloring; sub-template DP states and SpMM products are memoized by the
   rooted canonical form (AHU string) of the sub-template, so coinciding
   passive sub-templates (and the leaf one-hot + its neighbor sum, shared by
   *every* template) are computed once per coloring.
 * **Dtype policy** — fp32 end-to-end, or bf16 storage/gather traffic with
-  fp32 accumulation (paper §VI bf16 discussion).
+  fp32 accumulation (paper §VI bf16 discussion).  On the mesh backend the
+  storage dtype is also the all-gather wire dtype (plus an optional
+  ``gather_dtype`` override for compressed collectives).
 """
 
 from __future__ import annotations
@@ -45,17 +58,19 @@ import jax
 import jax.numpy as jnp
 
 from .colorsets import binom, colorful_probability
-from .counting import CountingPlan, build_counting_plan
+from .counting import CountingPlan, _ema_apply_fused, build_counting_plan
 from .graph import Graph
-from .templates import Template
+from .templates import Template, sub_template_canonical
 
 __all__ = [
     "DtypePolicy",
     "EstimateResult",
     "CountingEngine",
+    "EngineBackend",
     "select_backend",
     "pick_chunk_size",
     "sub_template_canonical",
+    "ENGINE_BACKENDS",
     "DEFAULT_MEMORY_BUDGET_BYTES",
     "MAX_CHUNK_SIZE",
 ]
@@ -83,9 +98,10 @@ class DtypePolicy:
     """Storage vs accumulation dtypes for the DP state.
 
     ``store_dtype`` is what M matrices (and therefore the SpMM gather
-    traffic) are kept in; ``accum_dtype`` is what neighbor reductions and
-    eMA FMAs accumulate in.  ``fp32`` keeps both at float32; ``bf16`` halves
-    the storage/gather bytes while accumulating in float32 (paper §VI).
+    traffic — on the mesh backend, also the all-gather wire payload) are
+    kept in; ``accum_dtype`` is what neighbor reductions and eMA FMAs
+    accumulate in.  ``fp32`` keeps both at float32; ``bf16`` halves the
+    storage/gather bytes while accumulating in float32 (paper §VI).
     """
 
     store_dtype: jnp.dtype
@@ -93,6 +109,7 @@ class DtypePolicy:
 
     @staticmethod
     def resolve(policy: Union[str, "DtypePolicy", jnp.dtype, None]) -> "DtypePolicy":
+        """Coerce ``"fp32"`` | ``"bf16"`` | a dtype | a policy | None."""
         if policy is None:
             return DtypePolicy(jnp.float32, jnp.float32)
         if isinstance(policy, DtypePolicy):
@@ -120,13 +137,16 @@ class EstimateResult:
 
 
 def select_backend(graph: Graph, platform: Optional[str] = None) -> str:
-    """Pick the SpMM backend from graph statistics.
+    """Pick the local SpMM backend from graph statistics.
 
     * ``dense``   — tiny graphs: one (n, n) matmul beats gather/scatter.
     * ``blocked`` — large graphs on TPU: the Pallas blocked-ELL kernel.
     * ``ell``     — flat degree distributions where row padding is cheap.
     * ``edges``   — everything else (skewed / power-law graphs: a hub row
       would blow the ELL padding up to ``n * max_deg``).
+
+    The ``mesh`` backend is never auto-selected from graph statistics — it
+    is chosen by passing ``mesh=`` to :class:`CountingEngine`.
     """
     platform = platform or jax.default_backend()
     if graph.n <= DENSE_MAX_VERTICES:
@@ -150,25 +170,347 @@ def pick_chunk_size(
     return max(1, min(max_chunk, int(memory_budget_bytes // bytes_per_coloring)))
 
 
-def sub_template_canonical(template: Template, vertices: Tuple[int, ...], root: int) -> str:
-    """AHU canonical string of the rooted sub-template induced by ``vertices``.
+# ---------------------------------------------------------------------------
+# Backend interface
+# ---------------------------------------------------------------------------
 
-    Two sub-templates with equal strings have identical count matrices
-    ``M_s`` for every coloring — the key used to share DP state and SpMM
-    products across templates (and across stages within one template).
+
+class EngineBackend:
+    """One SpMM/eMA execution strategy behind :class:`CountingEngine`.
+
+    A backend owns three things:
+
+    * **operand construction** — its device-resident graph representation,
+      built once in ``__init__`` (edge lists, ELL tables, dense adjacency,
+      Pallas blocked operands, or the sharded edge partition + collective
+      schedule for the mesh backend);
+    * **the DP execution** — :meth:`counts_for_colors` maps a ``(B, n)``
+      chunk of colorings to ``(B, T)`` raw colorful totals (local backends
+      implement it via :meth:`LocalBackend.spmm` + the shared fused DP;
+      the mesh backend delegates to the shard_map program built by
+      :func:`repro.core.distributed.make_batched_count_fn`);
+    * **the memory model** — :meth:`transient_elements` /
+      :meth:`resident_elements` feed the engine's memory-budget chunk
+      picker.
     """
-    allowed = set(vertices)
-    adj: Dict[int, List[int]] = {v: [] for v in vertices}
-    for u, v in template.edges:
-        if u in allowed and v in allowed:
-            adj[u].append(v)
-            adj[v].append(u)
 
-    def canon(node: int, parent: int) -> str:
-        forms = sorted(canon(c, node) for c in adj[node] if c != parent)
-        return "(" + "".join(forms) + ")"
+    name: str = "abstract"
 
-    return canon(root, -1)
+    def __init__(self, engine: "CountingEngine"):
+        self.engine = engine
+
+    # -- execution ----------------------------------------------------------
+
+    def counts_for_colors(self, colors: jnp.ndarray) -> jnp.ndarray:
+        """``(B, n)`` colorings -> ``(B, T)`` un-normalized colorful totals."""
+        raise NotImplementedError
+
+    def counts_for_keys_chunk(self, keys_chunk: jnp.ndarray) -> jnp.ndarray:
+        """``(B, 2)`` PRNG keys -> ``(B, T)`` normalized estimates.
+
+        The coloring draw is identical across backends (one ``randint`` per
+        key over the *original* vertex ids), so the same keys produce the
+        same colorings — and therefore fp-tolerance-comparable estimates —
+        on every backend, mesh included.
+        """
+        eng = self.engine
+        colors = jax.vmap(
+            lambda key: jax.random.randint(key, (eng.graph.n,), 0, eng.k)
+        )(keys_chunk)
+        return self.counts_for_colors(colors) * eng._norm_factors[None, :]
+
+    def make_run_fn(self) -> Callable:
+        """One jit for the whole run: ``lax.map`` over key chunks."""
+        return jax.jit(lambda keys: jax.lax.map(self.counts_for_keys_chunk, keys))
+
+    # -- memory model --------------------------------------------------------
+
+    def transient_elements(self) -> int:
+        """Widest per-stage scratch one coloring needs, in store-dtype
+        elements (gather intermediates, collective buffers)."""
+        raise NotImplementedError
+
+    def resident_elements(self) -> int:
+        """Live M-matrix elements one coloring keeps resident."""
+        return self.engine.graph.n * self.engine.peak_columns()
+
+    def bytes_per_coloring(self) -> int:
+        """Estimated live bytes one coloring contributes to a chunk."""
+        itemsize = jnp.dtype(self.engine.policy.store_dtype).itemsize
+        return (self.transient_elements() + self.resident_elements()) * itemsize
+
+
+class LocalBackend(EngineBackend):
+    """Shared single-device DP: subclasses only supply :meth:`spmm`.
+
+    The fused multi-template DP walks every plan's stages with DP states and
+    SpMM products memoized by rooted canonical form, all M matrices in the
+    fused ``(n, B, C)`` layout.
+    """
+
+    def spmm(self, m: jnp.ndarray) -> jnp.ndarray:
+        """One neighbor reduction over ALL fused columns; returns accum dtype."""
+        raise NotImplementedError
+
+    def ema(self, m_a, b_mat, idx_a, idx_p):
+        """Vertex-local eMA on fused (n, B, C) state, fp accumulation."""
+        pol = self.engine.policy
+        n, bsz, _ = m_a.shape
+        init = jnp.zeros((n, bsz, idx_a.shape[0]), pol.accum_dtype)
+        return _ema_apply_fused(m_a, b_mat, idx_a, idx_p, init).astype(pol.store_dtype)
+
+    def counts_for_colors(self, colors: jnp.ndarray) -> jnp.ndarray:
+        """(B, n) colorings -> (B, T) un-normalized colorful totals.
+
+        Sub-template states and SpMM products are memoized by canonical
+        form, so templates sharing passive sub-templates (and every
+        template's leaf stage) reuse one computation per coloring.
+        """
+        eng = self.engine
+        pol = eng.policy
+        leaf = jax.nn.one_hot(colors.T, eng.k, dtype=pol.store_dtype)  # (n, B, k)
+        slots: Dict[str, jnp.ndarray] = {}
+        prods: Dict[str, jnp.ndarray] = {}
+        totals = []
+        for p_idx, plan in enumerate(eng.plans):
+            canons = eng._canons[p_idx]
+            for i, sub in enumerate(plan.partition.subs):
+                key = canons[i]
+                if key in slots:
+                    continue
+                if sub.is_leaf:
+                    slots[key] = leaf
+                    continue
+                p_key = canons[sub.passive]
+                if p_key not in prods:
+                    prods[p_key] = self.spmm(slots[p_key])
+                idx_a, idx_p = eng._stage_tables[(p_idx, i)]
+                slots[key] = self.ema(slots[canons[sub.active]], prods[p_key], idx_a, idx_p)
+            root = slots[canons[plan.partition.root_index]].astype(pol.accum_dtype)
+            # reduce color sets first, then vertices: the per-coloring order
+            # is independent of the batch size (bit-exact across chunkings)
+            totals.append(root.sum(axis=2).sum(axis=0).astype(jnp.float32))
+        return jnp.stack(totals, axis=1)  # (B, T)
+
+    def transient_elements(self) -> int:
+        # default: the (n, C_p) gather intermediate of a dense-ish reduction
+        return self.engine.graph.n * self.engine._max_passive_columns()
+
+
+class EdgesBackend(LocalBackend):
+    """Edge-list gather + segment-sum (the skew-robust default)."""
+
+    name = "edges"
+
+    def __init__(self, engine: "CountingEngine"):
+        super().__init__(engine)
+        g = engine.graph
+        self._src = jnp.asarray(g.src)
+        self._dst = jnp.asarray(g.dst)
+
+    def spmm(self, m):
+        return jax.ops.segment_sum(
+            m[self._src].astype(self.engine.policy.accum_dtype),
+            self._dst,
+            num_segments=self.engine.graph.n,
+            indices_are_sorted=True,
+        )
+
+    def transient_elements(self) -> int:
+        # the (edges, C_p) message gather is the true high-water mark
+        return self.engine.graph.num_directed * self.engine._max_passive_columns()
+
+
+class EllBackend(LocalBackend):
+    """Padded-row neighbor gather (flat degree distributions)."""
+
+    name = "ell"
+
+    def __init__(self, engine: "CountingEngine"):
+        super().__init__(engine)
+        nbr, mask = engine.graph.ell()
+        self._nbr = jnp.asarray(nbr)
+        self._ell_mask = jnp.asarray(mask)
+
+    def spmm(self, m):
+        pol = self.engine.policy
+        gathered = m[self._nbr].astype(pol.accum_dtype)  # (n, max_deg, B, C)
+        return jnp.einsum("ndbc,nd->nbc", gathered, self._ell_mask.astype(pol.accum_dtype))
+
+    def transient_elements(self) -> int:
+        g = self.engine.graph
+        return g.n * max(g.max_degree(), 1) * self.engine._max_passive_columns()
+
+
+class DenseBackend(LocalBackend):
+    """Dense-adjacency matmul (tiny graphs)."""
+
+    name = "dense"
+
+    def __init__(self, engine: "CountingEngine"):
+        super().__init__(engine)
+        self._adj = jnp.asarray(engine.graph.dense_adjacency())
+
+    def spmm(self, m):
+        pol = self.engine.policy
+        n, b, c = m.shape
+        out = jnp.matmul(
+            self._adj.astype(pol.store_dtype),
+            m.reshape(n, b * c),
+            preferred_element_type=pol.accum_dtype,
+        )
+        return out.reshape(n, b, c).astype(pol.accum_dtype)
+
+
+class BlockedEllBackend(LocalBackend):
+    """Pallas blocked-ELL kernel (large graphs on TPU)."""
+
+    name = "blocked"
+
+    def __init__(self, engine: "CountingEngine", block_size: int = 256):
+        super().__init__(engine)
+        from repro.kernels.spmm_blocked.ops import prepare_operand
+
+        self._blocked_op = prepare_operand(engine.graph, block_size=block_size)
+
+    def spmm(self, m):
+        # kernel is 2-D (n, C) — fuse batch into columns
+        from repro.kernels.spmm_blocked.ops import spmm_blocked
+
+        n, b, c = m.shape
+        out = spmm_blocked(
+            self._blocked_op,
+            m.reshape(n, b * c).astype(jnp.float32),
+            interpret=self.engine.interpret,
+        )
+        return out.reshape(n, b, c).astype(self.engine.policy.accum_dtype)
+
+
+class CustomBackend(LocalBackend):
+    """Caller-supplied ``(n, C) -> (n, C)`` neighbor-sum kernel."""
+
+    name = "custom"
+
+    def __init__(self, engine: "CountingEngine", spmm_fn: Callable):
+        super().__init__(engine)
+        self._spmm_fn = spmm_fn
+
+    def spmm(self, m):
+        n, b, c = m.shape
+        out = self._spmm_fn(m.reshape(n, b * c))
+        return out.reshape(n, b, c).astype(self.engine.policy.accum_dtype)
+
+    def transient_elements(self) -> int:
+        # assume edge-list-like internals (the conservative choice)
+        return self.engine.graph.num_directed * self.engine._max_passive_columns()
+
+
+class MeshBackend(EngineBackend):
+    """Distributed backend: the fused DP under ``shard_map`` on a device mesh.
+
+    Wraps the column-batched all-gather SpMM and streamed eMA of
+    :mod:`repro.core.distributed`: vertices are 1-D row-partitioned across
+    every mesh axis, each DP stage all-gathers the passive M matrix in
+    ``column_batch``-column slices (each collective serving all ``B``
+    chunked colorings at once), and the eMA stays vertex-local.  Split
+    tables are built once per plan at construction, de-duplicated by
+    ``(k, m, m_a)``, and closure-captured by the shard_map program.
+
+    Args (via ``CountingEngine(...)``):
+      mesh: the ``jax.sharding.Mesh`` to run on (required).
+      column_batch: passive columns per all-gather; ``None`` auto-sizes to
+        ``min(128, max passive column count)``.
+      ema_mode: ``"streamed"`` (default — fused per-batch SpMM->eMA, the B
+        matrix never materializes) or ``"loop"`` (paper-faithful Algorithm
+        5 with the SpMM product memoized per canonical passive form).
+      gather_dtype: optional wire dtype for compressed all-gathers
+        (e.g. ``jnp.bfloat16``); accumulation stays fp32.
+      balance_degrees: relabel vertices round-robin by degree rank before
+        sharding (spreads hub rows; colorings are permuted to follow, so
+        counts are unchanged).
+    """
+
+    name = "mesh"
+
+    def __init__(
+        self,
+        engine: "CountingEngine",
+        mesh,
+        *,
+        column_batch: Optional[int] = None,
+        ema_mode: str = "streamed",
+        gather_dtype=None,
+        balance_degrees: bool = False,
+    ):
+        super().__init__(engine)
+        if mesh is None:
+            raise ValueError("backend='mesh' needs a jax.sharding.Mesh (mesh=...)")
+        from .distributed import make_batched_count_fn, mesh_peak_columns, shard_graph
+
+        self.mesh = mesh
+        self.ema_mode = ema_mode
+        self.gather_dtype = gather_dtype
+        n_shards = int(np.prod(mesh.devices.shape))
+        self.sharded = shard_graph(engine.graph, n_shards, balance_degrees=balance_degrees)
+        if column_batch is None:
+            column_batch = min(128, max(engine._max_passive_columns(), engine.k))
+        self.column_batch = int(column_batch)
+        self._count_fn = make_batched_count_fn(
+            engine.plans,
+            mesh,
+            self.sharded.n_padded,
+            self.sharded.edges_per_shard,
+            column_batch=self.column_batch,
+            ema_mode=ema_mode,
+            gather_dtype=gather_dtype,
+            canons=engine._canons,
+            store_dtype=engine.policy.store_dtype,
+            accum_dtype=engine.policy.accum_dtype,
+        )
+        self._src = jnp.asarray(self.sharded.src)
+        self._dst_local = jnp.asarray(self.sharded.dst_local)
+        self._edge_mask = jnp.asarray(self.sharded.edge_mask)
+        # colorings follow the degree-balancing relabel (scatter old -> new;
+        # new ids range over [0, n_padded) with pad slots interleaved)
+        self._perm = (
+            jnp.asarray(self.sharded.perm) if self.sharded.perm is not None else None
+        )
+        self._peak_padded = mesh_peak_columns(
+            engine.plans, engine._canons, ema_mode, self.column_batch
+        )
+
+    def counts_for_colors(self, colors: jnp.ndarray) -> jnp.ndarray:
+        colors = jnp.asarray(colors)
+        if self._perm is not None:
+            padded = jnp.zeros((colors.shape[0], self.sharded.n_padded), colors.dtype)
+            colors = padded.at[:, self._perm].set(colors)
+        else:
+            pad = self.sharded.n_padded - colors.shape[1]
+            if pad:
+                colors = jnp.pad(colors, ((0, 0), (0, pad)))
+        return self._count_fn(colors, self._src, self._dst_local, self._edge_mask)
+
+    # -- memory model (per shard!) -------------------------------------------
+
+    def transient_elements(self) -> int:
+        """Per-shard collective scratch: one all-gathered column batch
+        (``n_padded * column_batch``) plus the per-shard edge message gather
+        (``edges_per_shard * column_batch``)."""
+        cb = self.column_batch
+        return self.sharded.n_padded * cb + self.sharded.edges_per_shard * cb
+
+    def resident_elements(self) -> int:
+        """Per-shard live DP state: local rows times the liveness-aware
+        peak of padded M columns under the shared multi-template schedule."""
+        return self.sharded.rows_per_shard * self._peak_padded
+
+
+ENGINE_BACKENDS = ("edges", "ell", "dense", "blocked", "mesh", "custom")
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
 
 
 class CountingEngine:
@@ -178,14 +520,19 @@ class CountingEngine:
       graph: the network.
       templates: one :class:`Template` or a sequence of same-``k`` templates
         counted together per coloring (shared leaf one-hot / SpMM products).
-      backend: ``auto`` | ``edges`` | ``ell`` | ``dense`` | ``blocked``.
+      backend: ``auto`` | ``edges`` | ``ell`` | ``dense`` | ``blocked`` |
+        ``mesh``.  ``auto`` resolves from graph statistics
+        (:func:`select_backend`), or to ``mesh`` when ``mesh=`` is given.
         Ignored when ``spmm_fn`` is given.
       spmm_fn: optional custom ``(n, C) -> (n, C)`` neighbor-sum kernel.
       dtype_policy: ``fp32`` | ``bf16`` | a :class:`DtypePolicy` | a dtype.
-      memory_budget_bytes: live-footprint budget steering the chunk picker.
+      memory_budget_bytes: live-footprint budget steering the chunk picker
+        (per device — for the mesh backend the model is per shard).
       chunk_size: explicit colorings-per-chunk override (skips the picker).
       plans: optional pre-built :class:`CountingPlan` per template.
       block_size / interpret: Pallas blocked-ELL kernel knobs.
+      mesh / column_batch / ema_mode / gather_dtype / balance_degrees:
+        mesh-backend knobs — see :class:`MeshBackend`.
     """
 
     def __init__(
@@ -201,6 +548,11 @@ class CountingEngine:
         plans: Optional[Sequence[CountingPlan]] = None,
         block_size: int = 256,
         interpret: bool = False,
+        mesh=None,
+        column_batch: Optional[int] = None,
+        ema_mode: str = "streamed",
+        gather_dtype=None,
+        balance_degrees: bool = False,
     ):
         if isinstance(templates, Template):
             templates = [templates]
@@ -217,6 +569,7 @@ class CountingEngine:
         self.policy = DtypePolicy.resolve(dtype_policy)
         self.memory_budget_bytes = int(memory_budget_bytes)
         self.interpret = interpret
+        self.mesh = mesh
 
         if plans is None:
             self.plans: Tuple[CountingPlan, ...] = tuple(
@@ -251,20 +604,51 @@ class CountingEngine:
             [1.0 / (norm * plan.automorphisms) for plan in self.plans], jnp.float32
         )
 
-        # --- SpMM backend (device-resident operands built once).
+        # --- backend resolution + construction (operands built once).
         if spmm_fn is not None:
             self.backend = "custom"
-            self._custom_spmm = spmm_fn
+        elif backend == "auto":
+            self.backend = "mesh" if mesh is not None else select_backend(graph)
         else:
-            self.backend = select_backend(graph) if backend == "auto" else backend
-            self._custom_spmm = None
-        self._build_spmm_operands(block_size)
+            self.backend = backend
+        self.backend_impl: EngineBackend = self._make_backend(
+            spmm_fn=spmm_fn,
+            block_size=block_size,
+            column_batch=column_batch,
+            ema_mode=ema_mode,
+            gather_dtype=gather_dtype,
+            balance_degrees=balance_degrees,
+        )
 
         self.chunk_size = int(chunk_size) if chunk_size else pick_chunk_size(
             self.bytes_per_coloring(), self.memory_budget_bytes
         )
 
         self._run_fn = None  # built lazily (jit cache)
+
+    def _make_backend(
+        self, *, spmm_fn, block_size, column_batch, ema_mode, gather_dtype, balance_degrees
+    ) -> EngineBackend:
+        if self.backend == "custom":
+            return CustomBackend(self, spmm_fn)
+        if self.backend == "edges":
+            return EdgesBackend(self)
+        if self.backend == "ell":
+            return EllBackend(self)
+        if self.backend == "dense":
+            return DenseBackend(self)
+        if self.backend == "blocked":
+            return BlockedEllBackend(self, block_size=block_size)
+        if self.backend == "mesh":
+            return MeshBackend(
+                self,
+                self.mesh,
+                column_batch=column_batch,
+                ema_mode=ema_mode,
+                gather_dtype=gather_dtype,
+                balance_degrees=balance_degrees,
+            )
+        raise ValueError(f"unknown backend {self.backend!r} (one of {ENGINE_BACKENDS})")
 
     # ------------------------------------------------------------------
     # Memory planning
@@ -303,142 +687,12 @@ class CountingEngine:
     def bytes_per_coloring(self) -> int:
         """Estimated live bytes one coloring contributes to a chunk.
 
-        Resident term: ``n * peak_columns`` M-matrix floats.  Transient
-        term: the widest per-stage neighbor gather — ``(edges, C_p)`` for
-        the edge-list backend, ``(n * max_deg, C_p)`` for ELL — which is the
-        true high-water mark on scatter/gather backends.
+        Delegates to the backend's memory model: resident M-matrix state
+        plus the widest per-stage transient (edge/row gather scratch for the
+        local backends; all-gather buffer + per-shard message gather for the
+        mesh backend, where the figure is per shard).
         """
-        itemsize = jnp.dtype(self.policy.store_dtype).itemsize
-        max_cp = self._max_passive_columns()
-        if self.backend in ("edges", "custom"):
-            transient = self.graph.num_directed * max_cp
-        elif self.backend == "ell":
-            transient = self.graph.n * max(self.graph.max_degree(), 1) * max_cp
-        else:  # dense / blocked: no edge-wide gather intermediate
-            transient = self.graph.n * max_cp
-        resident = self.graph.n * self.peak_columns()
-        return (transient + resident) * itemsize
-
-    # ------------------------------------------------------------------
-    # SpMM backends — all operate on the fused (n, B, C) layout
-    # ------------------------------------------------------------------
-
-    def _build_spmm_operands(self, block_size: int) -> None:
-        g = self.graph
-        if self.backend == "custom":
-            pass  # the caller's spmm_fn owns its operands
-        elif self.backend == "edges":
-            self._src = jnp.asarray(g.src)
-            self._dst = jnp.asarray(g.dst)
-        elif self.backend == "ell":
-            nbr, mask = g.ell()
-            self._nbr = jnp.asarray(nbr)
-            self._ell_mask = jnp.asarray(mask)
-        elif self.backend == "dense":
-            self._adj = jnp.asarray(g.dense_adjacency())
-        elif self.backend == "blocked":
-            from repro.kernels.spmm_blocked.ops import prepare_operand
-
-            self._blocked_op = prepare_operand(g, block_size=block_size)
-        else:
-            raise ValueError(f"unknown backend {self.backend!r}")
-
-    def _spmm(self, m: jnp.ndarray) -> jnp.ndarray:
-        """One neighbor reduction over ALL fused columns; returns accum dtype."""
-        g, pol = self.graph, self.policy
-        n, b, c = m.shape
-        if self.backend == "custom":
-            out = self._custom_spmm(m.reshape(n, b * c))
-            return out.reshape(n, b, c).astype(pol.accum_dtype)
-        if self.backend == "edges":
-            return jax.ops.segment_sum(
-                m[self._src].astype(pol.accum_dtype),
-                self._dst,
-                num_segments=n,
-                indices_are_sorted=True,
-            )
-        if self.backend == "ell":
-            gathered = m[self._nbr].astype(pol.accum_dtype)  # (n, max_deg, B, C)
-            return jnp.einsum("ndbc,nd->nbc", gathered, self._ell_mask.astype(pol.accum_dtype))
-        if self.backend == "dense":
-            out = jnp.matmul(
-                self._adj.astype(pol.store_dtype),
-                m.reshape(n, b * c),
-                preferred_element_type=pol.accum_dtype,
-            )
-            return out.reshape(n, b, c).astype(pol.accum_dtype)
-        # blocked (Pallas): kernel is 2-D (n, C) — fuse batch into columns.
-        from repro.kernels.spmm_blocked.ops import spmm_blocked
-
-        out = spmm_blocked(
-            self._blocked_op, m.reshape(n, b * c).astype(jnp.float32), interpret=self.interpret
-        )
-        return out.reshape(n, b, c).astype(pol.accum_dtype)
-
-    def _ema(self, m_a, b_mat, idx_a, idx_p):
-        """Vertex-local eMA on fused (n, B, C) state, fp accumulation."""
-        pol = self.policy
-        n, bsz, _ = m_a.shape
-        n_out, n_splits = idx_a.shape
-
-        def body(t, acc):
-            ga = jnp.take(m_a, idx_a[:, t], axis=2).astype(pol.accum_dtype)
-            gp = jnp.take(b_mat, idx_p[:, t], axis=2).astype(pol.accum_dtype)
-            return acc + ga * gp
-
-        acc = jax.lax.fori_loop(
-            0, n_splits, body, jnp.zeros((n, bsz, n_out), pol.accum_dtype)
-        )
-        return acc.astype(pol.store_dtype)
-
-    # ------------------------------------------------------------------
-    # The fused multi-template DP
-    # ------------------------------------------------------------------
-
-    def _raw_counts_batch(self, colors: jnp.ndarray) -> jnp.ndarray:
-        """(B, n) colorings -> (B, T) un-normalized colorful totals.
-
-        Sub-template states and SpMM products are memoized by canonical
-        form, so templates sharing passive sub-templates (and every
-        template's leaf stage) reuse one computation per coloring.
-        """
-        pol = self.policy
-        leaf = jax.nn.one_hot(colors.T, self.k, dtype=pol.store_dtype)  # (n, B, k)
-        slots: Dict[str, jnp.ndarray] = {}
-        prods: Dict[str, jnp.ndarray] = {}
-        totals = []
-        for p_idx, plan in enumerate(self.plans):
-            canons = self._canons[p_idx]
-            for i, sub in enumerate(plan.partition.subs):
-                key = canons[i]
-                if key in slots:
-                    continue
-                if sub.is_leaf:
-                    slots[key] = leaf
-                    continue
-                p_key = canons[sub.passive]
-                if p_key not in prods:
-                    prods[p_key] = self._spmm(slots[p_key])
-                idx_a, idx_p = self._stage_tables[(p_idx, i)]
-                slots[key] = self._ema(slots[canons[sub.active]], prods[p_key], idx_a, idx_p)
-            root = slots[canons[plan.partition.root_index]].astype(pol.accum_dtype)
-            # reduce color sets first, then vertices: the per-coloring order
-            # is independent of the batch size (bit-exact across chunkings)
-            totals.append(root.sum(axis=2).sum(axis=0).astype(jnp.float32))
-        return jnp.stack(totals, axis=1)  # (B, T)
-
-    def _counts_for_keys_chunk(self, keys_chunk: jnp.ndarray) -> jnp.ndarray:
-        colors = jax.vmap(
-            lambda key: jax.random.randint(key, (self.graph.n,), 0, self.k)
-        )(keys_chunk)
-        return self._raw_counts_batch(colors) * self._norm_factors[None, :]
-
-    def _get_run_fn(self):
-        if self._run_fn is None:
-            self._run_fn = jax.jit(
-                lambda keys: jax.lax.map(self._counts_for_keys_chunk, keys)
-            )
-        return self._run_fn
+        return self.backend_impl.bytes_per_coloring()
 
     # ------------------------------------------------------------------
     # Public API
@@ -447,7 +701,12 @@ class CountingEngine:
     def raw_counts(self, colors) -> jnp.ndarray:
         """(n,) coloring -> (T,) raw colorful totals (test/inspection hook)."""
         colors = jnp.asarray(colors)
-        return self._raw_counts_batch(colors[None, :])[0]
+        return self.backend_impl.counts_for_colors(colors[None, :])[0]
+
+    def _get_run_fn(self):
+        if self._run_fn is None:
+            self._run_fn = self.backend_impl.make_run_fn()
+        return self._run_fn
 
     def count_keys(self, keys) -> np.ndarray:
         """Normalized per-iteration estimates for explicit PRNG keys.

@@ -67,16 +67,42 @@ def estimate_embeddings(
     backend: str = "auto",
     chunk_size: Optional[int] = None,
     memory_budget_bytes: Optional[int] = None,
+    mesh=None,
+    column_batch: Optional[int] = None,
+    gather_dtype=None,
+    balance_degrees: bool = False,
 ) -> EstimateResult:
-    """End-to-end single-host estimator (examples & tests).
+    """End-to-end estimator (examples & tests), single-host or mesh.
 
     All iterations execute batched on-device through the engine; the
     per-iteration values come back in one transfer (no ``float()``
     round-trip per coloring).
+
+    Args:
+      graph / template: the network and the tree template to count.
+      iterations / seed: number of independent random colorings + PRNG seed.
+      spmm_fn: custom neighbor-sum kernel (forces the ``custom`` backend).
+      plan: pre-built :class:`CountingPlan` (rebuilt from the template when
+        omitted).
+      dtype: dtype policy — ``"fp32"`` | ``"bf16"`` | a dtype.
+      backend: engine backend name, or ``"auto"`` (graph statistics; resolves
+        to ``"mesh"`` when ``mesh`` is given).
+      chunk_size / memory_budget_bytes: chunk-picker overrides.
+      mesh: a ``jax.sharding.Mesh`` — run distributed on the engine's mesh
+        backend (column-batched all-gather SpMM + streamed eMA).
+      column_batch / gather_dtype / balance_degrees: mesh-backend knobs, see
+        :class:`repro.core.engine.MeshBackend`.
     """
     kwargs = {}
     if memory_budget_bytes is not None:
         kwargs["memory_budget_bytes"] = memory_budget_bytes
+    if mesh is not None:
+        kwargs.update(
+            mesh=mesh,
+            column_batch=column_batch,
+            gather_dtype=gather_dtype,
+            balance_degrees=balance_degrees,
+        )
     engine = CountingEngine(
         graph,
         [template],

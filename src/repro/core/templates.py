@@ -28,6 +28,7 @@ __all__ = [
     "SubTemplate",
     "TemplatePartition",
     "partition_template",
+    "sub_template_canonical",
     "tree_automorphisms",
     "path_template",
     "star_template",
@@ -162,6 +163,28 @@ def partition_template(template: Template, root: Optional[int] = None) -> Templa
 
     rec(tuple(sorted(range(template.k))), root)
     return TemplatePartition(template=template, subs=tuple(subs))
+
+
+def sub_template_canonical(template: Template, vertices: Tuple[int, ...], root: int) -> str:
+    """AHU canonical string of the rooted sub-template induced by ``vertices``.
+
+    Two sub-templates with equal strings have identical count matrices
+    ``M_s`` for every coloring — the key used by the engine backends to share
+    DP state and SpMM products across templates (and across stages within one
+    template).
+    """
+    allowed = set(vertices)
+    adj: Dict[int, List[int]] = {v: [] for v in vertices}
+    for u, v in template.edges:
+        if u in allowed and v in allowed:
+            adj[u].append(v)
+            adj[v].append(u)
+
+    def canon(node: int, parent: int) -> str:
+        forms = sorted(canon(c, node) for c in adj[node] if c != parent)
+        return "(" + "".join(forms) + ")"
+
+    return canon(root, -1)
 
 
 # ---------------------------------------------------------------------------

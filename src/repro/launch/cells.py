@@ -503,7 +503,6 @@ def _build_subgraph_cell(arch, cfg, shape: ShapeCell, mesh, probe: bool = False)
     from repro.core.distributed import (
         distributed_input_specs,
         make_distributed_count_fn,
-        plan_table_specs,
     )
     from repro.core.templates import PAPER_TEMPLATES
 
@@ -522,36 +521,23 @@ def _build_subgraph_cell(arch, cfg, shape: ShapeCell, mesh, probe: bool = False)
     # core iteration 1) — the batched-B baseline exceeds single-pod HBM at
     # u20 (19.7 GB/device; see results/perf/subgraph_u20.json)
     streamed = (k >= 18) and not probe
+    # split tables are built once inside make_distributed_count_fn and
+    # closure-captured — they are jit constants, not cell arguments
     fn = make_distributed_count_fn(
         plan, mesh, n_padded, edges_per_shard,
         column_batch=None if probe else 128,
         ema_mode="vectorized" if probe else ("streamed" if streamed else "loop"),
     )
     specs = distributed_input_specs(n_padded, n_shards, edges_per_shard)
-    if streamed:
-        from repro.core.distributed import build_streamed_tables
-
-        tbl = build_streamed_tables(plan, 128)
-        t_specs = {
-            kk: tuple(jax.ShapeDtypeStruct(a.shape, a.dtype) for a in v)
-            for kk, v in tbl.items()
-        }
-    else:
-        t_specs = plan_table_specs(plan)
     every = tuple(mesh.axis_names)
     in_sh = (
         NamedSharding(mesh, P(every)),
         NamedSharding(mesh, P(every)),
         NamedSharding(mesh, P(every)),
         NamedSharding(mesh, P(every)),
-        jax.tree.map(
-            lambda x: NamedSharding(mesh, P(None, None)),
-            t_specs,
-            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
-        ),
     )
     return CellSpec(
-        arch, shape.name, fn, (*specs, t_specs), in_sh, (),
+        arch, shape.name, fn, specs, in_sh, (),
         _subgraph_flops(plan, n_padded, e_directed),
         {"family": "subgraph", "kind": "count", "k": k, "n": n, "edges": e_directed},
     )
