@@ -3,19 +3,28 @@ plus the batched CountingEngine vs the per-coloring dispatch loop.
 
 Two comparisons, both on RMAT graphs (the paper's synthetic family):
 
-* **tableIII** — per coloring, Algorithm 5 (ONE batched SpMM per stage +
-  vertex-local eMA) vs FASCIA's Algorithm 2 access pattern implemented in
-  JAX for fairness: the neighbor reduction (an SpMV) re-executed for every
-  (output color set, split) pair — exactly the redundancy Equation 1
-  removes.
+* **tableIII** — per coloring, the engine's fused SpMM+eMA pipeline (no
+  aggregate product ever materialized; backend auto-selected per graph) vs
+  FASCIA's Algorithm 2 access pattern implemented in JAX for fairness: the
+  neighbor reduction (an SpMV) re-executed for every (output color set,
+  split) pair — exactly the redundancy Equation 1 removes.  rmat8k is the
+  regime where the old two-pass dataflow fell off the XLA:CPU scatter
+  cliff (0.1–0.2x vs traversal); the fused rows track that it stays fixed.
+  Results are cross-checked against the legacy two-pass reference
+  (``count_colorful_vectorized``) before timing.
 * **engine** — a full 64-iteration estimation run: the legacy per-coloring
   jit-dispatch loop (one device call + one host sync per coloring) vs the
   :class:`~repro.core.engine.CountingEngine`, which fuses a chunk of
   colorings into the column dimension of the DP state and runs the whole
   thing in one jit.  Estimates are cross-checked to fp32 tolerance before
-  timing; ``derived`` records the speedup.
+  timing; ``derived`` records the speedup.  A ``memory_model`` row per
+  config compares the chunk picker's predicted live bytes with XLA's
+  ``memory_analysis()`` temp allocation when the backend exposes it (the
+  ROADMAP calibration item).
 
 Run standalone for the CI smoke:  ``python -m benchmarks.bench_counting --quick``
+(the quick subset includes an rmat8k row so the cliff regression is caught
+in CI, not just the full suite).
 """
 
 from __future__ import annotations
@@ -78,17 +87,27 @@ def _run_table_iii(datasets, templates) -> None:
             plan = build_counting_plan(t)
             colors = jnp.asarray(rng.integers(0, t.k, size=g.n))
 
-            vec = jax.jit(lambda c, p=plan, s=spmm: count_colorful_vectorized(p, c, s))
+            # the system under test: the engine's fused SpMM+eMA pipeline
+            engine = CountingEngine(g, [t], plans=[plan])
+            fused = jax.jit(engine.backend_impl.counts_for_colors)
             trav = jax.jit(
                 lambda c, p=plan, sr=src, ds=dst, n=g.n: traversal_count_jax(p, sr, ds, n, c)
             )
-            # correctness cross-check before timing
-            v, tr = float(vec(colors)), float(trav(colors))
+            # correctness cross-check (vs the legacy two-pass reference AND
+            # the traversal model) before timing
+            v = float(fused(colors[None, :])[0, 0])
+            ref = float(count_colorful_vectorized(plan, colors, spmm))
+            tr = float(trav(colors))
+            assert abs(v - ref) <= 1e-4 * max(abs(ref), 1.0), (v, ref)
             assert abs(v - tr) <= 1e-4 * max(abs(v), 1.0), (v, tr)
 
-            us_v = time_fn(vec, colors)
+            us_v = time_fn(fused, colors[None, :])
             us_t = time_fn(trav, colors)
-            record(f"tableIII/{dname}/{tname}/subgraph2vec", us_v, f"count={v:.3e}")
+            record(
+                f"tableIII/{dname}/{tname}/subgraph2vec",
+                us_v,
+                f"count={v:.3e};backend={engine.backend}",
+            )
             record(f"tableIII/{dname}/{tname}/traversal", us_t, f"speedup={us_t / us_v:.1f}x")
 
 
@@ -134,12 +153,33 @@ def _run_engine_vs_loop(datasets, templates, iterations: int, timing_iters: int)
                 us_engine,
                 f"speedup={speedup:.2f}x;chunk={engine.chunk_size};backend={engine.backend}",
             )
+            # chunk-picker calibration: predicted live bytes vs XLA's
+            # measured temp allocation (None when the backend lacks
+            # memory_analysis — it is optional in XLA)
+            ma = engine.compiled_memory_analysis(iterations)
+            actual = ma["actual_temp_bytes"]
+            ratio = ma["ratio"]
+            record(
+                f"engine/{dname}/{tname}/memory_model",
+                0.0,
+                f"predicted_bytes={ma['predicted_bytes']:.0f};"
+                f"actual_temp_bytes={'%.0f' % actual if actual else 'n/a'};"
+                f"predicted_over_actual={'%.3f' % ratio if ratio else 'n/a'}",
+            )
+            if ratio:
+                print(
+                    f"# memory model {dname}/{tname}: predicted/actual = {ratio:.3f}",
+                    file=sys.stderr,
+                )
 
 
 def run(quick: bool = False) -> None:
     if quick:
         datasets = {"rmat2k": rmat_graph(2048, 20_000, seed=1)}
         _run_engine_vs_loop(datasets, ["u5-1", "u6"], iterations=16, timing_iters=1)
+        # the rmat8k cliff row: the fused pipeline must stay ahead of the
+        # traversal baseline here (the two-pass dataflow was 5-10x BEHIND)
+        _run_table_iii({"rmat8k": rmat_graph(8192, 80_000, seed=2)}, ["u5-2", "u6"])
         return
     datasets = {
         "rmat2k": rmat_graph(2048, 20_000, seed=1),

@@ -118,19 +118,31 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated bench keys")
     ap.add_argument("--json", default="BENCH_counting.json", help="output JSON path")
+    ap.add_argument(
+        "--quick",
+        action="store_true",
+        help="~1min smoke subset (rmat2k engine rows + the rmat8k cliff "
+        "rows), merged into the JSON so the trend diff still flags them",
+    )
     args = ap.parse_args()
-    keys = list(dict.fromkeys(args.only.split(","))) if args.only else [
-        "tableIII", "fig12", "fig13", "fig14", "kernels"
-    ]
-
     emit_header()
     failed = []
-    for key in keys:
+    if args.quick:
         try:
-            BENCHES[key]()
+            bench_counting.run(quick=True)
         except Exception:
             traceback.print_exc()
-            failed.append(key)
+            failed.append("quick")
+    else:
+        keys = list(dict.fromkeys(args.only.split(","))) if args.only else [
+            "tableIII", "fig12", "fig13", "fig14", "kernels"
+        ]
+        for key in keys:
+            try:
+                BENCHES[key]()
+            except Exception:
+                traceback.print_exc()
+                failed.append(key)
     emit_json(args.json)
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)

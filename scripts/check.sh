@@ -14,8 +14,52 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1: pytest =="
 python -m pytest -x -q
 
-echo "== smoke: batched engine vs per-coloring loop =="
+echo "== smoke: batched engine vs per-coloring loop (+ rmat8k cliff row) =="
 python -m benchmarks.bench_counting --quick
+
+echo "== smoke: fused SpMM+eMA equality (pure-JAX backends + interpret-mode Pallas) =="
+python - <<'PY'
+import numpy as np, jax.numpy as jnp
+from functools import partial
+from repro.core import (
+    CountingEngine, build_counting_plan, count_colorful_vectorized,
+    get_template, rmat_graph, spmm_edges,
+)
+
+g = rmat_graph(220, 900, seed=11)
+for tname in ("u5-2", "u6"):
+    t = get_template(tname)
+    plan = build_counting_plan(t)
+    colors = np.random.default_rng(1).integers(0, t.k, size=g.n)
+    # legacy two-pass reference (materializes the aggregate product)
+    ref = float(count_colorful_vectorized(
+        plan, jnp.asarray(colors),
+        partial(spmm_edges, jnp.asarray(g.src), jnp.asarray(g.dst), g.n),
+    ))
+    for backend, kw in (
+        ("edges", {}), ("sell", {}), ("dense", {}),
+        ("blocked", dict(interpret=True, block_size=128)),  # fused Pallas kernel
+    ):
+        got = float(CountingEngine(g, [t], backend=backend, **kw).raw_counts(colors)[0])
+        rel = abs(got - ref) / max(abs(ref), 1e-9)
+        assert rel < 1e-5, (tname, backend, got, ref)
+    print(f"fused smoke {tname}: all backends == two-pass reference -> OK")
+PY
+
+echo "== guard: chunk picker must not shrink below the seed bench chunks =="
+python - <<'PY'
+from repro.core import CountingEngine, get_template, rmat_graph
+
+# seed values recorded for the u5-u7 rmat2k bench configs (PR 1/2 era, the
+# two-pass memory model); the fused model must only ever pick larger chunks
+SEED_CHUNKS = {"u5-1": 20, "u5-2": 22, "u6": 10, "u7": 5}
+g = rmat_graph(2048, 20_000, seed=1)
+for tname, seed_chunk in SEED_CHUNKS.items():
+    eng = CountingEngine(g, [get_template(tname)])
+    ok = eng.chunk_size > seed_chunk if tname in ("u6", "u7") else eng.chunk_size >= seed_chunk
+    assert ok, f"{tname}: chunk {eng.chunk_size} fell below seed {seed_chunk}"
+    print(f"chunk guard {tname}: {eng.chunk_size} (seed {seed_chunk}) -> OK")
+PY
 
 echo "== smoke: mesh backend on 4 virtual devices =="
 XLA_FLAGS="--xla_force_host_platform_device_count=4" python - <<'PY'

@@ -3,6 +3,7 @@
 from .colorsets import (
     SplitTable,
     binom,
+    bucketed_split_entries,
     build_split_table,
     colorful_probability,
     enumerate_subsets,
@@ -16,21 +17,35 @@ from .counting import (
     build_counting_plan,
     count_colorful_traversal,
     count_colorful_vectorized,
+    fused_aggregate_ema,
+    liveness_peak_columns,
     normalize_count,
+    schedule_liveness,
     spmm_edges,
     spmm_ell,
 )
 from .engine import (
+    BACKEND_ENV_VAR,
     ENGINE_BACKENDS,
     CountingEngine,
     DtypePolicy,
     EngineBackend,
+    StageTables,
     pick_chunk_size,
     select_backend,
     sub_template_canonical,
 )
 from .estimator import EstimateResult, estimate_embeddings, make_count_step, required_iterations
-from .graph import BlockedELL, Graph, build_blocked_ell, erdos_renyi_graph, grid_graph, rmat_graph
+from .graph import (
+    BlockedELL,
+    Graph,
+    SellGraph,
+    build_blocked_ell,
+    build_sell,
+    erdos_renyi_graph,
+    grid_graph,
+    rmat_graph,
+)
 from .templates import (
     PAPER_TEMPLATES,
     Template,

@@ -35,6 +35,7 @@ __all__ = [
     "unrank_subsets",
     "SplitTable",
     "build_split_table",
+    "bucketed_split_entries",
     "colorful_probability",
 ]
 
@@ -154,6 +155,50 @@ def build_split_table(k: int, m: int, m_a: int) -> SplitTable:
         idx_a[:, t] = rank_subsets(sub_a).astype(np.int32)
         idx_p[:, t] = rank_subsets(sub_p).astype(np.int32)
     return SplitTable(idx_a=idx_a, idx_p=idx_p, n_out=n_out, n_splits=n_splits, k=k, m=m, m_a=m_a)
+
+
+def bucketed_split_entries(table: SplitTable, column_batch: int):
+    """Re-bucket a split table by passive-column batch, dense per output row.
+
+    The fused SpMM+eMA pipeline walks the passive matrix in
+    ``column_batch``-column slices and must apply, for each slice, exactly
+    the (output, split) entries whose passive column falls inside it —
+    without ever materializing the full aggregate product.  For batch ``b``
+    covering passive columns ``[lo, lo + width)`` this returns entries
+    *bucketed per output row* so the eMA update stays a dense gather-FMA
+    (no scatter):
+
+        ``m_s[:, o] += sum_j m_a[:, idx_a[b][o, j]] * bcol[:, idx_p[b][o, j]]
+                       * valid[b][o, j]``
+
+    Returns a list over batches of ``(lo, width, idx_a, idx_p_local,
+    valid)`` with ``idx_a / idx_p_local / valid`` shaped ``(n_out, cap_b)``
+    (``cap_b`` = the batch's max entries per output row; padded entries are
+    zero-index, zero-valid; ``valid`` is ``None`` when every slot is real —
+    the executor then skips the masking multiply).  Every (output, split)
+    entry of the table lands in exactly one batch, and the batch order is
+    fixed, so the fused result is deterministic and equals the two-pass eMA
+    up to fp summation order.
+    """
+    if column_batch <= 0:
+        raise ValueError(f"column_batch must be positive, got {column_batch}")
+    n_out, _ = table.idx_a.shape
+    c_p = binom(table.k, table.m_p)
+    batches = []
+    for lo in range(0, c_p, column_batch):
+        width = min(column_batch, c_p - lo)
+        sel = (table.idx_p >= lo) & (table.idx_p < lo + width)  # (n_out, n_splits)
+        cap = int(sel.sum(axis=1).max(initial=0))
+        idx_a = np.zeros((n_out, max(cap, 1)), dtype=np.int32)
+        idx_p = np.zeros((n_out, max(cap, 1)), dtype=np.int32)
+        valid = np.zeros((n_out, max(cap, 1)), dtype=np.float32)
+        for o in range(n_out):
+            ts = np.nonzero(sel[o])[0]
+            idx_a[o, : ts.size] = table.idx_a[o, ts]
+            idx_p[o, : ts.size] = table.idx_p[o, ts] - lo
+            valid[o, : ts.size] = 1.0
+        batches.append((lo, width, idx_a, idx_p, valid if not valid.all() else None))
+    return batches
 
 
 def colorful_probability(k: int) -> float:

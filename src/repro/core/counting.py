@@ -36,6 +36,9 @@ __all__ = [
     "build_counting_plan",
     "spmm_edges",
     "spmm_ell",
+    "fused_aggregate_ema",
+    "schedule_liveness",
+    "liveness_peak_columns",
     "count_colorful_vectorized",
     "count_colorful_traversal",
     "brute_force_embeddings",
@@ -173,6 +176,142 @@ def _ema_apply_fused(
         return acc + ga * gp
 
     return jax.lax.fori_loop(0, n_splits, body, init)
+
+
+def fused_aggregate_ema(
+    m_p: jnp.ndarray,
+    m_a: jnp.ndarray,
+    batches: Sequence[Tuple[int, int, jnp.ndarray, jnp.ndarray, jnp.ndarray]],
+    n_out: int,
+    spmm_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    accum_dtype: jnp.dtype = jnp.float32,
+) -> jnp.ndarray:
+    """Fused SpMM+eMA over the engine's ``(n, B, C)`` fused state.
+
+    The execution model of the fused pipeline: the aggregate product
+    ``A_G @ M_p`` is never materialized.  Per passive-column batch, only that
+    batch's aggregate columns are computed (``spmm_fn`` applied to an
+    ``(n, B, width)`` slice) and immediately consumed by the dense
+    gather-FMA updates whose split's passive column falls in the batch
+    (:func:`repro.core.colorsets.bucketed_split_entries` pre-buckets the
+    split table).  Peak scratch per stage drops from the full
+    ``(n, B, C_p)`` product (plus the backend's edge-wide gather at
+    ``C_p`` columns) to a single ``width``-column slice of each.
+
+    Args:
+      m_p: ``(n, B, C_p)`` passive state (store dtype).
+      m_a: ``(n, B, C_a)`` active state (store dtype).
+      batches: bucketed split entries — ``(lo, width, idx_a, idx_p_local,
+        valid)`` per batch, index arrays already device-resident (``valid``
+        is ``None`` when the batch has no padded slots).
+      n_out: output color-set count (``m_s`` columns).
+      spmm_fn: the backend's neighbor reduction over a column *slice*;
+        returns ``accum_dtype``.
+      accum_dtype: FMA accumulation dtype (fp32 under the bf16 policy).
+
+    Returns ``(n, B, n_out)`` in ``accum_dtype``.  Batch order and
+    per-batch entry order are static, so results are deterministic and
+    independent of the coloring-chunk size.
+    """
+    n, bsz = m_a.shape[0], m_a.shape[1]
+    m_s = jnp.zeros((n, bsz, n_out), accum_dtype)
+    for lo, width, idx_a, idx_p, valid in batches:
+        cols = jax.lax.slice_in_dim(m_p, lo, lo + width, axis=2)
+        bcol = spmm_fn(cols)  # (n, B, width) — the only aggregate transient
+
+        def body(j, acc, idx_a=idx_a, idx_p=idx_p, valid=valid, bcol=bcol):
+            ia = jax.lax.dynamic_index_in_dim(idx_a, j, axis=1, keepdims=False)
+            ip = jax.lax.dynamic_index_in_dim(idx_p, j, axis=1, keepdims=False)
+            ga = jnp.take(m_a, ia, axis=2).astype(accum_dtype)
+            gb = jnp.take(bcol, ip, axis=2).astype(accum_dtype)
+            prod = ga * gb
+            if valid is not None:  # mask padded entry slots (ragged buckets)
+                va = jax.lax.dynamic_index_in_dim(valid, j, axis=1, keepdims=False)
+                prod = prod * va[None, None, :].astype(accum_dtype)
+            return acc + prod
+
+        m_s = jax.lax.fori_loop(0, idx_a.shape[1], body, m_s)
+    return m_s
+
+
+def schedule_liveness(plans, canons, track_products: bool = False):
+    """Last-read position for every shared DP state (and SpMM product).
+
+    The multi-template schedule executes each canonical sub-template once
+    (first occurrence across plans) and reads each plan's root at the end of
+    that plan.  Returns ``free_at``: position -> list of keys (canonical
+    strings, or ``("prod", canon)`` for memoized aggregate products when
+    ``track_products``) that are dead after that position, so executors can
+    drop them and peak memory matches Algorithm 5's in-place storage instead
+    of growing with the number of stages.
+    """
+    executed = set()
+    last_read = {}
+    pos = 0
+    for p_idx, plan in enumerate(plans):
+        pc = canons[p_idx]
+        for i, sub in enumerate(plan.partition.subs):
+            if pc[i] in executed:
+                continue
+            executed.add(pc[i])
+            if not sub.is_leaf:
+                last_read[pc[sub.active]] = pos
+                last_read[pc[sub.passive]] = pos
+                if track_products:
+                    last_read[("prod", pc[sub.passive])] = pos
+            pos += 1
+        last_read[pc[plan.partition.root_index]] = pos
+        pos += 1
+    free_at = {}
+    for key, p in last_read.items():
+        free_at.setdefault(p, []).append(key)
+    return free_at
+
+
+def liveness_peak_columns(
+    plans,
+    canons,
+    pad_unit: int = 1,
+    track_products: bool = False,
+) -> int:
+    """Peak live M columns per coloring under the liveness-aware schedule.
+
+    Simulates the multi-template DP with eager freeing: per executed stage
+    the live set holds every not-yet-dead canonical state (columns padded up
+    to ``pad_unit``), plus — when ``track_products`` — the memoized
+    aggregate product of the stage's passive state.  ``track_products=False``
+    models the fused pipeline, where no aggregate product ever exists.
+    """
+    def pad_cols(c: int) -> int:
+        return ((c + pad_unit - 1) // pad_unit) * pad_unit
+
+    k = plans[0].k
+    free_at = schedule_liveness(plans, canons, track_products=track_products)
+    executed = set()
+    live = {}
+    peak = 0
+    pos = 0
+    for p_idx, plan in enumerate(plans):
+        pc = canons[p_idx]
+        for i, sub in enumerate(plan.partition.subs):
+            if pc[i] in executed:
+                continue
+            executed.add(pc[i])
+            live[pc[i]] = pad_cols(binom(k, sub.size))
+            if not sub.is_leaf and track_products:
+                passive = plan.partition.subs[sub.passive]
+                live.setdefault(
+                    ("prod", pc[sub.passive]), pad_cols(binom(k, passive.size))
+                )
+            peak = max(peak, sum(live.values()))
+            for key in free_at.get(pos, ()):
+                live.pop(key, None)
+            pos += 1
+        peak = max(peak, sum(live.values()))
+        for key in free_at.get(pos, ()):
+            live.pop(key, None)
+        pos += 1
+    return peak
 
 
 def count_colorful_vectorized(

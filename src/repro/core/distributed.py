@@ -47,7 +47,7 @@ from jax.sharding import PartitionSpec as P
 
 from .. import compat
 from .colorsets import binom
-from .counting import CountingPlan, _ema_apply_fused
+from .counting import CountingPlan, _ema_apply_fused, liveness_peak_columns, schedule_liveness
 from .graph import Graph
 from .templates import sub_template_canonical
 
@@ -224,37 +224,9 @@ def build_streamed_tables(plan: CountingPlan, column_batch: int):
 
 
 def _schedule_liveness(plans, canons, ema_mode):
-    """Last-read position for every shared DP state / SpMM product.
-
-    The multi-template schedule executes each canonical sub-template once
-    (first occurrence across plans) and reads each plan's root at the end of
-    that plan.  Returns ``free_at``: position -> list of keys (canonical
-    strings, or ``("prod", canon)`` for memoized SpMM outputs in loop mode)
-    that are dead after that position, so the DP can drop them and peak
-    memory matches Algorithm 5's in-place storage instead of growing with
-    the number of stages.
-    """
-    executed = set()
-    last_read = {}
-    pos = 0
-    for p_idx, plan in enumerate(plans):
-        pc = canons[p_idx]
-        for i, sub in enumerate(plan.partition.subs):
-            if pc[i] in executed:
-                continue
-            executed.add(pc[i])
-            if not sub.is_leaf:
-                last_read[pc[sub.active]] = pos
-                last_read[pc[sub.passive]] = pos
-                if ema_mode != "streamed":
-                    last_read[("prod", pc[sub.passive])] = pos
-            pos += 1
-        last_read[pc[plan.partition.root_index]] = pos
-        pos += 1
-    free_at = {}
-    for key, p in last_read.items():
-        free_at.setdefault(p, []).append(key)
-    return free_at
+    """Mesh wrapper over :func:`repro.core.counting.schedule_liveness` —
+    only the non-streamed modes memoize aggregate products."""
+    return schedule_liveness(plans, canons, track_products=(ema_mode != "streamed"))
 
 
 def mesh_peak_columns(
@@ -265,40 +237,15 @@ def mesh_peak_columns(
 ) -> int:
     """Peak live padded M columns per coloring under the mesh schedule.
 
-    Simulates the liveness-aware multi-template DP: per executed stage the
-    live set holds every not-yet-dead canonical state (padded to the column
-    batch), plus — in loop mode — the memoized SpMM product ``B`` of the
-    stage's passive state.  This is the resident figure the engine's
-    memory-budget chunk picker multiplies by ``rows_per_shard``.
+    Delegates to :func:`repro.core.counting.liveness_peak_columns` with
+    columns padded to the all-gather column batch; in loop/vectorized mode
+    the memoized SpMM product ``B`` of each stage's passive state counts
+    too.  This is the resident figure the engine's memory-budget chunk
+    picker multiplies by ``rows_per_shard``.
     """
-    k = plans[0].k
-    free_at = _schedule_liveness(plans, canons, ema_mode)
-    executed = set()
-    live = {}
-    peak = 0
-    pos = 0
-    for p_idx, plan in enumerate(plans):
-        pc = canons[p_idx]
-        for i, sub in enumerate(plan.partition.subs):
-            if pc[i] in executed:
-                continue
-            executed.add(pc[i])
-            live[pc[i]] = _pad_cols(binom(k, sub.size), pad_unit)
-            if not sub.is_leaf and ema_mode != "streamed":
-                passive = plan.partition.subs[sub.passive]
-                live.setdefault(
-                    ("prod", pc[sub.passive]),
-                    _pad_cols(binom(k, passive.size), pad_unit),
-                )
-            peak = max(peak, sum(live.values()))
-            for key in free_at.get(pos, ()):
-                live.pop(key, None)
-            pos += 1
-        peak = max(peak, sum(live.values()))
-        for key in free_at.get(pos, ()):
-            live.pop(key, None)
-        pos += 1
-    return peak
+    return liveness_peak_columns(
+        plans, canons, pad_unit=pad_unit, track_products=(ema_mode != "streamed")
+    )
 
 
 def make_batched_count_fn(

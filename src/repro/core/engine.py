@@ -10,18 +10,29 @@ amortizes the neighbor reduction across color sets:
   their split tables land on the device a single time, de-duplicated by
   ``(k, m, m_a)``.
 * **Backend interface** — each execution strategy is an
-  :class:`EngineBackend`: device-operand construction, the SpMM dispatch,
-  the eMA step, and the per-coloring live-memory model all live behind one
-  interface.  The local backends (``edges`` / ``ell`` / ``dense`` /
-  ``blocked`` / ``custom``) run the fused DP on one device;
-  :class:`MeshBackend` (``mesh``) runs the same DP under ``shard_map``
-  across a device mesh with the column-batched all-gather SpMM and streamed
-  eMA from :mod:`repro.core.distributed`.
-* **Backend auto-selection** — the local SpMM kernel is picked from graph
-  statistics (:func:`select_backend`): edge-list segment-sum for skewed
-  degree distributions, padded ELL for flat ones, dense adjacency for tiny
-  graphs, and the Pallas blocked-ELL kernel for large graphs on TPU.
-  Passing ``mesh=`` selects the ``mesh`` backend.
+  :class:`EngineBackend`: device-operand construction, the fused
+  SpMM+eMA stage (:meth:`EngineBackend.aggregate_ema`), and the
+  per-coloring live-memory model all live behind one interface.  The local
+  backends (``edges`` / ``ell`` / ``sell`` / ``dense`` / ``blocked`` /
+  ``custom``) run the fused DP on one device; :class:`MeshBackend`
+  (``mesh``) runs the same DP under ``shard_map`` across a device mesh,
+  where each column-batched all-gather feeds the fused step per batch
+  (:mod:`repro.core.distributed`).
+* **Fused execution model** — no backend ever materializes the full
+  aggregate product ``A_G @ M_p``: every stage streams the passive state in
+  ``column_batch``-column slices, aggregates just that slice, and consumes
+  it immediately in the eMA FMA (fp32 accumulation).  DP states are freed
+  at their liveness-scheduled last read, so the resident footprint matches
+  Algorithm 5's in-place storage.
+* **Backend auto-selection** — the local SpMM primitive is picked from
+  graph statistics (:func:`select_backend`): edge-list segment-sum for
+  small skewed graphs, scatter-free degree-bucketed SELL gathers for large
+  skewed graphs (XLA:CPU scatter collapses there), padded ELL for flat
+  degree distributions, dense adjacency when the matmul work is
+  competitive, and the fused Pallas blocked-ELL kernel for large graphs on
+  TPU.  ``REPRO_ENGINE_BACKEND`` overrides the pick; the choice and its
+  predicted transient are logged at construction.  Passing ``mesh=``
+  selects the ``mesh`` backend.
 * **Batched colorings** — a chunk of ``B`` colorings is fused into the
   *column* dimension of the DP state: every M matrix is ``(n, B, C)`` and
   each stage's SpMM is ONE wide neighbor reduction over ``B * C`` columns
@@ -49,6 +60,8 @@ amortizes the neighbor reduction across color sets:
 
 from __future__ import annotations
 
+import logging
+import os
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -57,9 +70,15 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .colorsets import binom, colorful_probability
-from .counting import CountingPlan, _ema_apply_fused, build_counting_plan
-from .graph import Graph
+from .colorsets import binom, bucketed_split_entries, colorful_probability
+from .counting import (
+    CountingPlan,
+    build_counting_plan,
+    fused_aggregate_ema,
+    liveness_peak_columns,
+    schedule_liveness,
+)
+from .graph import Graph, build_sell
 from .templates import Template, sub_template_canonical
 
 __all__ = [
@@ -67,13 +86,17 @@ __all__ = [
     "EstimateResult",
     "CountingEngine",
     "EngineBackend",
+    "StageTables",
     "select_backend",
     "pick_chunk_size",
     "sub_template_canonical",
     "ENGINE_BACKENDS",
     "DEFAULT_MEMORY_BUDGET_BYTES",
     "MAX_CHUNK_SIZE",
+    "BACKEND_ENV_VAR",
 ]
+
+logger = logging.getLogger("repro.engine")
 
 #: Default live-footprint budget for one chunk of colorings (bytes).  Sized
 #: for the CPU/laptop case; on real TPUs pass the per-core VMEM/HBM figure.
@@ -91,6 +114,32 @@ ELL_PAD_FACTOR = 1.5
 
 #: On TPU, graphs at least this large route to the Pallas blocked-ELL kernel.
 BLOCKED_MIN_VERTICES = 4096
+
+#: Environment variable overriding the auto-selected local backend.
+BACKEND_ENV_VAR = "REPRO_ENGINE_BACKEND"
+
+#: Default passive columns per fused SpMM+eMA slice on the local backends.
+#: Empirically (2-core XLA:CPU interleaved A/B on the rmat2k bench graphs):
+#: 16 beats both narrower slices (the per-call segment-sum fixed cost is
+#: paid more often) and the full-width two-pass dataflow (whose edge-wide
+#: transient thrashes cache), while keeping the chunk picker's fused
+#: transient small enough to grow coloring chunks 2-4x over the seed.
+LOCAL_COLUMN_BATCH = 16
+
+#: Above this ``n * |E_directed|`` product, skewed graphs route to the
+#: scatter-free SELL backend: XLA:CPU's scatter lowering falls off a cliff
+#: in this regime (observed ~200x on 8k vertices / 130k directed edges)
+#: while degree-bucketed gathers stay on the |E|-proportional cost curve.
+SELL_MIN_SCATTER_WORK = 5 * 10**8
+
+#: Degree-sorted rows per SELL group (smaller = tighter padding).
+SELL_GROUP_SIZE = 128
+
+#: Dense adjacency wins only when the gather path's per-column element work
+#: (``|E|``) is within this factor of the dense matmul's per-column ``n^2``
+#: MACs — the throughput advantage of regular matmuls over irregular
+#: gathers.  (The column count cancels: both paths scale linearly in it.)
+DENSE_WORK_ADVANTAGE = 16
 
 
 @dataclass(frozen=True)
@@ -139,23 +188,46 @@ class EstimateResult:
 def select_backend(graph: Graph, platform: Optional[str] = None) -> str:
     """Pick the local SpMM backend from graph statistics.
 
-    * ``dense``   — tiny graphs: one (n, n) matmul beats gather/scatter.
-    * ``blocked`` — large graphs on TPU: the Pallas blocked-ELL kernel.
+    * env override — ``REPRO_ENGINE_BACKEND=<name>`` forces any local
+      backend (a bad auto-pick used to be silent and undiagnosable).
+    * ``dense``   — tiny graphs, or work-dense graphs where the gather
+      path's per-column element work ``|E|`` reaches
+      ``n^2 / DENSE_WORK_ADVANTAGE`` (avg degree ``>= n / 16``): one
+      (n, n) matmul beats gather/scatter.  The DP column count cancels
+      from the comparison — both paths scale linearly in it.
+    * ``blocked`` — large graphs on TPU: the fused Pallas blocked-ELL
+      SpMM+eMA kernel.
     * ``ell``     — flat degree distributions where row padding is cheap.
-    * ``edges``   — everything else (skewed / power-law graphs: a hub row
-      would blow the ELL padding up to ``n * max_deg``).
+    * ``sell``    — rmat8k-class graphs (``n * |E|`` beyond
+      ``SELL_MIN_SCATTER_WORK``): scatter-free degree-bucketed gathers;
+      XLA:CPU's scatter collapses in this regime.
+    * ``edges``   — everything else (small skewed / power-law graphs: a hub
+      row would blow the ELL padding up to ``n * max_deg``).
 
     The ``mesh`` backend is never auto-selected from graph statistics — it
     is chosen by passing ``mesh=`` to :class:`CountingEngine`.
     """
+    env = os.environ.get(BACKEND_ENV_VAR, "").strip()
+    if env:
+        if env not in ("edges", "ell", "sell", "dense", "blocked"):
+            raise ValueError(
+                f"{BACKEND_ENV_VAR}={env!r} is not a local backend "
+                "(edges | ell | sell | dense | blocked)"
+            )
+        return env
     platform = platform or jax.default_backend()
     if graph.n <= DENSE_MAX_VERTICES:
         return "dense"
     if platform == "tpu" and graph.n >= BLOCKED_MIN_VERTICES:
         return "blocked"
+    edges = max(graph.num_directed, 1)
+    if DENSE_WORK_ADVANTAGE * edges >= graph.n**2:
+        return "dense"
     max_deg = graph.max_degree()
-    if graph.n * max_deg <= ELL_PAD_FACTOR * max(graph.num_directed, 1):
+    if graph.n * max_deg <= ELL_PAD_FACTOR * edges:
         return "ell"
+    if graph.n * edges >= SELL_MIN_SCATTER_WORK:
+        return "sell"
     return "edges"
 
 
@@ -175,20 +247,43 @@ def pick_chunk_size(
 # ---------------------------------------------------------------------------
 
 
+@dataclass(frozen=True)
+class StageTables:
+    """Split tables for one DP stage, in both shapes the fused pipeline needs.
+
+    ``idx_a_host`` / ``idx_p_host`` are the plain ``(n_out, n_splits)`` rank
+    tables, kept host-side: the fused Pallas kernel expands them per
+    coloring chunk at trace time (``spmm_ema_batched``).  ``batches`` are
+    the same entries re-bucketed by passive-column batch and shipped to the
+    device (:func:`repro.core.colorsets.bucketed_split_entries`) for the
+    streamed pure-JAX executor.  De-duplicated across stages by
+    ``(k, m, m_a)``.
+    """
+
+    n_out: int
+    column_batch: int
+    idx_a_host: np.ndarray
+    idx_p_host: np.ndarray
+    batches: Tuple[Tuple[int, int, jnp.ndarray, jnp.ndarray, jnp.ndarray], ...]
+
+
 class EngineBackend:
-    """One SpMM/eMA execution strategy behind :class:`CountingEngine`.
+    """One fused SpMM+eMA execution strategy behind :class:`CountingEngine`.
 
     A backend owns three things:
 
     * **operand construction** — its device-resident graph representation,
-      built once in ``__init__`` (edge lists, ELL tables, dense adjacency,
-      Pallas blocked operands, or the sharded edge partition + collective
-      schedule for the mesh backend);
+      built once in ``__init__`` (edge lists, ELL/SELL tables, dense
+      adjacency, Pallas blocked operands, or the sharded edge partition +
+      collective schedule for the mesh backend);
     * **the DP execution** — :meth:`counts_for_colors` maps a ``(B, n)``
-      chunk of colorings to ``(B, T)`` raw colorful totals (local backends
-      implement it via :meth:`LocalBackend.spmm` + the shared fused DP;
-      the mesh backend delegates to the shard_map program built by
-      :func:`repro.core.distributed.make_batched_count_fn`);
+      chunk of colorings to ``(B, T)`` raw colorful totals.  The per-stage
+      primitive is :meth:`aggregate_ema`: ONE fused neighbor-aggregate +
+      eMA step that never materializes the full ``A_G @ M_p`` product
+      (local backends stream passive column batches through
+      :func:`repro.core.counting.fused_aggregate_ema`; the mesh backend
+      runs the equivalent fusion inside its shard_map program, each
+      all-gathered column batch feeding the eMA immediately);
     * **the memory model** — :meth:`transient_elements` /
       :meth:`resident_elements` feed the engine's memory-budget chunk
       picker.
@@ -200,6 +295,13 @@ class EngineBackend:
         self.engine = engine
 
     # -- execution ----------------------------------------------------------
+
+    def aggregate_ema(
+        self, m_p: jnp.ndarray, m_a: jnp.ndarray, tables: StageTables
+    ) -> jnp.ndarray:
+        """Fused per-stage step: ``(n, B, C_p), (n, B, C_a) -> (n, B, n_out)``
+        in accum dtype, without materializing ``A_G @ M_p``."""
+        raise NotImplementedError
 
     def counts_for_colors(self, colors: jnp.ndarray) -> jnp.ndarray:
         """``(B, n)`` colorings -> ``(B, T)`` un-normalized colorful totals."""
@@ -241,60 +343,75 @@ class EngineBackend:
 
 
 class LocalBackend(EngineBackend):
-    """Shared single-device DP: subclasses only supply :meth:`spmm`.
+    """Shared single-device fused DP: subclasses only supply :meth:`spmm`.
 
-    The fused multi-template DP walks every plan's stages with DP states and
-    SpMM products memoized by rooted canonical form, all M matrices in the
-    fused ``(n, B, C)`` layout.
+    The multi-template DP walks every plan's stages with DP states memoized
+    by rooted canonical form, all M matrices in the fused ``(n, B, C)``
+    layout.  Each stage runs through the shared streamed
+    :meth:`aggregate_ema` (passive column batches aggregated and consumed
+    one at a time), and states are dropped at their liveness-scheduled last
+    read — the aggregate product ``A_G @ M_p`` never exists.
     """
 
     def spmm(self, m: jnp.ndarray) -> jnp.ndarray:
-        """One neighbor reduction over ALL fused columns; returns accum dtype."""
+        """One neighbor reduction over a fused ``(n, B, c)`` column slice
+        (the fused pipeline only ever passes ``column_batch``-wide slices);
+        returns accum dtype."""
         raise NotImplementedError
 
-    def ema(self, m_a, b_mat, idx_a, idx_p):
-        """Vertex-local eMA on fused (n, B, C) state, fp accumulation."""
+    def aggregate_ema(self, m_p, m_a, tables: StageTables):
         pol = self.engine.policy
-        n, bsz, _ = m_a.shape
-        init = jnp.zeros((n, bsz, idx_a.shape[0]), pol.accum_dtype)
-        return _ema_apply_fused(m_a, b_mat, idx_a, idx_p, init).astype(pol.store_dtype)
+        return fused_aggregate_ema(
+            m_p, m_a, tables.batches, tables.n_out, self.spmm, pol.accum_dtype
+        )
 
     def counts_for_colors(self, colors: jnp.ndarray) -> jnp.ndarray:
         """(B, n) colorings -> (B, T) un-normalized colorful totals.
 
-        Sub-template states and SpMM products are memoized by canonical
-        form, so templates sharing passive sub-templates (and every
-        template's leaf stage) reuse one computation per coloring.
+        Sub-template states are memoized by canonical form, so templates
+        sharing passive sub-templates (and every template's leaf stage)
+        reuse one state per coloring, and freed at their last scheduled
+        read (Algorithm 5's in-place storage).
         """
         eng = self.engine
         pol = eng.policy
         leaf = jax.nn.one_hot(colors.T, eng.k, dtype=pol.store_dtype)  # (n, B, k)
+        free_at = eng._free_at
         slots: Dict[str, jnp.ndarray] = {}
-        prods: Dict[str, jnp.ndarray] = {}
         totals = []
+        executed = set()
+        pos = 0
         for p_idx, plan in enumerate(eng.plans):
             canons = eng._canons[p_idx]
             for i, sub in enumerate(plan.partition.subs):
                 key = canons[i]
-                if key in slots:
+                if key in executed:
                     continue
+                executed.add(key)
                 if sub.is_leaf:
                     slots[key] = leaf
-                    continue
-                p_key = canons[sub.passive]
-                if p_key not in prods:
-                    prods[p_key] = self.spmm(slots[p_key])
-                idx_a, idx_p = eng._stage_tables[(p_idx, i)]
-                slots[key] = self.ema(slots[canons[sub.active]], prods[p_key], idx_a, idx_p)
+                else:
+                    m_s = self.aggregate_ema(
+                        slots[canons[sub.passive]],
+                        slots[canons[sub.active]],
+                        eng._stage_tables[(p_idx, i)],
+                    )
+                    slots[key] = m_s.astype(pol.store_dtype)
+                for dead in free_at.get(pos, ()):
+                    slots.pop(dead, None)
+                pos += 1
             root = slots[canons[plan.partition.root_index]].astype(pol.accum_dtype)
             # reduce color sets first, then vertices: the per-coloring order
             # is independent of the batch size (bit-exact across chunkings)
             totals.append(root.sum(axis=2).sum(axis=0).astype(jnp.float32))
+            for dead in free_at.get(pos, ()):
+                slots.pop(dead, None)
+            pos += 1
         return jnp.stack(totals, axis=1)  # (B, T)
 
     def transient_elements(self) -> int:
-        # default: the (n, C_p) gather intermediate of a dense-ish reduction
-        return self.engine.graph.n * self.engine._max_passive_columns()
+        # default: one aggregated column-batch slice (n, column_batch)
+        return self.engine.graph.n * self.engine.column_batch
 
 
 class EdgesBackend(LocalBackend):
@@ -317,8 +434,10 @@ class EdgesBackend(LocalBackend):
         )
 
     def transient_elements(self) -> int:
-        # the (edges, C_p) message gather is the true high-water mark
-        return self.engine.graph.num_directed * self.engine._max_passive_columns()
+        # per batch: the (edges, column_batch) message gather + its
+        # aggregated (n, column_batch) slice
+        eng = self.engine
+        return (eng.graph.num_directed + eng.graph.n) * eng.column_batch
 
 
 class EllBackend(LocalBackend):
@@ -334,12 +453,55 @@ class EllBackend(LocalBackend):
 
     def spmm(self, m):
         pol = self.engine.policy
-        gathered = m[self._nbr].astype(pol.accum_dtype)  # (n, max_deg, B, C)
+        gathered = m[self._nbr].astype(pol.accum_dtype)  # (n, max_deg, B, c)
         return jnp.einsum("ndbc,nd->nbc", gathered, self._ell_mask.astype(pol.accum_dtype))
 
     def transient_elements(self) -> int:
         g = self.engine.graph
-        return g.n * max(g.max_degree(), 1) * self.engine._max_passive_columns()
+        return (g.n * max(g.max_degree(), 1) + g.n) * self.engine.column_batch
+
+
+class SellBackend(LocalBackend):
+    """Degree-bucketed sliced-ELL gather — scatter-free (rmat8k-class graphs).
+
+    Vertices are degree-sorted into :data:`SELL_GROUP_SIZE`-row groups,
+    each padded only to its own max degree (:func:`repro.core.graph.
+    build_sell`); the neighbor reduction is a padded row gather + masked
+    einsum per group, stitched back through one inverse-permutation gather.
+    No scatter appears anywhere — this sidesteps the XLA:CPU scatter cliff
+    that made the edge-list ``segment_sum`` 5–10x *slower* than the scalar
+    traversal baseline on rmat8k, while keeping padding bounded on
+    power-law degree distributions (unlike plain ELL).
+    """
+
+    name = "sell"
+
+    def __init__(self, engine: "CountingEngine", group_size: int = SELL_GROUP_SIZE):
+        super().__init__(engine)
+        sell = build_sell(engine.graph, group_size=group_size)
+        self._sell_padded_slots = sell.padded_slots
+        self._groups = tuple(
+            (jnp.asarray(nbr), jnp.asarray(mask))
+            for nbr, mask in zip(sell.group_nbr, sell.group_mask)
+        )
+        self._inv_order = jnp.asarray(sell.inv_order)
+
+    def spmm(self, m):
+        pol = self.engine.policy
+        parts = [
+            jnp.einsum(
+                "rdbc,rd->rbc",
+                m[nbr].astype(pol.accum_dtype),
+                mask.astype(pol.accum_dtype),
+            )
+            for nbr, mask in self._groups
+        ]
+        return jnp.concatenate(parts, axis=0)[self._inv_order]
+
+    def transient_elements(self) -> int:
+        # per batch: the padded group gathers + the aggregated slice
+        eng = self.engine
+        return (self._sell_padded_slots + eng.graph.n) * eng.column_batch
 
 
 class DenseBackend(LocalBackend):
@@ -363,15 +525,23 @@ class DenseBackend(LocalBackend):
 
 
 class BlockedEllBackend(LocalBackend):
-    """Pallas blocked-ELL kernel (large graphs on TPU)."""
+    """Fused Pallas SpMM+eMA kernel over blocked-ELL (large graphs on TPU).
+
+    Each stage is ONE :func:`repro.kernels.spmm_ema.ops.spmm_ema` call: per
+    destination vertex block the kernel accumulates that block's aggregate
+    columns in VMEM scratch and consumes them in the eMA FMA against the
+    resident ``M_a`` tile the moment the block's last edge pair lands —
+    the aggregate product never reaches HBM (this subsumes the standalone
+    ``repro.kernels.ema`` kernel, which fused only the eMA half).
+    """
 
     name = "blocked"
 
     def __init__(self, engine: "CountingEngine", block_size: int = 256):
         super().__init__(engine)
-        from repro.kernels.spmm_blocked.ops import prepare_operand
+        from repro.kernels.spmm_ema.ops import prepare_fused_operand
 
-        self._blocked_op = prepare_operand(engine.graph, block_size=block_size)
+        self._fused_op = prepare_fused_operand(engine.graph, block_size=block_size)
 
     def spmm(self, m):
         # kernel is 2-D (n, C) — fuse batch into columns
@@ -379,11 +549,29 @@ class BlockedEllBackend(LocalBackend):
 
         n, b, c = m.shape
         out = spmm_blocked(
-            self._blocked_op,
+            self._fused_op.blocked,
             m.reshape(n, b * c).astype(jnp.float32),
             interpret=self.engine.interpret,
         )
         return out.reshape(n, b, c).astype(self.engine.policy.accum_dtype)
+
+    def aggregate_ema(self, m_p, m_a, tables: StageTables):
+        from repro.kernels.spmm_ema.ops import spmm_ema_batched
+
+        return spmm_ema_batched(
+            self._fused_op,
+            m_p,
+            m_a,
+            tables.idx_a_host,
+            tables.idx_p_host,
+            interpret=self.engine.interpret,
+        ).astype(self.engine.policy.accum_dtype)
+
+    def transient_elements(self) -> int:
+        # transposed-layout staging of one stage's operands/output; no
+        # edge-wide or (n, C_p) aggregate intermediate exists
+        eng = self.engine
+        return eng.graph.n * eng._max_stage_columns()
 
 
 class CustomBackend(LocalBackend):
@@ -402,7 +590,8 @@ class CustomBackend(LocalBackend):
 
     def transient_elements(self) -> int:
         # assume edge-list-like internals (the conservative choice)
-        return self.engine.graph.num_directed * self.engine._max_passive_columns()
+        eng = self.engine
+        return (eng.graph.num_directed + eng.graph.n) * eng.column_batch
 
 
 class MeshBackend(EngineBackend):
@@ -505,7 +694,7 @@ class MeshBackend(EngineBackend):
         return self.sharded.rows_per_shard * self._peak_padded
 
 
-ENGINE_BACKENDS = ("edges", "ell", "dense", "blocked", "mesh", "custom")
+ENGINE_BACKENDS = ("edges", "ell", "sell", "dense", "blocked", "mesh", "custom")
 
 
 # ---------------------------------------------------------------------------
@@ -519,20 +708,25 @@ class CountingEngine:
     Args:
       graph: the network.
       templates: one :class:`Template` or a sequence of same-``k`` templates
-        counted together per coloring (shared leaf one-hot / SpMM products).
-      backend: ``auto`` | ``edges`` | ``ell`` | ``dense`` | ``blocked`` |
-        ``mesh``.  ``auto`` resolves from graph statistics
-        (:func:`select_backend`), or to ``mesh`` when ``mesh=`` is given.
-        Ignored when ``spmm_fn`` is given.
+        counted together per coloring (shared leaf one-hot / DP states).
+      backend: ``auto`` | ``edges`` | ``ell`` | ``sell`` | ``dense`` |
+        ``blocked`` | ``mesh``.  ``auto`` resolves from graph statistics
+        (:func:`select_backend`, overridable via ``REPRO_ENGINE_BACKEND``),
+        or to ``mesh`` when ``mesh=`` is given.  Ignored when ``spmm_fn``
+        is given.
       spmm_fn: optional custom ``(n, C) -> (n, C)`` neighbor-sum kernel.
       dtype_policy: ``fp32`` | ``bf16`` | a :class:`DtypePolicy` | a dtype.
       memory_budget_bytes: live-footprint budget steering the chunk picker
         (per device — for the mesh backend the model is per shard).
       chunk_size: explicit colorings-per-chunk override (skips the picker).
       plans: optional pre-built :class:`CountingPlan` per template.
-      block_size / interpret: Pallas blocked-ELL kernel knobs.
-      mesh / column_batch / ema_mode / gather_dtype / balance_degrees:
-        mesh-backend knobs — see :class:`MeshBackend`.
+      block_size / interpret: fused Pallas kernel knobs (``blocked``).
+      column_batch: passive columns aggregated per fused SpMM+eMA slice.
+        ``None`` auto-sizes: ``min(16, max passive columns)`` on the local
+        backends, ``min(128, max passive columns)`` on the mesh backend
+        (where a batch is also one all-gather collective).
+      mesh / ema_mode / gather_dtype / balance_degrees: mesh-backend knobs
+        — see :class:`MeshBackend`.
     """
 
     def __init__(
@@ -580,7 +774,7 @@ class CountingEngine:
                 raise ValueError("plans must align with templates")
             self.plans = tuple(plans)
 
-        # --- static schedule: canonical keys + de-duplicated device tables.
+        # --- static schedule: canonical keys + liveness + device tables.
         self._canons: List[List[str]] = [
             [
                 sub_template_canonical(plan.template, sub.vertices, sub.root)
@@ -588,29 +782,63 @@ class CountingEngine:
             ]
             for plan in self.plans
         ]
-        table_cache: Dict[Tuple[int, int, int], Tuple[jnp.ndarray, jnp.ndarray]] = {}
-        self._stage_tables: Dict[Tuple[int, int], Tuple[jnp.ndarray, jnp.ndarray]] = {}
-        for p_idx, plan in enumerate(self.plans):
-            for i, table in enumerate(plan.tables):
-                if table is None:
-                    continue
-                key = (table.k, table.m, table.m_a)
-                if key not in table_cache:
-                    table_cache[key] = (jnp.asarray(table.idx_a), jnp.asarray(table.idx_p))
-                self._stage_tables[(p_idx, i)] = table_cache[key]
+        self._free_at = schedule_liveness(self.plans, self._canons)
+
+        # Fused-slice width: local default keeps the per-batch edge gather
+        # cache-sized; the mesh backend auto-sizes its own (one batch there
+        # is also one all-gather collective).
+        if column_batch:
+            self.column_batch = int(column_batch)
+        else:
+            self.column_batch = min(LOCAL_COLUMN_BATCH, self._max_passive_columns())
 
         norm = colorful_probability(self.k)
         self._norm_factors = jnp.asarray(
             [1.0 / (norm * plan.automorphisms) for plan in self.plans], jnp.float32
         )
 
-        # --- backend resolution + construction (operands built once).
+        # --- backend resolution (operands built once, below).
+        auto = False
         if spmm_fn is not None:
             self.backend = "custom"
         elif backend == "auto":
+            auto = True
             self.backend = "mesh" if mesh is not None else select_backend(graph)
         else:
             self.backend = backend
+
+        # Bucketed per-batch tables feed the local fused executor and the
+        # Pallas kernel only; the mesh backend builds its own streamed
+        # tables at its own (all-gather) column batch.
+        table_cache: Dict[Tuple[int, int, int], StageTables] = {}
+        self._stage_tables: Dict[Tuple[int, int], StageTables] = {}
+        if self.backend != "mesh":
+            for p_idx, plan in enumerate(self.plans):
+                for i, table in enumerate(plan.tables):
+                    if table is None:
+                        continue
+                    key = (table.k, table.m, table.m_a)
+                    if key not in table_cache:
+                        table_cache[key] = StageTables(
+                            n_out=table.n_out,
+                            column_batch=self.column_batch,
+                            idx_a_host=table.idx_a,
+                            idx_p_host=table.idx_p,
+                            batches=tuple(
+                                (
+                                    lo,
+                                    width,
+                                    jnp.asarray(ia),
+                                    jnp.asarray(ip),
+                                    None if va is None else jnp.asarray(va),
+                                )
+                                for lo, width, ia, ip, va in bucketed_split_entries(
+                                    table, self.column_batch
+                                )
+                            ),
+                        )
+                    self._stage_tables[(p_idx, i)] = table_cache[key]
+
         self.backend_impl: EngineBackend = self._make_backend(
             spmm_fn=spmm_fn,
             block_size=block_size,
@@ -624,6 +852,29 @@ class CountingEngine:
             self.bytes_per_coloring(), self.memory_budget_bytes
         )
 
+        itemsize = jnp.dtype(self.policy.store_dtype).itemsize
+        logger.info(
+            "CountingEngine backend=%s (%s) n=%d edges=%d k=%d templates=%d "
+            "column_batch=%d chunk=%d predicted transient=%.2f MiB "
+            "resident=%.2f MiB per coloring",
+            self.backend,
+            ("auto" if auto else "explicit")
+            + (
+                f", {BACKEND_ENV_VAR} override"
+                if auto and os.environ.get(BACKEND_ENV_VAR, "").strip()
+                else ""
+            ),
+            graph.n,
+            graph.num_directed,
+            self.k,
+            len(self.templates),
+            # the mesh backend aggregates at its own all-gather batch width
+            getattr(self.backend_impl, "column_batch", self.column_batch),
+            self.chunk_size,
+            self.backend_impl.transient_elements() * itemsize / 2**20,
+            self.backend_impl.resident_elements() * itemsize / 2**20,
+        )
+
         self._run_fn = None  # built lazily (jit cache)
 
     def _make_backend(
@@ -635,6 +886,8 @@ class CountingEngine:
             return EdgesBackend(self)
         if self.backend == "ell":
             return EllBackend(self)
+        if self.backend == "sell":
+            return SellBackend(self)
         if self.backend == "dense":
             return DenseBackend(self)
         if self.backend == "blocked":
@@ -655,25 +908,15 @@ class CountingEngine:
     # ------------------------------------------------------------------
 
     def peak_columns(self) -> int:
-        """Live M columns per coloring across the shared multi-template DP.
+        """Peak live M columns per coloring across the shared DP.
 
-        With cross-template memoization every unique sub-template state and
-        SpMM product stays resident for the whole coloring, so the figure is
-        the sum over unique canonical forms — never less than the in-place
-        single-template bound ``CountingPlan.peak_columns()``.
+        Liveness-aware: states shared across templates by canonical form
+        are freed at their last scheduled read, and the fused pipeline
+        never holds an aggregate product, so the figure is the simulated
+        peak of the schedule (for a single template it equals the in-place
+        bound ``CountingPlan.peak_columns()``).
         """
-        slot_cols: Dict[str, int] = {}
-        prod_cols: Dict[str, int] = {}
-        for p_idx, plan in enumerate(self.plans):
-            for i, sub in enumerate(plan.partition.subs):
-                slot_cols.setdefault(self._canons[p_idx][i], binom(self.k, sub.size))
-                if not sub.is_leaf:
-                    passive = plan.partition.subs[sub.passive]
-                    prod_cols.setdefault(
-                        self._canons[p_idx][sub.passive], binom(self.k, passive.size)
-                    )
-        unique_total = sum(slot_cols.values()) + sum(prod_cols.values())
-        return max(unique_total, max(p.peak_columns() for p in self.plans))
+        return liveness_peak_columns(self.plans, self._canons)
 
     def _max_passive_columns(self) -> int:
         cp = 1
@@ -684,6 +927,24 @@ class CountingEngine:
                     cp = max(cp, binom(self.k, passive.size))
         return cp
 
+    def _max_stage_columns(self) -> int:
+        """Widest single stage: active + passive + output columns (the fused
+        Pallas kernel's per-stage transposed staging footprint)."""
+        widest = 1
+        for plan in self.plans:
+            for i, sub in enumerate(plan.partition.subs):
+                if sub.is_leaf:
+                    continue
+                active = plan.partition.subs[sub.active]
+                passive = plan.partition.subs[sub.passive]
+                widest = max(
+                    widest,
+                    binom(self.k, active.size)
+                    + binom(self.k, passive.size)
+                    + binom(self.k, sub.size),
+                )
+        return widest
+
     def bytes_per_coloring(self) -> int:
         """Estimated live bytes one coloring contributes to a chunk.
 
@@ -693,6 +954,38 @@ class CountingEngine:
         mesh backend, where the figure is per shard).
         """
         return self.backend_impl.bytes_per_coloring()
+
+    def predicted_peak_bytes(self) -> int:
+        """The chunk picker's live-footprint prediction for one chunk."""
+        return self.chunk_size * self.bytes_per_coloring()
+
+    def compiled_memory_analysis(self, iterations: Optional[int] = None) -> Dict[str, Optional[float]]:
+        """Compile one run and compare XLA's measured temp allocation with
+        the chunk picker's prediction (the ROADMAP calibration item).
+
+        Returns ``{"predicted_bytes", "actual_temp_bytes", "ratio"}`` with
+        ``actual_temp_bytes`` / ``ratio`` ``None`` when the backend does not
+        expose ``memory_analysis()`` (it is optional in XLA).
+        """
+        iters = int(iterations) if iterations else self.chunk_size
+        chunk = max(1, min(self.chunk_size, iters))
+        n_chunks = -(-iters // chunk)
+        keys = jnp.zeros((n_chunks, chunk, 2), jnp.uint32)
+        predicted = float(self.predicted_peak_bytes())
+        actual: Optional[float] = None
+        try:
+            compiled = self._get_run_fn().lower(keys).compile()
+            analysis = compiled.memory_analysis()
+            actual = float(analysis.temp_size_in_bytes)
+        except (AttributeError, NotImplementedError, TypeError) as exc:  # pragma: no cover
+            logger.info("memory_analysis unavailable on this backend: %s", exc)
+        except Exception as exc:  # pragma: no cover - backend-specific failures
+            logger.info("memory_analysis failed: %s", exc)
+        return {
+            "predicted_bytes": predicted,
+            "actual_temp_bytes": actual,
+            "ratio": (predicted / actual) if actual else None,
+        }
 
     # ------------------------------------------------------------------
     # Public API

@@ -29,7 +29,9 @@ import numpy as np
 __all__ = [
     "Graph",
     "BlockedELL",
+    "SellGraph",
     "build_blocked_ell",
+    "build_sell",
     "rmat_graph",
     "erdos_renyi_graph",
     "grid_graph",
@@ -156,6 +158,85 @@ def grid_graph(rows: int, cols: int) -> Graph:
     edges.append(np.stack([idx[:-1, :].ravel(), idx[1:, :].ravel()], axis=1))
     e = np.concatenate(edges, axis=0)
     return _canonicalize(rows * cols, e[:, 0].astype(np.int32), e[:, 1].astype(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# SELL (sliced, degree-sorted ELL) — scatter-free CPU neighbor gather.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SellGraph:
+    """Degree-sorted sliced-ELL layout: a *scatter-free* SpMM for skewed graphs.
+
+    Vertices are sorted by descending degree and cut into groups of
+    ``group_size`` rows; each group's neighbor lists are padded only to that
+    group's own max degree (classic SELL-C-sigma with a full sort).  The
+    neighbor reduction is then a padded row gather + masked sum per group —
+    pure gathers and dense reductions, no scatter at all; results come back
+    to original vertex order through one inverse-permutation gather.
+
+    This exists because XLA:CPU's scatter (``segment_sum``) falls off a
+    performance cliff on large edge lists (observed: ~2 ms at |E|≈30k/n=2k
+    but ~400–600 ms at |E|≈130k/n=8k regardless of column count) and carries
+    an |E|-proportional fixed cost per call that the fused column-batched
+    pipeline would multiply.  Degree sorting bounds the padding waste that
+    plain ELL suffers on power-law graphs (one hub row would pad every row
+    to ``max_degree``).
+
+    Attributes:
+      group_rows: per group, (rows,) int32 — vertex ids in degree order
+        (concatenating all groups gives the full degree-sorted order).
+      group_nbr:  per group, (rows, d_group) int32 padded neighbor table.
+      group_mask: per group, (rows, d_group) float32 validity mask.
+      inv_order:  (n,) int32 — position of each degree-rank slot for the
+        inverse gather: ``out = concat(group results)[inv_order]``.
+      padded_slots: total padded neighbor slots across groups (the memory
+        model's transient unit; ``>= num_directed``).
+    """
+
+    n: int
+    group_size: int
+    group_rows: Tuple[np.ndarray, ...]
+    group_nbr: Tuple[np.ndarray, ...]
+    group_mask: Tuple[np.ndarray, ...]
+    inv_order: np.ndarray
+    padded_slots: int
+
+
+def build_sell(graph: Graph, group_size: int = 128) -> SellGraph:
+    """Degree-sort vertices and build per-group padded neighbor tables."""
+    deg = graph.degrees()
+    row_ptr, col_idx = graph.csr()
+    order = np.argsort(-deg, kind="stable")
+    groups_rows = []
+    groups_nbr = []
+    groups_mask = []
+    padded = 0
+    for lo in range(0, graph.n, group_size):
+        rows = order[lo : lo + group_size]
+        d_max = max(int(deg[rows].max(initial=0)), 1)
+        nbr = np.zeros((rows.size, d_max), dtype=np.int32)
+        mask = np.zeros((rows.size, d_max), dtype=np.float32)
+        for r, v in enumerate(rows):
+            a, b = int(row_ptr[v]), int(row_ptr[v + 1])
+            nbr[r, : b - a] = col_idx[a:b]
+            mask[r, : b - a] = 1.0
+        groups_rows.append(rows.astype(np.int32))
+        groups_nbr.append(nbr)
+        groups_mask.append(mask)
+        padded += nbr.size
+    inv_order = np.empty(graph.n, dtype=np.int32)
+    inv_order[order] = np.arange(graph.n, dtype=np.int32)
+    return SellGraph(
+        n=graph.n,
+        group_size=group_size,
+        group_rows=tuple(groups_rows),
+        group_nbr=tuple(groups_nbr),
+        group_mask=tuple(groups_mask),
+        inv_order=inv_order,
+        padded_slots=padded,
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -1,5 +1,12 @@
 """Fused eMA (element-wise multiply-add) Pallas TPU kernel.
 
+.. deprecated::
+    Superseded by :mod:`repro.kernels.spmm_ema`, which fuses the SpMM half
+    into the same kernel so the aggregate product ``B`` never reaches HBM
+    (this kernel still reads a fully materialized ``B``).  The engine's
+    ``blocked`` backend routes through ``spmm_ema``; this module is kept
+    only as an eMA-in-isolation reference for tests and kernel benchmarks.
+
 Computes the count-update stage of SUBGRAPH2VEC (Algorithm 5, line 13):
 
     M_s[o, :] = sum_t  M_a[idx_a[o, t], :] * B[idx_p[o, t], :]

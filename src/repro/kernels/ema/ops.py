@@ -1,4 +1,8 @@
-"""jit'd wrapper around the fused eMA Pallas kernel (row-major interface)."""
+"""jit'd wrapper around the fused eMA Pallas kernel (row-major interface).
+
+.. deprecated:: superseded by :mod:`repro.kernels.spmm_ema` (SpMM+eMA in one
+   kernel); kept as an eMA-in-isolation reference for tests/benchmarks.
+"""
 
 from __future__ import annotations
 

@@ -1,0 +1,171 @@
+"""Fused SpMM+eMA Pallas TPU kernel — the whole DP stage in one pass.
+
+Computes, for one stage of SUBGRAPH2VEC's Algorithm 5,
+
+    M_s[o, :] = sum_t  M_a[idx_a[o, t], :] * (A_G @ M_p)[idx_p[o, t], :]
+
+WITHOUT ever materializing the aggregate product ``B = A_G @ M_p``: per
+destination vertex block, the aggregate columns live only in a VMEM scratch
+tile that is consumed by the eMA FMA the moment the block's last edge pair
+has been accumulated.  This subsumes the standalone eMA kernel
+(``repro.kernels.ema``), which fused only the multiply-add half and still
+read a full HBM-resident ``B``.
+
+Layout is the paper's column-major design (§V-B) transposed for TPU: all
+matrices are ``(colorsets, vertices)`` with the vertex axis on lanes.  The
+sparse structure is the blocked-ELL build of ``repro.kernels.spmm_blocked``
+(edges grouped by (dst-block, src-block) pair, pairs sorted by destination
+block) plus an ``is_last`` flag marking the final pair of each
+destination-block run.
+
+Grid: ``(n_pairs,)``.  Per step the kernel
+
+1. zeroes the scratch aggregate tile at a run head (``is_first``),
+2. accumulates the pair's edges into it with the MXU one-hot gather/scatter
+   trick shared with the blocked SpMM kernel,
+3. at the run tail (``is_last``) applies the eMA against the VMEM-resident
+   ``M_a^T`` destination tile and writes the ``M_s^T`` output tile — the
+   only thing that ever reaches HBM.
+
+Everything accumulates in fp32; the split tables ride in SMEM via scalar
+prefetch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.spmm_blocked.kernel import _mxu_chunk
+
+__all__ = ["spmm_ema_kernel", "spmm_ema_call"]
+
+
+def spmm_ema_kernel(
+    # scalar prefetch (SMEM)
+    src_blk_ref, dst_blk_ref, first_ref, last_ref, idx_a_ref, idx_p_ref,
+    # inputs (VMEM)
+    mp_ref,       # (Cp_tot, block_size) — source block of M_p^T
+    ma_ref,       # (Ca_tot, block_size) — destination block of M_a^T
+    dst_loc_ref, src_loc_ref, valid_ref,  # (1, capacity) per pair
+    # output
+    out_ref,      # (Nout_tot, block_size) — destination block of M_s^T
+    # scratch
+    bcol_ref,     # VMEM (Cp_tot, block_size) fp32 aggregate tile
+    *,
+    block_size: int,
+    edge_chunk: int,
+    n_splits: int,
+):
+    p = pl.program_id(0)
+
+    @pl.when(first_ref[p] == 1)
+    def _zero_aggregate():
+        bcol_ref[...] = jnp.zeros_like(bcol_ref)
+
+    # -- SpMM half: fold this pair's edges into the aggregate scratch tile.
+    m_blk = mp_ref[...]
+    n_chunks = src_loc_ref.shape[1] // edge_chunk
+
+    def chunk_body(i, acc):
+        start = i * edge_chunk
+        src_ids = src_loc_ref[0, pl.dslice(start, edge_chunk)]
+        dst_ids = dst_loc_ref[0, pl.dslice(start, edge_chunk)]
+        valid = valid_ref[0, pl.dslice(start, edge_chunk)]
+        return _mxu_chunk(m_blk, src_ids, dst_ids, valid, block_size, acc)
+
+    acc = jax.lax.fori_loop(
+        0, n_chunks, chunk_body, jnp.zeros_like(bcol_ref[...]), unroll=False
+    )
+    bcol_ref[...] += acc
+
+    # -- eMA half: the block's aggregate is complete — consume it in place.
+    @pl.when(last_ref[p] == 1)
+    def _ema_consume():
+        n_out_tot = out_ref.shape[0]
+        v_tile = out_ref.shape[1]
+
+        def out_row(o, carry):
+            def split_body(t, acc):
+                ia = idx_a_ref[o, t]
+                ip = idx_p_ref[o, t]
+                ra = ma_ref[pl.dslice(ia, 1), :]
+                rb = bcol_ref[pl.dslice(ip, 1), :]
+                return acc + ra * rb
+
+            row = jax.lax.fori_loop(
+                0, n_splits, split_body, jnp.zeros((1, v_tile), out_ref.dtype)
+            )
+            out_ref[pl.dslice(o, 1), :] = row
+            return carry
+
+        jax.lax.fori_loop(0, n_out_tot, out_row, 0)
+
+
+def spmm_ema_call(
+    mp_t: jnp.ndarray,             # (Cp_tot, n_padded) transposed passive state
+    ma_t: jnp.ndarray,             # (Ca_tot, n_padded) transposed active state
+    idx_a: jnp.ndarray,            # (Nout_tot, n_splits) int32
+    idx_p: jnp.ndarray,            # (Nout_tot, n_splits) int32
+    pair_src_block: jnp.ndarray,   # (n_pairs,) int32
+    pair_dst_block: jnp.ndarray,   # (n_pairs,) int32
+    pair_is_first: jnp.ndarray,    # (n_pairs,) int32 — head of a dst-block run
+    pair_is_last: jnp.ndarray,     # (n_pairs,) int32 — tail of a dst-block run
+    edge_dst_local: jnp.ndarray,   # (n_pairs, capacity) int32
+    edge_src_local: jnp.ndarray,   # (n_pairs, capacity) int32
+    edge_valid: jnp.ndarray,       # (n_pairs, capacity) f32
+    *,
+    block_size: int,
+    edge_chunk: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """``M_s^T = eMA(M_a^T, A_G @ M_p^T)`` fused per destination block.
+
+    ``capacity % edge_chunk == 0`` and ``n_padded % block_size == 0`` (pad
+    host-side; see ``repro.kernels.spmm_ema.ops``).  Returns
+    ``(Nout_tot, n_padded)`` in ``mp_t``'s dtype (use fp32: the aggregate
+    scratch accumulates in fp32 regardless).
+    """
+    cp_tot, n_padded = mp_t.shape
+    ca_tot = ma_t.shape[0]
+    n_out_tot, n_splits = idx_a.shape
+    n_pairs, capacity = edge_dst_local.shape
+    if capacity % edge_chunk:
+        raise ValueError(f"capacity={capacity} not a multiple of edge_chunk={edge_chunk}")
+    if n_padded % block_size:
+        raise ValueError(f"n_padded={n_padded} not a multiple of block_size={block_size}")
+
+    kernel = functools.partial(
+        spmm_ema_kernel,
+        block_size=block_size,
+        edge_chunk=edge_chunk,
+        n_splits=n_splits,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=6,
+        grid=(n_pairs,),
+        in_specs=[
+            pl.BlockSpec((cp_tot, block_size), lambda p, sb, db, fi, la, ia, ip: (0, sb[p])),
+            pl.BlockSpec((ca_tot, block_size), lambda p, sb, db, fi, la, ia, ip: (0, db[p])),
+            pl.BlockSpec((1, capacity), lambda p, sb, db, fi, la, ia, ip: (p, 0)),
+            pl.BlockSpec((1, capacity), lambda p, sb, db, fi, la, ia, ip: (p, 0)),
+            pl.BlockSpec((1, capacity), lambda p, sb, db, fi, la, ia, ip: (p, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (n_out_tot, block_size), lambda p, sb, db, fi, la, ia, ip: (0, db[p])
+        ),
+        scratch_shapes=[pltpu.VMEM((cp_tot, block_size), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_out_tot, n_padded), mp_t.dtype),
+        interpret=interpret,
+    )(
+        pair_src_block, pair_dst_block, pair_is_first, pair_is_last, idx_a, idx_p,
+        mp_t, ma_t, edge_dst_local, edge_src_local, edge_valid,
+    )

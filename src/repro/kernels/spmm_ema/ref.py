@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the fused SpMM+eMA kernel (two-pass by construction)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["spmm_ema_ref"]
+
+
+def spmm_ema_ref(
+    src: jnp.ndarray,
+    dst: jnp.ndarray,
+    n: int,
+    m_p: jnp.ndarray,
+    m_a: jnp.ndarray,
+    idx_a: jnp.ndarray,
+    idx_p: jnp.ndarray,
+) -> jnp.ndarray:
+    """Legacy two-pass reference: materialize ``B = A_G @ M_p``, then
+    ``out[:, o] = sum_t M_a[:, idx_a[o,t]] * B[:, idx_p[o,t]]``."""
+    b = jax.ops.segment_sum(m_p[src], dst, num_segments=n, indices_are_sorted=True)
+    n_out, n_splits = idx_a.shape
+
+    def body(t, acc):
+        return acc + jnp.take(m_a, idx_a[:, t], axis=1) * jnp.take(b, idx_p[:, t], axis=1)
+
+    return jax.lax.fori_loop(
+        0, n_splits, body, jnp.zeros((m_a.shape[0], n_out), dtype=m_a.dtype)
+    )

@@ -191,11 +191,16 @@ def test_chunk_picker_scales_with_budget_and_is_capped():
     assert big_t.chunk_size <= small_t.chunk_size
 
 
-def test_peak_columns_upper_bounds_plan_peak():
+def test_peak_columns_liveness_bounds():
+    """The liveness-aware engine peak is sandwiched between the widest
+    single stage (children + output must coexist) and the per-plan in-place
+    bound (which counts each leaf separately; the engine shares one
+    canonical leaf state, so it can only do better)."""
     t = get_template("u7")
     plan = build_counting_plan(t)
     eng = CountingEngine(rmat_graph(300, 1200, seed=0), [t], plans=[plan])
-    assert eng.peak_columns() >= plan.peak_columns()
+    assert eng.peak_columns() <= plan.peak_columns()
+    assert eng.peak_columns() >= eng._max_stage_columns()
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,273 @@
+"""Fused SpMM+eMA pipeline tests.
+
+The acceptance bar for the fused execution model: every backend produces
+the same counts as the legacy two-pass reference
+(``count_colorful_vectorized``, which materializes the aggregate product)
+without ever materializing that product itself — across templates u3-u7,
+dtype policies, ragged shapes, coloring-chunk sizes, and the mesh backend
+on a 4-virtual-device mesh.  The fused Pallas kernel is checked in
+interpret mode against both the pure-JAX fused fallback and the two-pass
+reference.
+"""
+
+import os
+import subprocess
+import sys
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CountingEngine,
+    build_counting_plan,
+    bucketed_split_entries,
+    count_colorful_vectorized,
+    fused_aggregate_ema,
+    get_template,
+    rmat_graph,
+    spmm_edges,
+)
+from repro.core.colorsets import binom, build_split_table
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _two_pass_reference(g, t, colors) -> float:
+    plan = build_counting_plan(t)
+    spmm = partial(spmm_edges, jnp.asarray(g.src), jnp.asarray(g.dst), g.n)
+    return float(count_colorful_vectorized(plan, jnp.asarray(colors), spmm))
+
+
+# ---------------------------------------------------------------------------
+# Fused engine vs the legacy two-pass reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tname", ["u3", "u5-1", "u5-2", "u6", "u7"])
+@pytest.mark.parametrize("backend", ["edges", "sell"])
+def test_fused_matches_two_pass_u3_to_u7(tname, backend):
+    g = rmat_graph(300, 1500, seed=2)
+    t = get_template(tname)
+    colors = np.random.default_rng(0).integers(0, t.k, size=g.n)
+    ref = _two_pass_reference(g, t, colors)
+    got = float(CountingEngine(g, [t], backend=backend).raw_counts(colors)[0])
+    assert got == pytest.approx(ref, rel=1e-5)
+
+
+@pytest.mark.parametrize("policy,tol", [("fp32", 1e-5), ("bf16", 2e-2)])
+def test_fused_dtype_policies(policy, tol):
+    g = rmat_graph(300, 1500, seed=3)
+    t = get_template("u6")
+    colors = np.random.default_rng(1).integers(0, t.k, size=g.n)
+    ref = _two_pass_reference(g, t, colors)
+    for backend in ("edges", "sell"):
+        got = float(
+            CountingEngine(g, [t], backend=backend, dtype_policy=policy).raw_counts(colors)[0]
+        )
+        assert got == pytest.approx(ref, rel=tol), backend
+
+
+@pytest.mark.parametrize("n,block", [(513, 128), (200, 256), (97, 64)])
+def test_fused_pallas_backend_ragged_shapes(n, block):
+    """Odd vertex counts / block remainders through the fused Pallas kernel
+    (interpret mode) — padding bands and dummy pairs must stay silent."""
+    g = rmat_graph(n, 4 * n, seed=n)
+    t = get_template("u5-2")
+    colors = np.random.default_rng(0).integers(0, t.k, size=g.n)
+    ref = _two_pass_reference(g, t, colors)
+    got = float(
+        CountingEngine(g, [t], backend="blocked", interpret=True, block_size=block)
+        .raw_counts(colors)[0]
+    )
+    assert got == pytest.approx(ref, rel=1e-5)
+
+
+def test_fused_sell_ragged_group():
+    """n not a multiple of the SELL group size exercises the short tail
+    group and the inverse-permutation stitch."""
+    g = rmat_graph(333, 1600, seed=9)
+    t = get_template("u6")
+    colors = np.random.default_rng(4).integers(0, t.k, size=g.n)
+    ref = _two_pass_reference(g, t, colors)
+    got = float(CountingEngine(g, [t], backend="sell").raw_counts(colors)[0])
+    assert got == pytest.approx(ref, rel=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["edges", "sell"])
+def test_fused_chunked_equals_unchunked_bit_exact(backend):
+    """B>1 coloring chunks: the fused batch order is static per coloring, so
+    chunked and sequential runs must agree bit-for-bit."""
+    g = rmat_graph(400, 2400, seed=5)
+    t = get_template("u6")
+    keys = jax.random.split(jax.random.PRNGKey(0), 11)  # ragged: 11 = 2*4 + 3
+    chunked = CountingEngine(g, [t], backend=backend, chunk_size=4).count_keys(keys)
+    single = CountingEngine(g, [t], backend=backend, chunk_size=1).count_keys(keys)
+    assert np.array_equal(chunked, single)
+
+
+def test_fused_pallas_chunked_matches_reference():
+    g = rmat_graph(200, 800, seed=3)
+    t = get_template("u5-1")
+    keys = jax.random.split(jax.random.PRNGKey(1), 3)
+    ref = CountingEngine(g, [t], backend="edges", chunk_size=3).count_keys(keys)
+    got = CountingEngine(
+        g, [t], backend="blocked", interpret=True, chunk_size=3, block_size=128
+    ).count_keys(keys)
+    assert np.allclose(got, ref, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# The fused executor / kernel in isolation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k,m,m_a,column_batch", [(5, 3, 1, 2), (7, 5, 3, 8), (6, 6, 3, 4)])
+def test_fused_fallback_matches_two_pass_stage(k, m, m_a, column_batch):
+    """One stage of the pure-JAX fused fallback == two-pass SpMM then eMA."""
+    g = rmat_graph(150, 700, seed=k * m)
+    table = build_split_table(k, m, m_a)
+    rng = np.random.default_rng(0)
+    c_a, c_p = binom(k, m_a), binom(k, m - m_a)
+    m_p = jnp.asarray(rng.standard_normal((g.n, 2, c_p)).astype(np.float32))
+    m_aa = jnp.asarray(rng.standard_normal((g.n, 2, c_a)).astype(np.float32))
+    spmm = lambda m: jax.ops.segment_sum(
+        m[jnp.asarray(g.src)], jnp.asarray(g.dst), num_segments=g.n, indices_are_sorted=True
+    )
+    batches = tuple(
+        (lo, w, jnp.asarray(ia), jnp.asarray(ip), None if va is None else jnp.asarray(va))
+        for lo, w, ia, ip, va in bucketed_split_entries(table, column_batch)
+    )
+    got = fused_aggregate_ema(m_p, m_aa, batches, table.n_out, spmm, jnp.float32)
+    # two-pass: full aggregate, then the plain eMA
+    b = spmm(m_p)
+    ref = jnp.zeros_like(got)
+    for t_ in range(table.n_splits):
+        ref = ref + jnp.take(m_aa, jnp.asarray(table.idx_a[:, t_]), axis=2) * jnp.take(
+            b, jnp.asarray(table.idx_p[:, t_]), axis=2
+        )
+    assert np.allclose(np.asarray(got), np.asarray(ref), rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("k,m,m_a", [(5, 3, 1), (7, 4, 2), (6, 6, 3)])
+def test_spmm_ema_kernel_matches_fallback_and_two_pass(k, m, m_a):
+    """Interpret-mode Pallas fused kernel == pure-JAX fused fallback ==
+    legacy two-pass reference, for single and batched colorings."""
+    from repro.kernels.spmm_ema.ops import prepare_fused_operand, spmm_ema, spmm_ema_batched
+    from repro.kernels.spmm_ema.ref import spmm_ema_ref
+
+    g = rmat_graph(130, 520, seed=m)
+    op = prepare_fused_operand(g, block_size=64, edge_chunk=64)
+    table = build_split_table(k, m, m_a)
+    rng = np.random.default_rng(1)
+    c_a, c_p = binom(k, m_a), binom(k, m - m_a)
+    src, dst = jnp.asarray(g.src), jnp.asarray(g.dst)
+
+    m_p = jnp.asarray(rng.standard_normal((g.n, c_p)).astype(np.float32))
+    m_aa = jnp.asarray(rng.standard_normal((g.n, c_a)).astype(np.float32))
+    two_pass = spmm_ema_ref(src, dst, g.n, m_p, m_aa, jnp.asarray(table.idx_a), jnp.asarray(table.idx_p))
+    kern = spmm_ema(op, m_p, m_aa, table.idx_a, table.idx_p, interpret=True)
+    assert np.allclose(np.asarray(kern), np.asarray(two_pass), rtol=1e-5, atol=1e-4)
+
+    spmm = lambda x: jax.ops.segment_sum(x[src], dst, num_segments=g.n, indices_are_sorted=True)
+    batches = tuple(
+        (lo, w, jnp.asarray(ia), jnp.asarray(ip), None if va is None else jnp.asarray(va))
+        for lo, w, ia, ip, va in bucketed_split_entries(table, 4)
+    )
+    m_pb = jnp.asarray(rng.standard_normal((g.n, 3, c_p)).astype(np.float32))
+    m_ab = jnp.asarray(rng.standard_normal((g.n, 3, c_a)).astype(np.float32))
+    fallback = fused_aggregate_ema(m_pb, m_ab, batches, table.n_out, spmm, jnp.float32)
+    kern_b = spmm_ema_batched(op, m_pb, m_ab, table.idx_a, table.idx_p, interpret=True)
+    assert np.allclose(np.asarray(kern_b), np.asarray(fallback), rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Backend selection / env override / memory model
+# ---------------------------------------------------------------------------
+
+
+def test_env_override_forces_backend(monkeypatch):
+    from repro.core.engine import BACKEND_ENV_VAR
+
+    g = rmat_graph(300, 1500, seed=2)  # would auto-pick edges
+    monkeypatch.setenv(BACKEND_ENV_VAR, "sell")
+    eng = CountingEngine(g, [get_template("u5-1")])
+    assert eng.backend == "sell"
+    monkeypatch.setenv(BACKEND_ENV_VAR, "bogus")
+    with pytest.raises(ValueError, match="REPRO_ENGINE_BACKEND"):
+        CountingEngine(g, [get_template("u5-1")])
+
+
+def test_select_backend_rmat8k_class_picks_sell():
+    from repro.core import select_backend
+
+    assert select_backend(rmat_graph(8192, 80_000, seed=2), platform="cpu") == "sell"
+    # small skewed graphs stay on the edge list
+    assert select_backend(rmat_graph(2048, 20_000, seed=1), platform="cpu") == "edges"
+
+
+def test_fused_transient_is_column_batch_sized():
+    """The memory model must reflect fusion: the per-stage transient scales
+    with column_batch, not with the full passive width."""
+    g = rmat_graph(2048, 20_000, seed=1)
+    t = get_template("u7")
+    eng = CountingEngine(g, [t])
+    maxcp = eng._max_passive_columns()
+    assert eng.column_batch < maxcp
+    transient = eng.backend_impl.transient_elements()
+    assert transient == (g.num_directed + g.n) * eng.column_batch
+    # the old two-pass model charged the full passive width on the edge gather
+    assert transient < g.num_directed * maxcp
+
+
+def test_compiled_memory_analysis_reports_prediction():
+    g = rmat_graph(300, 1500, seed=2)
+    eng = CountingEngine(g, [get_template("u5-1")], chunk_size=2)
+    report = eng.compiled_memory_analysis(iterations=2)
+    assert report["predicted_bytes"] == pytest.approx(2 * eng.bytes_per_coloring())
+    actual = report["actual_temp_bytes"]
+    if actual is not None:
+        assert actual > 0 and report["ratio"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Mesh backend (4 virtual devices, subprocess)
+# ---------------------------------------------------------------------------
+
+
+def test_fused_mesh_backend_matches_two_pass():
+    """The mesh backend's streamed all-gather fusion agrees with the local
+    fused engine AND the legacy two-pass reference on a 4-device mesh."""
+    code = r"""
+import jax, jax.numpy as jnp, numpy as np
+from functools import partial
+from repro.core import (CountingEngine, build_counting_plan,
+                        count_colorful_vectorized, get_template, rmat_graph,
+                        spmm_edges)
+
+g = rmat_graph(240, 1200, seed=5)
+mesh = jax.make_mesh((4,), ("dev",))
+for tname in ("u5-2", "u6"):
+    t = get_template(tname)
+    colors = np.random.default_rng(3).integers(0, t.k, size=g.n)
+    plan = build_counting_plan(t)
+    ref = float(count_colorful_vectorized(
+        plan, jnp.asarray(colors),
+        partial(spmm_edges, jnp.asarray(g.src), jnp.asarray(g.dst), g.n)))
+    local = float(CountingEngine(g, [t], backend="edges").raw_counts(colors)[0])
+    dist = float(CountingEngine(g, [t], backend="mesh", mesh=mesh,
+                                column_batch=8).raw_counts(colors)[0])
+    assert abs(local - ref) <= 1e-5 * max(abs(ref), 1.0), (tname, local, ref)
+    assert abs(dist - ref) <= 1e-5 * max(abs(ref), 1.0), (tname, dist, ref)
+    print("MESH_FUSED_OK", tname)
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_REPO, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env, timeout=900
+    )
+    assert proc.returncode == 0, f"child failed:\nstdout={proc.stdout}\nstderr={proc.stderr}"
+    assert proc.stdout.count("MESH_FUSED_OK") == 2
