@@ -1,0 +1,141 @@
+"""CountingService benchmark: serving throughput, latency, cache efficiency,
+and the adaptive-stopping iteration spend.
+
+Rows (all merged into ``BENCH_counting.json`` for the trend diff):
+
+* ``service/<graph>/<template>/cold_query`` — first query on an empty
+  service: engine construction + trace + compile + the run itself.
+* ``service/<graph>/<template>/warm_query`` — p50 latency of serial warm
+  queries (cache hit, zero recompilation); ``derived`` carries p95,
+  queries/sec, and the cache hit rate.
+* ``service/<graph>/<template>/batchedN`` — N concurrent queries submitted
+  together and drained through the cross-query batched admission loop;
+  per-query wall time (the merged launches amortize each chunk).
+* ``service/<graph>/<template>/adaptive`` — the (epsilon, delta) stopper
+  vs blind fixed-N: iterations actually spent, measured relative error vs
+  a 512-iteration exhaustive reference, and the a-priori
+  ``required_iterations`` bound the stopper replaces (the paper's
+  practical fixed default of ~100 iterations for <1% error is the other
+  yardstick).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from repro.core import CountingEngine, get_template, rmat_graph
+from repro.core.estimator import required_iterations
+from repro.serve import CountingService
+
+from .common import emit_header, record
+
+WARM_QUERIES = 12
+BATCHED_QUERIES = 8
+FIXED_ITERATIONS = 16
+ADAPTIVE_EPSILON = 0.01
+ADAPTIVE_DELTA = 0.05
+ADAPTIVE_BUDGET = 512
+REFERENCE_ITERATIONS = 512
+
+
+def _bench_one(dname: str, g, tname: str, quick: bool) -> None:
+    svc = CountingService()
+    svc.register_graph(dname, g)
+
+    t0 = time.perf_counter()
+    svc.query(dname, tname, iterations=FIXED_ITERATIONS, seed=0)
+    cold_s = time.perf_counter() - t0
+    record(
+        f"service/{dname}/{tname}/cold_query",
+        cold_s * 1e6,
+        f"iters={FIXED_ITERATIONS};includes_compile=1",
+    )
+
+    n_warm = WARM_QUERIES // 2 if quick else WARM_QUERIES
+    lats = []
+    for s in range(1, n_warm + 1):
+        t0 = time.perf_counter()
+        svc.query(dname, tname, iterations=FIXED_ITERATIONS, seed=s)
+        lats.append(time.perf_counter() - t0)
+    lats_us = np.asarray(lats) * 1e6
+    cache = svc.stats()["cache"]
+    hit_rate = cache["hits"] / max(cache["hits"] + cache["misses"], 1)
+    qps = n_warm / (np.sum(lats_us) / 1e6)
+    record(
+        f"service/{dname}/{tname}/warm_query",
+        float(np.percentile(lats_us, 50)),
+        f"p95_us={np.percentile(lats_us, 95):.0f};qps={qps:.1f};"
+        f"cache_hit_rate={hit_rate:.3f};iters={FIXED_ITERATIONS}",
+    )
+
+    # concurrent tenants: one admission loop, launches merged per chunk
+    t0 = time.perf_counter()
+    qs = [
+        svc.submit(dname, tname, iterations=FIXED_ITERATIONS, seed=100 + s)
+        for s in range(BATCHED_QUERIES)
+    ]
+    svc.run()
+    wall = time.perf_counter() - t0
+    assert all(q.done for q in qs)
+    launches = svc.stats()["launches_by_key"][qs[0].engine_key]
+    record(
+        f"service/{dname}/{tname}/batched{BATCHED_QUERIES}",
+        wall / BATCHED_QUERIES * 1e6,
+        f"wall_us={wall * 1e6:.0f};launches_total={launches}",
+    )
+
+    # adaptive (epsilon, delta) stopping vs the blind fixed-N choice
+    engine = CountingEngine(g, [get_template(tname)])
+    ref = engine.estimate(iterations=REFERENCE_ITERATIONS, seed=1000)[0]
+    q = svc.submit(
+        dname,
+        tname,
+        epsilon=ADAPTIVE_EPSILON,
+        delta=ADAPTIVE_DELTA,
+        iterations=ADAPTIVE_BUDGET,
+        seed=123,
+    )
+    t0 = time.perf_counter()
+    svc.run()
+    adaptive_s = time.perf_counter() - t0
+    est = q.result()[0]
+    rel_err = abs(est.mean - ref.mean) / max(abs(ref.mean), 1e-9)
+    blind_n = required_iterations(
+        get_template(tname).k, ADAPTIVE_EPSILON, ADAPTIVE_DELTA
+    )
+    record(
+        f"service/{dname}/{tname}/adaptive",
+        adaptive_s * 1e6,
+        f"iters={q.iterations};rel_err={rel_err:.5f};eps={ADAPTIVE_EPSILON};"
+        f"delta={ADAPTIVE_DELTA};blind_n={blind_n};converged={int(est.converged)}",
+    )
+    print(
+        f"# service adaptive {dname}/{tname}: {q.iterations} iters "
+        f"(blind bound {blind_n}), rel err {rel_err:.3%} vs "
+        f"{REFERENCE_ITERATIONS}-iter reference",
+        file=sys.stderr,
+    )
+
+
+def run(quick: bool = False) -> None:
+    g = rmat_graph(2048, 20_000, seed=1)
+    templates = ["u5-1"] if quick else ["u5-1", "u5-2"]
+    for tname in templates:
+        _bench_one("rmat2k", g, tname, quick)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="smoke subset")
+    args = ap.parse_args()
+    emit_header()
+    run(quick=args.quick)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

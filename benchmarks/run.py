@@ -17,7 +17,14 @@ import re
 import sys
 import traceback
 
-from . import bench_counting, bench_error, bench_kernels, bench_scaling, bench_template_scaling
+from . import (
+    bench_counting,
+    bench_error,
+    bench_kernels,
+    bench_scaling,
+    bench_service,
+    bench_template_scaling,
+)
 from .common import ROWS, emit_header
 
 BENCHES = {
@@ -27,6 +34,7 @@ BENCHES = {
     "fig13": bench_scaling.run,            # distributed strong scaling
     "fig14": bench_error.run,              # relative error
     "kernels": bench_kernels.run,          # Table IV analogue (SpMM/eMA)
+    "service": bench_service.run,          # CountingService qps/latency/adaptive
 }
 
 #: Rows slower than the previous run by more than this fraction are flagged.
@@ -130,12 +138,13 @@ def main() -> int:
     if args.quick:
         try:
             bench_counting.run(quick=True)
+            bench_service.run(quick=True)
         except Exception:
             traceback.print_exc()
             failed.append("quick")
     else:
         keys = list(dict.fromkeys(args.only.split(","))) if args.only else [
-            "tableIII", "fig12", "fig13", "fig14", "kernels"
+            "tableIII", "fig12", "fig13", "fig14", "kernels", "service"
         ]
         for key in keys:
             try:

@@ -61,6 +61,42 @@ for tname, seed_chunk in SEED_CHUNKS.items():
     print(f"chunk guard {tname}: {eng.chunk_size} (seed {seed_chunk}) -> OK")
 PY
 
+echo "== smoke: CountingService (concurrent queries, warm cache, adaptive stop) =="
+python - <<'PY'
+import numpy as np
+from repro.core import rmat_graph
+from repro.serve import CountingService
+
+svc = CountingService(chunk_size=8)
+svc.register_graph("a", rmat_graph(300, 1500, seed=2))
+svc.register_graph("b", rmat_graph(260, 1100, seed=3))
+
+# two concurrent queries on different graphs share the admission loop
+qa = svc.submit("a", "u5-1", iterations=8, seed=1)
+qb = svc.submit("b", "u6", iterations=8, seed=2)
+svc.run()
+assert qa.done and qb.done
+assert {qa.engine_key, qb.engine_key} == set(svc.stats()["launches_by_key"])
+
+# cached re-query: same key, zero new jit compilations
+engine = svc.engine(qa.engine_key)
+traces = engine.trace_count
+qc = svc.submit("a", "u5-1", iterations=5, seed=9)
+svc.run()
+assert svc.engine(qc.engine_key) is engine and engine.trace_count == traces
+hits = svc.stats()["cache"]["hits"]
+assert hits >= 1, svc.stats()["cache"]
+
+# adaptive stop fires before the budget
+qd = svc.submit("a", "u5-1", epsilon=0.1, delta=0.1, iterations=512, seed=0)
+svc.run()
+assert qd.done and qd.iterations < 512 and qd.result()[0].converged
+print(
+    f"service smoke: 2 graphs, warm re-query 0 new traces, adaptive stopped "
+    f"at {qd.iterations}/512 -> OK"
+)
+PY
+
 echo "== smoke: mesh backend on 4 virtual devices =="
 XLA_FLAGS="--xla_force_host_platform_device_count=4" python - <<'PY'
 import jax, numpy as np

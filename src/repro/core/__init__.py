@@ -18,6 +18,7 @@ from .counting import (
     count_colorful_traversal,
     count_colorful_vectorized,
     fused_aggregate_ema,
+    fused_aggregate_ema_grouped,
     liveness_peak_columns,
     normalize_count,
     schedule_liveness,
@@ -31,9 +32,11 @@ from .engine import (
     DtypePolicy,
     EngineBackend,
     StageTables,
+    engine_cache_key,
     pick_chunk_size,
     select_backend,
     sub_template_canonical,
+    template_set_canons,
 )
 from .estimator import EstimateResult, estimate_embeddings, make_count_step, required_iterations
 from .graph import (

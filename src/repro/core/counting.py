@@ -37,6 +37,7 @@ __all__ = [
     "spmm_edges",
     "spmm_ell",
     "fused_aggregate_ema",
+    "fused_aggregate_ema_grouped",
     "schedule_liveness",
     "liveness_peak_columns",
     "count_colorful_vectorized",
@@ -178,6 +179,31 @@ def _ema_apply_fused(
     return jax.lax.fori_loop(0, n_splits, body, init)
 
 
+def _fused_batch_apply(
+    m_s: jnp.ndarray,
+    m_a: jnp.ndarray,
+    bcol: jnp.ndarray,
+    idx_a: jnp.ndarray,
+    idx_p: jnp.ndarray,
+    valid: Optional[jnp.ndarray],
+    accum_dtype: jnp.dtype,
+) -> jnp.ndarray:
+    """Fold one bucketed batch's eMA entries into the accumulator ``m_s``."""
+
+    def body(j, acc):
+        ia = jax.lax.dynamic_index_in_dim(idx_a, j, axis=1, keepdims=False)
+        ip = jax.lax.dynamic_index_in_dim(idx_p, j, axis=1, keepdims=False)
+        ga = jnp.take(m_a, ia, axis=2).astype(accum_dtype)
+        gb = jnp.take(bcol, ip, axis=2).astype(accum_dtype)
+        prod = ga * gb
+        if valid is not None:  # mask padded entry slots (ragged buckets)
+            va = jax.lax.dynamic_index_in_dim(valid, j, axis=1, keepdims=False)
+            prod = prod * va[None, None, :].astype(accum_dtype)
+        return acc + prod
+
+    return jax.lax.fori_loop(0, idx_a.shape[1], body, m_s)
+
+
 def fused_aggregate_ema(
     m_p: jnp.ndarray,
     m_a: jnp.ndarray,
@@ -212,26 +238,67 @@ def fused_aggregate_ema(
     Returns ``(n, B, n_out)`` in ``accum_dtype``.  Batch order and
     per-batch entry order are static, so results are deterministic and
     independent of the coloring-chunk size.
+
+    Stages that read the *same* passive state should go through
+    :func:`fused_aggregate_ema_grouped`, which shares each batch's
+    aggregation across all of them — this function is the one-stage case.
     """
-    n, bsz = m_a.shape[0], m_a.shape[1]
-    m_s = jnp.zeros((n, bsz, n_out), accum_dtype)
-    for lo, width, idx_a, idx_p, valid in batches:
+    return fused_aggregate_ema_grouped(
+        m_p, [(m_a, batches, n_out)], spmm_fn, accum_dtype
+    )[0]
+
+
+def fused_aggregate_ema_grouped(
+    m_p: jnp.ndarray,
+    stages: Sequence[Tuple[jnp.ndarray, Sequence[Tuple], int]],
+    spmm_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    accum_dtype: jnp.dtype = jnp.float32,
+) -> List[jnp.ndarray]:
+    """Shared-passive fusion: several stages consume one column-batch sweep.
+
+    All ``stages`` read the same passive state ``m_p`` (same canonical
+    passive sub-template, hence the same column count and bucketing), so the
+    per-batch aggregate ``spmm_fn(slice)`` is computed ONCE per passive
+    column batch and consumed by every stage's eMA entries for that batch —
+    multi-template runs stop re-aggregating a shared passive per stage.
+    This restores the memoized-SpMM-product sharing the two-pass pipeline
+    had, without ever materializing the full ``A_G @ M_p`` product.
+
+    Args:
+      m_p: ``(n, B, C_p)`` shared passive state (store dtype).
+      stages: per stage ``(m_a, batches, n_out)`` — the active state, the
+        bucketed split entries over ``m_p``'s columns, and the output width.
+      spmm_fn / accum_dtype: as in :func:`fused_aggregate_ema`.
+
+    Returns one ``(n, B, n_out)`` array (``accum_dtype``) per stage, in
+    stage order.  Per stage, batch order and entry order are identical to
+    the ungrouped execution, so results are bit-exact with it.
+    """
+    n, bsz = m_p.shape[0], m_p.shape[1]
+    outs = [jnp.zeros((n, bsz, n_out), accum_dtype) for _, _, n_out in stages]
+    # Union of the stages' bucketed batches, keyed by batch start column.
+    # Stages share C_p and the bucketing width, so equal `lo` => equal slice.
+    sweep: Dict[int, Tuple[int, List[Tuple[int, Tuple]]]] = {}
+    for s_idx, (_, batches, _) in enumerate(stages):
+        for lo, width, idx_a, idx_p, valid in batches:
+            prev = sweep.get(lo)
+            if prev is not None and prev[0] != width:
+                raise ValueError(
+                    f"grouped stages disagree on batch width at column {lo}: "
+                    f"{prev[0]} vs {width} (passive states not identical?)"
+                )
+            users = prev[1] if prev is not None else []
+            users.append((s_idx, (idx_a, idx_p, valid)))
+            sweep[lo] = (width, users)
+    for lo in sorted(sweep):
+        width, users = sweep[lo]
         cols = jax.lax.slice_in_dim(m_p, lo, lo + width, axis=2)
         bcol = spmm_fn(cols)  # (n, B, width) — the only aggregate transient
-
-        def body(j, acc, idx_a=idx_a, idx_p=idx_p, valid=valid, bcol=bcol):
-            ia = jax.lax.dynamic_index_in_dim(idx_a, j, axis=1, keepdims=False)
-            ip = jax.lax.dynamic_index_in_dim(idx_p, j, axis=1, keepdims=False)
-            ga = jnp.take(m_a, ia, axis=2).astype(accum_dtype)
-            gb = jnp.take(bcol, ip, axis=2).astype(accum_dtype)
-            prod = ga * gb
-            if valid is not None:  # mask padded entry slots (ragged buckets)
-                va = jax.lax.dynamic_index_in_dim(valid, j, axis=1, keepdims=False)
-                prod = prod * va[None, None, :].astype(accum_dtype)
-            return acc + prod
-
-        m_s = jax.lax.fori_loop(0, idx_a.shape[1], body, m_s)
-    return m_s
+        for s_idx, (idx_a, idx_p, valid) in users:
+            outs[s_idx] = _fused_batch_apply(
+                outs[s_idx], stages[s_idx][0], bcol, idx_a, idx_p, valid, accum_dtype
+            )
+    return outs
 
 
 def schedule_liveness(plans, canons, track_products: bool = False):

@@ -74,12 +74,12 @@ from .colorsets import binom, bucketed_split_entries, colorful_probability
 from .counting import (
     CountingPlan,
     build_counting_plan,
-    fused_aggregate_ema,
+    fused_aggregate_ema_grouped,
     liveness_peak_columns,
     schedule_liveness,
 )
 from .graph import Graph, build_sell
-from .templates import Template, sub_template_canonical
+from .templates import Template, partition_template, sub_template_canonical
 
 __all__ = [
     "DtypePolicy",
@@ -90,6 +90,8 @@ __all__ = [
     "select_backend",
     "pick_chunk_size",
     "sub_template_canonical",
+    "template_set_canons",
+    "engine_cache_key",
     "ENGINE_BACKENDS",
     "DEFAULT_MEMORY_BUDGET_BYTES",
     "MAX_CHUNK_SIZE",
@@ -185,7 +187,9 @@ class EstimateResult:
     iterations: int
 
 
-def select_backend(graph: Graph, platform: Optional[str] = None) -> str:
+def select_backend(
+    graph: Graph, platform: Optional[str] = None, explain: bool = False
+):
     """Pick the local SpMM backend from graph statistics.
 
     * env override — ``REPRO_ENGINE_BACKEND=<name>`` forces any local
@@ -206,7 +210,24 @@ def select_backend(graph: Graph, platform: Optional[str] = None) -> str:
 
     The ``mesh`` backend is never auto-selected from graph statistics — it
     is chosen by passing ``mesh=`` to :class:`CountingEngine`.
+
+    The decision and its reason are logged on the module logger
+    (``repro.engine``, DEBUG) so callers capture it with standard logging
+    config; ``explain=True`` additionally returns ``(name, reason)`` for
+    structured consumers (:meth:`CountingEngine.describe`).
     """
+    name, reason = _select_backend_reason(graph, platform)
+    logger.debug(
+        "select_backend: %s for n=%d edges=%d (%s)",
+        name,
+        graph.n,
+        graph.num_directed,
+        reason,
+    )
+    return (name, reason) if explain else name
+
+
+def _select_backend_reason(graph: Graph, platform: Optional[str]) -> Tuple[str, str]:
     env = os.environ.get(BACKEND_ENV_VAR, "").strip()
     if env:
         if env not in ("edges", "ell", "sell", "dense", "blocked"):
@@ -214,21 +235,30 @@ def select_backend(graph: Graph, platform: Optional[str] = None) -> str:
                 f"{BACKEND_ENV_VAR}={env!r} is not a local backend "
                 "(edges | ell | sell | dense | blocked)"
             )
-        return env
+        return env, f"{BACKEND_ENV_VAR} env override"
     platform = platform or jax.default_backend()
     if graph.n <= DENSE_MAX_VERTICES:
-        return "dense"
+        return "dense", f"n={graph.n} <= {DENSE_MAX_VERTICES} (tiny graph)"
     if platform == "tpu" and graph.n >= BLOCKED_MIN_VERTICES:
-        return "blocked"
+        return "blocked", f"tpu and n={graph.n} >= {BLOCKED_MIN_VERTICES}"
     edges = max(graph.num_directed, 1)
     if DENSE_WORK_ADVANTAGE * edges >= graph.n**2:
-        return "dense"
+        return "dense", (
+            f"{DENSE_WORK_ADVANTAGE}*|E|={DENSE_WORK_ADVANTAGE * edges} >= "
+            f"n^2={graph.n**2} (work-dense graph)"
+        )
     max_deg = graph.max_degree()
     if graph.n * max_deg <= ELL_PAD_FACTOR * edges:
-        return "ell"
+        return "ell", (
+            f"n*max_deg={graph.n * max_deg} <= {ELL_PAD_FACTOR}*|E| "
+            "(flat degrees, padding bounded)"
+        )
     if graph.n * edges >= SELL_MIN_SCATTER_WORK:
-        return "sell"
-    return "edges"
+        return "sell", (
+            f"n*|E|={graph.n * edges} >= {SELL_MIN_SCATTER_WORK} "
+            "(XLA:CPU scatter-cliff regime)"
+        )
+    return "edges", "skewed degrees below the scatter-cliff regime"
 
 
 def pick_chunk_size(
@@ -240,6 +270,87 @@ def pick_chunk_size(
     if bytes_per_coloring <= 0:
         return max_chunk
     return max(1, min(max_chunk, int(memory_budget_bytes // bytes_per_coloring)))
+
+
+def template_set_canons(
+    templates: Sequence[Template],
+) -> Tuple[Tuple[str, ...], ...]:
+    """Per-template tuple of rooted canonical forms of the DP stages.
+
+    This is the template half of the engine cache key: two template sets
+    with equal canon tuples produce identical DP schedules (same stages,
+    same split tables, same sharing), so a compiled engine built for one
+    serves the other.  Computable without building plans or split tables.
+    """
+    return tuple(
+        tuple(
+            sub_template_canonical(t, sub.vertices, sub.root)
+            for sub in partition_template(t).subs
+        )
+        for t in templates
+    )
+
+
+def _assemble_cache_key(
+    signature: str,
+    canons: Tuple[Tuple[str, ...], ...],
+    backend: str,
+    policy: "DtypePolicy",
+    chunk_spec: Tuple,
+    column_batch: Optional[int],
+) -> Tuple:
+    """The one place the cache-key tuple is laid out — shared by
+    :func:`engine_cache_key` (pre-construction) and
+    :meth:`CountingEngine.cache_key` (resolved values) so the two
+    identities cannot drift."""
+    return (
+        "counting-engine",
+        signature,
+        canons,
+        backend,
+        str(jnp.dtype(policy.store_dtype)),
+        str(jnp.dtype(policy.accum_dtype)),
+        chunk_spec,
+        None if column_batch is None else int(column_batch),
+    )
+
+
+def engine_cache_key(
+    graph: Graph,
+    templates: Sequence[Template],
+    *,
+    backend: str = "auto",
+    dtype_policy: Union[str, "DtypePolicy", jnp.dtype, None] = "fp32",
+    chunk_size: Optional[int] = None,
+    memory_budget_bytes: int = DEFAULT_MEMORY_BUDGET_BYTES,
+    column_batch: Optional[int] = None,
+) -> Tuple:
+    """Hashable identity of a compiled :class:`CountingEngine`.
+
+    Two constructions with equal keys trace and compile to the same
+    programs, so a cache (``repro.serve.cache.EngineCache``) can hand back
+    the warm engine and skip tracing entirely.  Anatomy::
+
+        ("counting-engine",
+         graph signature,           # content hash of (n, src, dst)
+         template-set canons,       # DP-schedule identity, label-free
+         resolved backend name,     # auto-resolution folded in
+         store dtype, accum dtype,  # dtype policy
+         chunk spec,                # explicit chunk, or the budget that
+                                    # deterministically picks one
+         column_batch)              # fused-slice width override (or None)
+
+    The key is computable without constructing the engine (plans, tables,
+    and device operands are only built on a cache miss).
+    """
+    return _assemble_cache_key(
+        graph.signature(),
+        template_set_canons(templates),
+        select_backend(graph) if backend == "auto" else backend,
+        DtypePolicy.resolve(dtype_policy),
+        ("chunk", int(chunk_size)) if chunk_size else ("budget", int(memory_budget_bytes)),
+        column_batch,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -303,6 +414,18 @@ class EngineBackend:
         in accum dtype, without materializing ``A_G @ M_p``."""
         raise NotImplementedError
 
+    def aggregate_ema_grouped(
+        self, m_p: jnp.ndarray, stage_inputs: Sequence[Tuple[jnp.ndarray, StageTables]]
+    ) -> List[jnp.ndarray]:
+        """Run several stages that share the passive state ``m_p``.
+
+        Backends that can share the neighbor aggregation across the group
+        override this (the streamed local pipeline computes each passive
+        column-batch aggregate once for the whole group); the default is
+        the unshared per-stage loop.
+        """
+        return [self.aggregate_ema(m_p, m_a, tables) for m_a, tables in stage_inputs]
+
     def counts_for_colors(self, colors: jnp.ndarray) -> jnp.ndarray:
         """``(B, n)`` colorings -> ``(B, T)`` un-normalized colorful totals."""
         raise NotImplementedError
@@ -322,8 +445,19 @@ class EngineBackend:
         return self.counts_for_colors(colors) * eng._norm_factors[None, :]
 
     def make_run_fn(self) -> Callable:
-        """One jit for the whole run: ``lax.map`` over key chunks."""
-        return jax.jit(lambda keys: jax.lax.map(self.counts_for_keys_chunk, keys))
+        """One jit for the whole run: ``lax.map`` over key chunks.
+
+        Tracing bumps the engine's ``trace_count`` (a Python side effect
+        runs once per trace, i.e. per new compilation), so tests and the
+        serving cache can assert that a warm engine never re-compiles.
+        """
+        engine = self.engine
+
+        def run(keys):
+            engine.trace_count += 1
+            return jax.lax.map(self.counts_for_keys_chunk, keys)
+
+        return jax.jit(run)
 
     # -- memory model --------------------------------------------------------
 
@@ -359,10 +493,21 @@ class LocalBackend(EngineBackend):
         returns accum dtype."""
         raise NotImplementedError
 
+    def _spmm_counted(self, m: jnp.ndarray) -> jnp.ndarray:
+        # the Python-level counter runs once per traced aggregation launch
+        self.engine.counters["passive_aggregations"] += 1
+        return self.spmm(m)
+
     def aggregate_ema(self, m_p, m_a, tables: StageTables):
+        return self.aggregate_ema_grouped(m_p, [(m_a, tables)])[0]
+
+    def aggregate_ema_grouped(self, m_p, stage_inputs):
         pol = self.engine.policy
-        return fused_aggregate_ema(
-            m_p, m_a, tables.batches, tables.n_out, self.spmm, pol.accum_dtype
+        return fused_aggregate_ema_grouped(
+            m_p,
+            [(m_a, tables.batches, tables.n_out) for m_a, tables in stage_inputs],
+            self._spmm_counted,
+            pol.accum_dtype,
         )
 
     def counts_for_colors(self, colors: jnp.ndarray) -> jnp.ndarray:
@@ -371,7 +516,10 @@ class LocalBackend(EngineBackend):
         Sub-template states are memoized by canonical form, so templates
         sharing passive sub-templates (and every template's leaf stage)
         reuse one state per coloring, and freed at their last scheduled
-        read (Algorithm 5's in-place storage).
+        read (Algorithm 5's in-place storage).  Stages reading the same
+        passive canonical form are executed as one group
+        (:attr:`CountingEngine._exec_groups`): the group's passive
+        column-batch sweep aggregates each slice once for all of them.
         """
         eng = self.engine
         pol = eng.policy
@@ -390,13 +538,26 @@ class LocalBackend(EngineBackend):
                 executed.add(key)
                 if sub.is_leaf:
                     slots[key] = leaf
-                else:
-                    m_s = self.aggregate_ema(
-                        slots[canons[sub.passive]],
-                        slots[canons[sub.active]],
-                        eng._stage_tables[(p_idx, i)],
+                elif key not in slots:
+                    # group leader: execute every stage sharing this passive
+                    # canon over one column-batch sweep (members whose active
+                    # state is already live; singleton group otherwise)
+                    members = eng._exec_groups[(p_idx, i)]
+                    stage_inputs = []
+                    for q, j in members:
+                        sub_m = eng.plans[q].partition.subs[j]
+                        stage_inputs.append(
+                            (
+                                slots[eng._canons[q][sub_m.active]],
+                                eng._stage_tables[(q, j)],
+                            )
+                        )
+                    outs = self.aggregate_ema_grouped(
+                        slots[canons[sub.passive]], stage_inputs
                     )
-                    slots[key] = m_s.astype(pol.store_dtype)
+                    for (q, j), m_s in zip(members, outs):
+                        slots[eng._canons[q][j]] = m_s.astype(pol.store_dtype)
+                # else: already produced early as a member of a prior group
                 for dead in free_at.get(pos, ()):
                     slots.pop(dead, None)
                 pos += 1
@@ -531,8 +692,8 @@ class BlockedEllBackend(LocalBackend):
     destination vertex block the kernel accumulates that block's aggregate
     columns in VMEM scratch and consumes them in the eMA FMA against the
     resident ``M_a`` tile the moment the block's last edge pair lands —
-    the aggregate product never reaches HBM (this subsumes the standalone
-    ``repro.kernels.ema`` kernel, which fused only the eMA half).
+    the aggregate product never reaches HBM (this subsumed the removed
+    standalone ``repro.kernels.ema`` kernel, which fused only the eMA half).
     """
 
     name = "blocked"
@@ -558,6 +719,7 @@ class BlockedEllBackend(LocalBackend):
     def aggregate_ema(self, m_p, m_a, tables: StageTables):
         from repro.kernels.spmm_ema.ops import spmm_ema_batched
 
+        self.engine.counters["passive_aggregations"] += 1
         return spmm_ema_batched(
             self._fused_op,
             m_p,
@@ -566,6 +728,12 @@ class BlockedEllBackend(LocalBackend):
             tables.idx_p_host,
             interpret=self.engine.interpret,
         ).astype(self.engine.policy.accum_dtype)
+
+    def aggregate_ema_grouped(self, m_p, stage_inputs):
+        # the Pallas kernel fuses SpMM+eMA per stage inside one launch; a
+        # cross-stage sweep cannot share its VMEM aggregate scratch, so the
+        # group degrades to the per-stage loop (counted per launch)
+        return [self.aggregate_ema(m_p, m_a, tables) for m_a, tables in stage_inputs]
 
     def transient_elements(self) -> int:
         # transposed-layout staging of one stage's operands/output; no
@@ -798,14 +966,26 @@ class CountingEngine:
         )
 
         # --- backend resolution (operands built once, below).
-        auto = False
         if spmm_fn is not None:
             self.backend = "custom"
+            self.backend_source = "custom"
+            self.backend_reason = "caller-supplied spmm_fn"
         elif backend == "auto":
-            auto = True
-            self.backend = "mesh" if mesh is not None else select_backend(graph)
+            if mesh is not None:
+                self.backend = "mesh"
+                self.backend_source = "mesh"
+                self.backend_reason = "mesh= given"
+            else:
+                self.backend, self.backend_reason = select_backend(graph, explain=True)
+                self.backend_source = (
+                    "env"
+                    if os.environ.get(BACKEND_ENV_VAR, "").strip()
+                    else "auto"
+                )
         else:
             self.backend = backend
+            self.backend_source = "explicit"
+            self.backend_reason = "backend= given"
 
         # Bucketed per-batch tables feed the local fused executor and the
         # Pallas kernel only; the mesh backend builds its own streamed
@@ -839,6 +1019,20 @@ class CountingEngine:
                         )
                     self._stage_tables[(p_idx, i)] = table_cache[key]
 
+        # Shared-passive execution groups: stages reading one passive canon
+        # whose active states are all live before the group's first stage
+        # execute together over a single column-batch sweep.
+        self._exec_groups = self._build_shared_passive_groups()
+
+        # Observability counters.  ``trace_count`` increments once per jit
+        # trace (== compilation) of a run/chunk program; the aggregation
+        # counter increments per passive-aggregation launch (the
+        # shared-passive satellite's test hook).  Python-level: they count
+        # traced work, so a warm engine replaying compiled programs holds
+        # steady.
+        self.trace_count = 0
+        self.counters: Dict[str, int] = {"passive_aggregations": 0}
+
         self.backend_impl: EngineBackend = self._make_backend(
             spmm_fn=spmm_fn,
             block_size=block_size,
@@ -848,34 +1042,39 @@ class CountingEngine:
             balance_degrees=balance_degrees,
         )
 
+        # remembered for the cache key: a None chunk means "picked from the
+        # budget", which is itself deterministic given the budget
+        self._chunk_explicit = bool(chunk_size)
+        self._column_batch_arg = column_batch
         self.chunk_size = int(chunk_size) if chunk_size else pick_chunk_size(
             self.bytes_per_coloring(), self.memory_budget_bytes
         )
 
-        itemsize = jnp.dtype(self.policy.store_dtype).itemsize
-        logger.info(
-            "CountingEngine backend=%s (%s) n=%d edges=%d k=%d templates=%d "
-            "column_batch=%d chunk=%d predicted transient=%.2f MiB "
-            "resident=%.2f MiB per coloring",
-            self.backend,
-            ("auto" if auto else "explicit")
-            + (
-                f", {BACKEND_ENV_VAR} override"
-                if auto and os.environ.get(BACKEND_ENV_VAR, "").strip()
-                else ""
-            ),
-            graph.n,
-            graph.num_directed,
-            self.k,
-            len(self.templates),
-            # the mesh backend aggregates at its own all-gather batch width
-            getattr(self.backend_impl, "column_batch", self.column_batch),
-            self.chunk_size,
-            self.backend_impl.transient_elements() * itemsize / 2**20,
-            self.backend_impl.resident_elements() * itemsize / 2**20,
-        )
+        self._graph_signature: Optional[str] = None  # computed lazily
+        if logger.isEnabledFor(logging.INFO):
+            # describe() hashes the graph (O(|E|) host work) — only pay for
+            # it when the line is actually emitted; services that want the
+            # record call describe() themselves
+            d = self.describe()
+            logger.info(
+                "CountingEngine backend=%s (%s: %s) n=%d edges=%d k=%d templates=%d "
+                "column_batch=%d chunk=%d predicted transient=%.2f MiB "
+                "resident=%.2f MiB per coloring",
+                d["backend"],
+                d["backend_source"],
+                d["backend_reason"],
+                d["n"],
+                d["num_directed"],
+                d["k"],
+                len(self.templates),
+                d["column_batch"],
+                d["chunk_size"],
+                d["memory"]["predicted_transient_bytes"] / 2**20,
+                d["memory"]["predicted_resident_bytes"] / 2**20,
+            )
 
         self._run_fn = None  # built lazily (jit cache)
+        self._chunk_fn = None  # streaming per-chunk jit (serving path)
 
     def _make_backend(
         self, *, spmm_fn, block_size, column_batch, ema_mode, gather_dtype, balance_degrees
@@ -902,6 +1101,128 @@ class CountingEngine:
                 balance_degrees=balance_degrees,
             )
         raise ValueError(f"unknown backend {self.backend!r} (one of {ENGINE_BACKENDS})")
+
+    def _build_shared_passive_groups(self) -> Dict[Tuple[int, int], Tuple[Tuple[int, int], ...]]:
+        """Static schedule of shared-passive stage groups.
+
+        Walks the first-occurrence stages in execution order; each non-leaf
+        stage either leads a group or was claimed by an earlier leader.  A
+        later stage joins a leader's group when (a) it reads the same
+        passive canonical form and (b) its active state is already computed
+        before the leader's position (group members execute at the leader's
+        position, so inputs produced between leader and member cannot be
+        used).  Pulling a member earlier only moves its reads/writes
+        forward, so the sequential liveness schedule (``_free_at``) stays
+        valid: nothing a group reads can have been freed yet, and outputs
+        are never freed before their sequential last read.
+
+        Returns ``leader (plan_idx, stage_idx) -> members`` (leader first;
+        singleton groups for unshared stages).
+        """
+        seq: List[Tuple[int, int, str]] = []  # first occurrences, exec order
+        seen = set()
+        for p_idx, plan in enumerate(self.plans):
+            for i, _ in enumerate(plan.partition.subs):
+                c = self._canons[p_idx][i]
+                if c in seen:
+                    continue
+                seen.add(c)
+                seq.append((p_idx, i, c))
+        # canons computed strictly before each seq position
+        avail_before: List[frozenset] = []
+        acc: set = set()
+        for _, _, c in seq:
+            avail_before.append(frozenset(acc))
+            acc.add(c)
+        groups: Dict[Tuple[int, int], Tuple[Tuple[int, int], ...]] = {}
+        member: set = set()
+        for idx, (p_idx, i, _) in enumerate(seq):
+            sub = self.plans[p_idx].partition.subs[i]
+            if sub.is_leaf or (p_idx, i) in member:
+                continue
+            passive_canon = self._canons[p_idx][sub.passive]
+            members = [(p_idx, i)]
+            for jdx in range(idx + 1, len(seq)):
+                q, j, _ = seq[jdx]
+                sub2 = self.plans[q].partition.subs[j]
+                if sub2.is_leaf or (q, j) in member:
+                    continue
+                if self._canons[q][sub2.passive] != passive_canon:
+                    continue
+                if self._canons[q][sub2.active] not in avail_before[idx]:
+                    continue
+                members.append((q, j))
+                member.add((q, j))
+            groups[(p_idx, i)] = tuple(members)
+        return groups
+
+    # ------------------------------------------------------------------
+    # Identity & observability (the serving layer builds on these)
+    # ------------------------------------------------------------------
+
+    def graph_signature(self) -> str:
+        """Content hash of the graph (memoized; see :meth:`Graph.signature`)."""
+        if self._graph_signature is None:
+            self._graph_signature = self.graph.signature()
+        return self._graph_signature
+
+    def cache_key(self) -> Tuple:
+        """This engine's :func:`engine_cache_key` (resolved values).
+
+        Matches what a caller computes *before* construction with the same
+        arguments, so ``CountingService`` can look up a warm engine without
+        building one.  Only meaningful for the named local backends — a
+        ``custom`` ``spmm_fn``'s identity is not captured by the key.
+        """
+        return _assemble_cache_key(
+            self.graph_signature(),
+            tuple(tuple(c) for c in self._canons),
+            self.backend,
+            self.policy,
+            ("chunk", self.chunk_size)
+            if self._chunk_explicit
+            else ("budget", self.memory_budget_bytes),
+            self._column_batch_arg,
+        )
+
+    def describe(self) -> Dict:
+        """Structured construction/decision record.
+
+        One dict with everything the construction log line says — the
+        backend decision and its reason, shapes, dtype policy, chunk plan,
+        and the memory model — so services can attach it to cache entries
+        and surface it without parsing log text.
+        """
+        itemsize = jnp.dtype(self.policy.store_dtype).itemsize
+        return {
+            "backend": self.backend,
+            "backend_source": self.backend_source,
+            "backend_reason": self.backend_reason,
+            "n": self.graph.n,
+            "num_directed": self.graph.num_directed,
+            "k": self.k,
+            "templates": [t.name for t in self.templates],
+            "dtype_policy": {
+                "store": str(jnp.dtype(self.policy.store_dtype)),
+                "accum": str(jnp.dtype(self.policy.accum_dtype)),
+            },
+            # the mesh backend aggregates at its own all-gather batch width
+            "column_batch": getattr(self.backend_impl, "column_batch", self.column_batch),
+            "chunk_size": self.chunk_size,
+            "shared_passive_groups": sum(
+                1 for m in self._exec_groups.values() if len(m) > 1
+            ),
+            "memory": {
+                "budget_bytes": self.memory_budget_bytes,
+                "predicted_transient_bytes": self.backend_impl.transient_elements()
+                * itemsize,
+                "predicted_resident_bytes": self.backend_impl.resident_elements()
+                * itemsize,
+                "bytes_per_coloring": self.bytes_per_coloring(),
+            },
+            "graph_signature": self.graph_signature(),
+            "cache_key": self.cache_key(),
+        }
 
     # ------------------------------------------------------------------
     # Memory planning
@@ -1000,6 +1321,44 @@ class CountingEngine:
         if self._run_fn is None:
             self._run_fn = self.backend_impl.make_run_fn()
         return self._run_fn
+
+    def _get_chunk_fn(self):
+        if self._chunk_fn is None:
+            impl = self.backend_impl
+
+            def chunk_run(keys):
+                self.trace_count += 1
+                return impl.counts_for_keys_chunk(keys)
+
+            self._chunk_fn = jax.jit(chunk_run)
+        return self._chunk_fn
+
+    def count_keys_chunk(self, keys) -> np.ndarray:
+        """Streaming increment: one chunk-shaped launch, results back now.
+
+        The serving path: callers stream iterations through repeated calls
+        (adaptive stopping folds each increment into its running estimate)
+        instead of fixing N upfront.  ``keys`` is ``(m, 2)`` with
+        ``m <= chunk_size``; short increments are padded with the last key
+        up to ``chunk_size`` so every call hits ONE compiled shape — a warm
+        engine never re-traces, whatever increment sizes arrive
+        (shape-bucketed padding).  Returns the ``(m, T)`` normalized
+        estimates as a float64 host array.
+        """
+        keys = jnp.asarray(keys)
+        m = int(keys.shape[0])
+        if m == 0:
+            return np.zeros((0, len(self.templates)), np.float64)
+        if m > self.chunk_size:
+            raise ValueError(
+                f"increment of {m} keys exceeds chunk_size={self.chunk_size}; "
+                "split it (count_keys handles multi-chunk runs)"
+            )
+        pad = self.chunk_size - m
+        if pad:
+            keys = jnp.concatenate([keys, keys[-1:].repeat(pad, axis=0)], axis=0)
+        vals = self._get_chunk_fn()(keys)
+        return np.asarray(vals, dtype=np.float64)[:m]
 
     def count_keys(self, keys) -> np.ndarray:
         """Normalized per-iteration estimates for explicit PRNG keys.

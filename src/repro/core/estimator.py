@@ -59,7 +59,7 @@ def make_count_step(
 def estimate_embeddings(
     graph: Graph,
     template: Template,
-    iterations: int = 32,
+    iterations: Optional[int] = None,
     seed: int = 0,
     spmm_fn: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None,
     plan: Optional[CountingPlan] = None,
@@ -71,6 +71,9 @@ def estimate_embeddings(
     column_batch: Optional[int] = None,
     gather_dtype=None,
     balance_degrees: bool = False,
+    epsilon: Optional[float] = None,
+    delta: Optional[float] = None,
+    max_iterations: Optional[int] = None,
 ) -> EstimateResult:
     """End-to-end estimator (examples & tests), single-host or mesh.
 
@@ -80,7 +83,10 @@ def estimate_embeddings(
 
     Args:
       graph / template: the network and the tree template to count.
-      iterations / seed: number of independent random colorings + PRNG seed.
+      iterations / seed: number of independent random colorings (default
+        32) + PRNG seed.  With an ``epsilon``/``delta`` target,
+        ``iterations`` becomes the adaptive run's budget cap instead —
+        the same semantics as ``CountingService.submit``.
       spmm_fn: custom neighbor-sum kernel (forces the ``custom`` backend).
       plan: pre-built :class:`CountingPlan` (rebuilt from the template when
         omitted).
@@ -92,6 +98,16 @@ def estimate_embeddings(
         backend (column-batched all-gather SpMM + streamed eMA).
       column_batch / gather_dtype / balance_degrees: mesh-backend knobs, see
         :class:`repro.core.engine.MeshBackend`.
+      epsilon / delta: relative-accuracy target.  When either is given the
+        run goes through the serving layer's adaptive stopper
+        (:func:`repro.serve.stopping.adaptive_estimate`): iterations stream
+        in engine-chunk increments and stop as soon as the estimate's
+        normal CI halfwidth is within ``epsilon * |mean|`` at confidence
+        ``1 - delta`` (defaults 0.05 / 0.05) — replacing the blind fixed-N
+        choice end to end.
+      max_iterations: alias for the adaptive budget cap, taking precedence
+        over ``iterations`` (default 1024; compare ``required_iterations``
+        for the a-priori bound the stopper undercuts).
     """
     kwargs = {}
     if memory_budget_bytes is not None:
@@ -113,4 +129,16 @@ def estimate_embeddings(
         plans=None if plan is None else [plan],
         **kwargs,
     )
-    return engine.estimate(iterations=iterations, seed=seed)[0]
+    if epsilon is not None or delta is not None:
+        # lazy import: the serving layer sits above core and imports it
+        from repro.serve.stopping import adaptive_estimate
+
+        budget = int(max_iterations or iterations or 1024)
+        return adaptive_estimate(
+            engine,
+            epsilon=0.05 if epsilon is None else float(epsilon),
+            delta=0.05 if delta is None else float(delta),
+            seed=seed,
+            max_iterations=budget,
+        )[0]
+    return engine.estimate(iterations=iterations or 32, seed=seed)[0]

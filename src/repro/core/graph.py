@@ -21,6 +21,7 @@ deterministic PPIN-like graph for examples.
 
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass
 from typing import Optional, Tuple
 
@@ -98,6 +99,17 @@ class Graph:
         a = np.zeros((self.n, self.n), dtype=np.float32)
         a[self.dst, self.src] = 1.0
         return a
+
+    def signature(self) -> str:
+        """Content hash of ``(n, src, dst)`` — the graph half of the engine
+        cache key.  Graphs in canonical form (sorted, symmetrized) with the
+        same structure hash identically regardless of construction route.
+        """
+        h = hashlib.sha1()
+        h.update(np.int64(self.n).tobytes())
+        h.update(np.ascontiguousarray(self.src, dtype=np.int64).tobytes())
+        h.update(np.ascontiguousarray(self.dst, dtype=np.int64).tobytes())
+        return h.hexdigest()
 
 
 def _canonicalize(n: int, u: np.ndarray, v: np.ndarray) -> Graph:

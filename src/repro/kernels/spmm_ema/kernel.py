@@ -7,9 +7,9 @@ Computes, for one stage of SUBGRAPH2VEC's Algorithm 5,
 WITHOUT ever materializing the aggregate product ``B = A_G @ M_p``: per
 destination vertex block, the aggregate columns live only in a VMEM scratch
 tile that is consumed by the eMA FMA the moment the block's last edge pair
-has been accumulated.  This subsumes the standalone eMA kernel
-(``repro.kernels.ema``), which fused only the multiply-add half and still
-read a full HBM-resident ``B``.
+has been accumulated.  This subsumed (and replaced — the package is gone)
+the standalone eMA kernel that once lived at ``repro.kernels.ema``, which
+fused only the multiply-add half and still read a full HBM-resident ``B``.
 
 Layout is the paper's column-major design (§V-B) transposed for TPU: all
 matrices are ``(colorsets, vertices)`` with the vertex axis on lanes.  The

@@ -1,0 +1,22 @@
+"""Serving layer: multi-tenant counting queries over cached engines.
+
+``repro.serve.counting`` is the subgraph-counting service (engine cache +
+cross-query batching + adaptive stopping); ``repro.serve.engine`` is the
+unrelated LM continuous-batching demo and is NOT imported here (it pulls in
+the transformer stack — import it explicitly if you want it).
+"""
+
+from .cache import EngineCache
+from .counting import CountingService, Query, QueryEstimate
+from .stopping import AdaptiveStopper, TemplateCI, adaptive_estimate, normal_quantile
+
+__all__ = [
+    "EngineCache",
+    "CountingService",
+    "Query",
+    "QueryEstimate",
+    "AdaptiveStopper",
+    "TemplateCI",
+    "adaptive_estimate",
+    "normal_quantile",
+]

@@ -1,0 +1,82 @@
+"""Compiled-engine LRU cache for the counting service.
+
+A :class:`~repro.core.engine.CountingEngine` is expensive twice over: device
+operand construction (edge lists / SELL tables / dense adjacency shipped to
+the device) and the jit trace+compile of its run programs.  Both are keyed
+entirely by :func:`repro.core.engine.engine_cache_key` — graph signature,
+template-set canonical forms, backend, dtype policy, and the chunk spec —
+so repeat and near-repeat queries (same key, different seeds / iteration
+targets / epsilon) must never pay them again.  The cache holds the warm
+engines behind that key with LRU eviction and hit/miss/evict counters for
+observability.
+
+Thread-unsafe by design (the service's admission loop is single-threaded);
+wrap access in a lock if you drive one cache from several threads.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Callable, Dict, Hashable, Optional, Tuple
+
+__all__ = ["EngineCache"]
+
+
+class EngineCache:
+    """LRU map ``engine_cache_key -> warm CountingEngine``.
+
+    ``get(key, factory)`` returns the cached engine (hit: moves it to the
+    MRU end) or builds one via ``factory()`` (miss: inserts, evicting the
+    LRU entry beyond ``capacity``).  Evicted engines are simply dropped —
+    JAX frees their device operands with the last reference, and a
+    re-query rebuilds through the same factory path.
+    """
+
+    def __init__(self, capacity: int = 8):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self._store: "OrderedDict[Hashable, object]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._store
+
+    def get(self, key: Hashable, factory: Callable[[], object]):
+        """Cached engine for ``key``, building (and possibly evicting) on miss."""
+        if key in self._store:
+            self.hits += 1
+            self._store.move_to_end(key)
+            return self._store[key]
+        self.misses += 1
+        engine = factory()
+        self._store[key] = engine
+        while len(self._store) > self.capacity:
+            self._store.popitem(last=False)
+            self.evictions += 1
+        return engine
+
+    def peek(self, key: Hashable) -> Optional[object]:
+        """The cached engine without touching counters or LRU order."""
+        return self._store.get(key)
+
+    def keys(self) -> Tuple[Hashable, ...]:
+        """Cached keys, LRU first."""
+        return tuple(self._store.keys())
+
+    def counters(self) -> Dict[str, int]:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "size": len(self._store),
+            "capacity": self.capacity,
+        }
+
+    def clear(self) -> None:
+        self._store.clear()

@@ -1,0 +1,406 @@
+"""CountingService: a multi-tenant query layer over cached CountingEngines.
+
+The engine (:mod:`repro.core.engine`) answers ONE (graph, template-set)
+workload well; a serving deployment faces many tenants asking overlapping
+questions — many templates x many graphs x accuracy targets (the
+motif/graphlet query workload of the subgraph-counting literature).  Naively
+that is one hand-built engine per call: a fresh trace+compile every time and
+a blind fixed iteration count.  ``CountingService`` closes both gaps with
+three pieces:
+
+* **Compiled-engine cache** (:mod:`repro.serve.cache`): engines are shared
+  behind :func:`repro.core.engine.engine_cache_key` with LRU eviction.  A
+  repeat query — same graph signature, template canons, backend, dtype
+  policy, chunk spec — reuses the warm engine AND its compiled run program:
+  zero new traces (``engine.trace_count`` holds still), asserted in tests.
+  Iteration counts never enter the key: every launch is padded to the
+  engine's ``chunk_size`` (shape-bucketed), so arbitrary iteration targets
+  hit one compiled shape.
+* **Cross-query batching**: pending queries that resolve to the same engine
+  key are merged into ONE chunked ``counts_for_keys_chunk`` launch — their
+  colorings ride the same fused column dimension of the DP state (the
+  engine's B axis), and results are scattered back per query.  Per-query
+  colorings are drawn with ``fold_in(PRNGKey(query.seed), iteration)``, so
+  the values each query receives are independent of who shared its launch.
+* **Adaptive (epsilon, delta) stopping** (:mod:`repro.serve.stopping`):
+  each query folds its per-coloring estimates into a running mean/variance
+  and stops at its relative CI target instead of a blind fixed N.
+
+Scheduling is a round-robin **admission loop over engine keys**: one launch
+per eligible key per cycle, so a hot graph with a deep queue cannot starve
+other tenants — every key with pending work gets device time each cycle.
+The loop is single-threaded and deterministic: a fixed submission order and
+fixed seeds reproduce every launch, estimate, and stopping decision exactly.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import (
+    DEFAULT_MEMORY_BUDGET_BYTES,
+    CountingEngine,
+    engine_cache_key,
+)
+from repro.core.graph import Graph
+from repro.core.templates import Template, get_template
+
+from .cache import EngineCache
+from .stopping import DEFAULT_MIN_ITERATIONS, AdaptiveStopper, TemplateCI
+
+__all__ = ["CountingService", "Query", "QueryEstimate"]
+
+#: Iterations for a query that names neither an (epsilon, delta) target nor
+#: an explicit iteration count (the engine-layer fixed-N default).
+DEFAULT_FIXED_ITERATIONS = 32
+
+#: Iteration budget cap for adaptive queries that don't pass their own.
+DEFAULT_ADAPTIVE_BUDGET = 1024
+
+
+@dataclass
+class QueryEstimate:
+    """Final per-template answer of a completed query."""
+
+    template: str
+    mean: float
+    std: float
+    halfwidth: float  # CI halfwidth at stop time (0.0 for fixed-N queries)
+    converged: bool  # CI target met (False when the budget ran out / fixed-N)
+
+
+@dataclass
+class Query:
+    """One submitted counting question and its lifecycle state.
+
+    ``status`` walks ``pending -> running -> done``; ``iterations`` is the
+    number of colorings actually spent (== the fixed target for fixed-N
+    queries, <= budget for adaptive ones).
+    """
+
+    qid: int
+    graph_ref: str
+    templates: Tuple[Template, ...]
+    epsilon: Optional[float]
+    delta: float
+    budget: int
+    seed: int
+    engine_key: Tuple
+    stopper: AdaptiveStopper
+    status: str = "pending"
+    estimates: Optional[List[QueryEstimate]] = None
+    record_rows: bool = False
+    rows: Optional[List[np.ndarray]] = None  # (m, T) blocks when recording
+    _base_key: np.ndarray = field(default=None, repr=False)
+    _drawn: int = 0  # next coloring iteration index to draw
+
+    def per_iteration(self) -> np.ndarray:
+        """``(iterations, T)`` per-coloring estimates (``record_rows`` only)."""
+        if not self.record_rows:
+            raise RuntimeError("submit(..., record_rows=True) to keep rows")
+        if not self.rows:
+            return np.zeros((0, len(self.templates)), np.float64)
+        return np.concatenate(self.rows, axis=0)
+
+    @property
+    def done(self) -> bool:
+        return self.status == "done"
+
+    @property
+    def iterations(self) -> int:
+        return self.stopper.iterations
+
+    def result(self) -> List[QueryEstimate]:
+        if not self.done:
+            raise RuntimeError(f"query {self.qid} is {self.status}, not done")
+        return self.estimates
+
+
+class CountingService:
+    """Shared serving front-end; see the module docstring for the design.
+
+    Args:
+      max_engines: LRU capacity of the compiled-engine cache.
+      backend / dtype_policy / chunk_size / memory_budget_bytes: forwarded
+        to every engine the service builds (and folded into cache keys).
+      default_budget: iteration cap for adaptive queries without their own.
+      min_iterations: CI arming threshold (see ``AdaptiveStopper``).
+    """
+
+    def __init__(
+        self,
+        *,
+        max_engines: int = 8,
+        backend: str = "auto",
+        dtype_policy: Union[str, None] = "fp32",
+        chunk_size: Optional[int] = None,
+        memory_budget_bytes: int = DEFAULT_MEMORY_BUDGET_BYTES,
+        default_budget: int = DEFAULT_ADAPTIVE_BUDGET,
+        min_iterations: int = DEFAULT_MIN_ITERATIONS,
+    ):
+        self.backend = backend
+        self.dtype_policy = dtype_policy
+        self.chunk_size = chunk_size
+        self.memory_budget_bytes = int(memory_budget_bytes)
+        self.default_budget = int(default_budget)
+        self.min_iterations = int(min_iterations)
+        self._graphs: Dict[str, Graph] = {}
+        self._signatures: Dict[str, str] = {}
+        self._cache = EngineCache(capacity=max_engines)
+        self._next_qid = 0
+        self._active: Dict[Tuple, List[Query]] = {}  # engine key -> live queries
+        self._rr: Deque[Tuple] = deque()  # round-robin ring of keys with work
+        self.launch_log: List[Tuple] = []  # engine key per launch, in order
+        self.queries_completed = 0
+
+    # ------------------------------------------------------------------
+    # Registration & submission
+    # ------------------------------------------------------------------
+
+    def register_graph(self, name: str, graph: Graph) -> str:
+        """Register ``graph`` under ``name``; returns its content signature.
+
+        Re-registering a name with an identical signature is a no-op;
+        re-registering with different content is an error (queries in
+        flight reference the old content).
+        """
+        sig = graph.signature()
+        if name in self._signatures and self._signatures[name] != sig:
+            raise ValueError(
+                f"graph {name!r} already registered with different content"
+            )
+        self._graphs[name] = graph
+        self._signatures[name] = sig
+        return sig
+
+    def graph(self, name: str) -> Graph:
+        if name not in self._graphs:
+            raise KeyError(
+                f"unknown graph {name!r} — register_graph() it first "
+                f"(known: {sorted(self._graphs)})"
+            )
+        return self._graphs[name]
+
+    def _resolve_templates(
+        self, templates: Union[str, Template, Sequence[Union[str, Template]]]
+    ) -> Tuple[Template, ...]:
+        if isinstance(templates, (str, Template)):
+            templates = [templates]
+        out = tuple(get_template(t) if isinstance(t, str) else t for t in templates)
+        if not out:
+            raise ValueError("query needs at least one template")
+        return out
+
+    def submit(
+        self,
+        graph_ref: str,
+        templates: Union[str, Template, Sequence[Union[str, Template]]],
+        *,
+        epsilon: Optional[float] = None,
+        delta: float = 0.05,
+        iterations: Optional[int] = None,
+        seed: int = 0,
+        record_rows: bool = False,
+    ) -> Query:
+        """Queue a query; returns its handle (drive it with :meth:`run`).
+
+        ``epsilon``/``delta``: relative CI target — the query stops as soon
+        as every template's halfwidth is within ``epsilon * |mean|`` at
+        confidence ``1 - delta`` (``iterations`` then caps the budget,
+        default ``default_budget``).  Without ``epsilon`` the query runs a
+        fixed ``iterations`` colorings (default ``32``).  ``record_rows``
+        keeps the per-coloring estimates on the handle
+        (:meth:`Query.per_iteration`) instead of just the running moments.
+        """
+        graph = self.graph(graph_ref)
+        tset = self._resolve_templates(templates)
+        if epsilon is not None:
+            budget = int(iterations) if iterations else self.default_budget
+        else:
+            budget = int(iterations) if iterations else DEFAULT_FIXED_ITERATIONS
+        key = engine_cache_key(
+            graph,
+            tset,
+            backend=self.backend,
+            dtype_policy=self.dtype_policy,
+            chunk_size=self.chunk_size,
+            memory_budget_bytes=self.memory_budget_bytes,
+        )
+        stopper = AdaptiveStopper(
+            len(tset),
+            epsilon=epsilon,
+            delta=delta,
+            budget=budget,
+            min_iterations=self.min_iterations,
+        )
+        query = Query(
+            qid=self._next_qid,
+            graph_ref=graph_ref,
+            templates=tset,
+            epsilon=epsilon,
+            delta=delta,
+            budget=budget,
+            seed=seed,
+            engine_key=key,
+            stopper=stopper,
+            record_rows=record_rows,
+            rows=[] if record_rows else None,
+            _base_key=np.asarray(jax.random.PRNGKey(seed)),
+        )
+        self._next_qid += 1
+        if key not in self._active:
+            self._active[key] = []
+            self._rr.append(key)
+        self._active[key].append(query)
+        return query
+
+    # ------------------------------------------------------------------
+    # The admission loop
+    # ------------------------------------------------------------------
+
+    def _engine_for(self, key: Tuple, query: Query) -> CountingEngine:
+        def build():
+            return CountingEngine(
+                self.graph(query.graph_ref),
+                list(query.templates),
+                backend=self.backend,
+                dtype_policy=self.dtype_policy,
+                chunk_size=self.chunk_size,
+                memory_budget_bytes=self.memory_budget_bytes,
+            )
+
+        return self._cache.get(key, build)
+
+    def step(self) -> Optional[Tuple]:
+        """Serve ONE launch to the next engine key in round-robin order.
+
+        Merges that key's live queries into one chunk: slots are dealt one
+        coloring at a time, cycling the queries, so concurrent tenants of a
+        hot engine split each launch fairly; unfilled slots are padded
+        (same compiled shape either way).  Returns the engine key served,
+        or ``None`` when no query is waiting.
+        """
+        while self._rr:
+            key = self._rr.popleft()
+            queries = [q for q in self._active.get(key, []) if not q.done]
+            if queries:
+                break
+            self._active.pop(key, None)  # drained key leaves the ring
+        else:
+            return None
+
+        engine = self._engine_for(key, queries[0])
+        chunk = engine.chunk_size
+
+        # deal slots round-robin across this key's queries (iteration order
+        # per query is preserved: each deal hands out its next index)
+        alloc: List[Tuple[Query, int]] = []
+        dealt: Dict[int, int] = {}
+        ring = deque(queries)
+        while ring and len(alloc) < chunk:
+            q = ring.popleft()
+            d = dealt.get(q.qid, 0)
+            if q.stopper.remaining_budget() > d:
+                alloc.append((q, q._drawn + d))
+                dealt[q.qid] = d + 1
+                ring.append(q)
+
+        # one vmapped dispatch for the whole launch's keys (a per-slot
+        # fold_in loop costs a host dispatch per coloring — hot-path tax);
+        # vmapped fold_in is bit-identical to the per-call draw
+        bases = jnp.asarray(np.stack([q._base_key for q, _ in alloc]))
+        idxs = jnp.asarray(np.asarray([idx for _, idx in alloc], np.uint32))
+        keys_np = np.asarray(jax.vmap(jax.random.fold_in)(bases, idxs), np.uint32)
+        rows = engine.count_keys_chunk(keys_np)  # (len(alloc), T) float64
+        self.launch_log.append(key)
+
+        # scatter results back per query, in iteration order, and advance
+        per_query: Dict[int, List[np.ndarray]] = {}
+        by_qid = {q.qid: q for q, _ in alloc}
+        for (q, _), row in zip(alloc, rows):
+            per_query.setdefault(q.qid, []).append(row)
+        for qid, qrows in per_query.items():
+            q = by_qid[qid]
+            block = np.stack(qrows)
+            q._drawn += block.shape[0]
+            q.status = "running"
+            if q.record_rows:
+                q.rows.append(block)
+            q.stopper.update(block)
+            if q.stopper.done:
+                self._finalize(q)
+
+        still_live = [q for q in self._active.get(key, []) if not q.done]
+        if still_live:
+            self._active[key] = still_live
+            self._rr.append(key)
+        else:
+            self._active.pop(key, None)
+        return key
+
+    def _finalize(self, query: Query) -> None:
+        cis: List[TemplateCI] = query.stopper.estimates()
+        query.estimates = [
+            QueryEstimate(
+                template=t.name,
+                mean=ci.mean,
+                std=ci.std,
+                halfwidth=0.0 if query.epsilon is None else ci.halfwidth,
+                converged=ci.converged,
+            )
+            for t, ci in zip(query.templates, cis)
+        ]
+        query.status = "done"
+        self.queries_completed += 1
+
+    def run(self, max_launches: Optional[int] = None) -> None:
+        """Drive the admission loop until every submitted query is done."""
+        launches = 0
+        while self.step() is not None:
+            launches += 1
+            if max_launches is not None and launches >= max_launches:
+                return
+
+    def query(
+        self,
+        graph_ref: str,
+        templates,
+        **submit_kwargs,
+    ) -> List[QueryEstimate]:
+        """Synchronous convenience: submit + drain + result."""
+        q = self.submit(graph_ref, templates, **submit_kwargs)
+        self.run()
+        return q.result()
+
+    # ------------------------------------------------------------------
+    # Observability
+    # ------------------------------------------------------------------
+
+    def engine(self, key: Tuple) -> Optional[CountingEngine]:
+        """The warm engine behind a query's ``engine_key`` (None if evicted)."""
+        return self._cache.peek(key)
+
+    def stats(self) -> Dict:
+        """Service counters: cache hit/miss/evict, launches, completions."""
+        by_key: Dict[Tuple, int] = {}
+        for key in self.launch_log:
+            by_key[key] = by_key.get(key, 0) + 1
+        return {
+            "cache": self._cache.counters(),
+            "launches": len(self.launch_log),
+            "launches_by_key": by_key,
+            "queries_submitted": self._next_qid,
+            "queries_completed": self.queries_completed,
+            "engines": [
+                self._cache.peek(k).describe()
+                for k in self._cache.keys()
+                if self._cache.peek(k) is not None
+            ],
+        }

@@ -1,0 +1,246 @@
+"""Adaptive (epsilon, delta) stopping for color-coding estimation runs.
+
+The color-coding estimate is a mean of i.i.d. per-coloring counts, so the
+blind a-priori iteration bound ``N = ceil(e^k log(1/delta) / eps^2)`` (Alon
+et al.; ``estimator.required_iterations``) is wildly conservative — it must
+cover the worst-case variance of *any* graph.  The serving layer replaces it
+with sequential stopping on the *observed* variance: run an increment of
+colorings, fold the per-coloring estimates into a running mean/variance
+(Welford), and stop as soon as the normal-approximation confidence interval
+is relatively tight enough::
+
+    halfwidth = z_{1 - delta/2} * sqrt(var_sample / n)
+    stop when  halfwidth <= epsilon * |mean|   (for every template)
+
+or when the iteration budget runs out.  With ~dozens of increments the CLT
+approximation is solid (the paper's estimates need >= tens of iterations for
+useful accuracy anyway), and empirically the stopper lands 3-5 orders of
+magnitude below the blind bound at the same (epsilon, delta) target.
+
+Everything here is host-side float64 NumPy — deterministic under a fixed
+seed and independent of how iterations were batched into launches.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Optional
+
+import numpy as np
+
+__all__ = [
+    "normal_quantile",
+    "AdaptiveStopper",
+    "TemplateCI",
+    "adaptive_estimate",
+]
+
+#: Guard against stopping on the degenerate variance of the first couple of
+#: samples: the CI test only arms after this many iterations.
+DEFAULT_MIN_ITERATIONS = 8
+
+
+def normal_quantile(p: float) -> float:
+    """Inverse standard-normal CDF (Acklam's rational approximation).
+
+    Max absolute error ~1.15e-9 over (0, 1) — far below what a stopping
+    rule can feel — with no SciPy dependency.
+    """
+    if not 0.0 < p < 1.0:
+        raise ValueError(f"quantile needs p in (0, 1), got {p}")
+    # coefficients: P. Acklam, "An algorithm for computing the inverse
+    # normal cumulative distribution function"
+    a = (-3.969683028665376e01, 2.209460984245205e02, -2.759285104469687e02,
+         1.383577518672690e02, -3.066479806614716e01, 2.506628277459239e00)
+    b = (-5.447609879822406e01, 1.615858368580409e02, -1.556989798598866e02,
+         6.680131188771972e01, -1.328068155288572e01)
+    c = (-7.784894002430293e-03, -3.223964580411365e-01, -2.400758277161838e00,
+         -2.549732539343734e00, 4.374664141464968e00, 2.938163982698783e00)
+    d = (7.784695709041462e-03, 3.224671290700398e-01, 2.445134137142996e00,
+         3.754408661907416e00)
+    p_low, p_high = 0.02425, 1 - 0.02425
+    if p < p_low:
+        q = math.sqrt(-2 * math.log(p))
+        return (((((c[0] * q + c[1]) * q + c[2]) * q + c[3]) * q + c[4]) * q + c[5]) / (
+            (((d[0] * q + d[1]) * q + d[2]) * q + d[3]) * q + 1
+        )
+    if p <= p_high:
+        q = p - 0.5
+        r = q * q
+        return (((((a[0] * r + a[1]) * r + a[2]) * r + a[3]) * r + a[4]) * r + a[5]) * q / (
+            ((((b[0] * r + b[1]) * r + b[2]) * r + b[3]) * r + b[4]) * r + 1
+        )
+    q = math.sqrt(-2 * math.log(1 - p))
+    return -(((((c[0] * q + c[1]) * q + c[2]) * q + c[3]) * q + c[4]) * q + c[5]) / (
+        (((d[0] * q + d[1]) * q + d[2]) * q + d[3]) * q + 1
+    )
+
+
+@dataclass
+class TemplateCI:
+    """Per-template running estimate at the moment of inspection."""
+
+    mean: float
+    std: float  # sample std (ddof=1); 0.0 before two samples
+    halfwidth: float  # z * std / sqrt(n); inf before the CI arms
+    converged: bool
+
+
+class AdaptiveStopper:
+    """Running mean/variance + the relative-halfwidth stopping rule.
+
+    One stopper per query; feed it ``(m, T)`` blocks of per-coloring
+    normalized estimates in iteration order (`update`) and poll ``done``.
+    A query stops when EVERY template's CI halfwidth is within
+    ``epsilon * |mean|`` (after ``min_iterations``), or at ``budget``
+    iterations.  ``epsilon=None`` disables the CI rule — the stopper
+    degenerates to a fixed-``budget`` run, so fixed-N and adaptive queries
+    drive through one code path.
+
+    State is a vectorized Welford accumulation in float64: deterministic,
+    O(T) memory, and independent of launch batching (the same sample
+    sequence gives the same stop decision however it was chunked —
+    decisions are only TAKEN at increment boundaries, so coarser batching
+    can only overshoot, never diverge).
+    """
+
+    def __init__(
+        self,
+        num_templates: int,
+        *,
+        epsilon: Optional[float] = None,
+        delta: float = 0.05,
+        budget: int = 1024,
+        min_iterations: int = DEFAULT_MIN_ITERATIONS,
+    ):
+        if epsilon is not None and epsilon <= 0:
+            raise ValueError(f"epsilon must be positive, got {epsilon}")
+        if not 0 < delta < 1:
+            raise ValueError(f"delta must be in (0, 1), got {delta}")
+        if budget < 1:
+            raise ValueError(f"budget must be >= 1, got {budget}")
+        self.num_templates = int(num_templates)
+        self.epsilon = epsilon
+        self.delta = float(delta)
+        self.budget = int(budget)
+        self.min_iterations = max(2, int(min_iterations))
+        self.z = normal_quantile(1 - self.delta / 2) if epsilon is not None else None
+        self.count = 0
+        self._mean = np.zeros(self.num_templates, np.float64)
+        self._m2 = np.zeros(self.num_templates, np.float64)
+
+    # -- accumulation --------------------------------------------------------
+
+    def update(self, rows: np.ndarray) -> None:
+        """Fold ``(m, T)`` per-coloring estimates into the running moments."""
+        rows = np.asarray(rows, np.float64)
+        if rows.ndim != 2 or rows.shape[1] != self.num_templates:
+            raise ValueError(f"expected (m, {self.num_templates}) rows, got {rows.shape}")
+        for row in rows:
+            self.count += 1
+            delta = row - self._mean
+            self._mean += delta / self.count
+            self._m2 += delta * (row - self._mean)
+
+    # -- inspection ----------------------------------------------------------
+
+    @property
+    def iterations(self) -> int:
+        return self.count
+
+    def estimates(self) -> List[TemplateCI]:
+        """Current per-template mean / std / CI halfwidth."""
+        out = []
+        for t in range(self.num_templates):
+            if self.count >= 2:
+                var = self._m2[t] / (self.count - 1)
+                std = math.sqrt(max(var, 0.0))
+            else:
+                std = 0.0
+            if self.z is not None and self.count >= self.min_iterations:
+                half = self.z * std / math.sqrt(self.count)
+                conv = half <= self.epsilon * abs(self._mean[t])
+            else:
+                half = math.inf if self.z is not None else 0.0
+                conv = False
+            out.append(
+                TemplateCI(
+                    mean=float(self._mean[t]), std=std, halfwidth=half, converged=conv
+                )
+            )
+        return out
+
+    @property
+    def converged(self) -> bool:
+        """Every template's relative CI target met (False without a target)."""
+        if self.z is None or self.count < self.min_iterations:
+            return False
+        return all(e.converged for e in self.estimates())
+
+    @property
+    def done(self) -> bool:
+        return self.converged or self.count >= self.budget
+
+    def remaining_budget(self) -> int:
+        return max(0, self.budget - self.count)
+
+
+def adaptive_estimate(
+    engine,
+    *,
+    epsilon: float,
+    delta: float = 0.05,
+    seed: int = 0,
+    max_iterations: int = 1024,
+    min_iterations: int = DEFAULT_MIN_ITERATIONS,
+):
+    """Drive one :class:`~repro.core.engine.CountingEngine` adaptively.
+
+    Streams ``chunk_size``-wide increments through the engine's fixed-shape
+    :meth:`~repro.core.engine.CountingEngine.count_keys_chunk` launch,
+    folding each into an :class:`AdaptiveStopper`, until the relative
+    ``(epsilon, delta)`` CI target is met or ``max_iterations`` is spent.
+    Iteration ``i``'s coloring key is ``fold_in(PRNGKey(seed), i)`` —
+    stable under any increment size, so the run is deterministic for a
+    fixed seed.
+
+    Returns one ``estimator.EstimateResult``-compatible object per template
+    (``per_iteration`` holds exactly the iterations actually run).
+    """
+    import jax
+
+    from repro.core.engine import EstimateResult
+
+    stopper = AdaptiveStopper(
+        len(engine.templates),
+        epsilon=epsilon,
+        delta=delta,
+        budget=max_iterations,
+        min_iterations=min_iterations,
+    )
+    import jax.numpy as jnp
+
+    base = jax.random.PRNGKey(seed)
+    fold = jax.vmap(lambda i: jax.random.fold_in(base, i))
+    rows: List[np.ndarray] = []
+    drawn = 0
+    while not stopper.done:
+        width = min(engine.chunk_size, stopper.remaining_budget())
+        # one vmapped dispatch per increment (bit-identical to per-call
+        # fold_in, which the cross-query equality tests draw independently)
+        keys = np.asarray(fold(jnp.arange(drawn, drawn + width, dtype=jnp.uint32)))
+        vals = engine.count_keys_chunk(keys)  # (width, T) float64
+        drawn += width
+        rows.append(vals)
+        stopper.update(vals)
+    per_iter = np.concatenate(rows, axis=0) if rows else np.zeros((0, len(engine.templates)))
+    return [
+        EstimateResult(
+            mean=float(per_iter[:, t].mean()),
+            std=float(per_iter[:, t].std()),
+            per_iteration=per_iter[:, t],
+            iterations=int(per_iter.shape[0]),
+        )
+        for t in range(len(engine.templates))
+    ]

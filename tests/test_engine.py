@@ -162,6 +162,55 @@ def test_multi_template_requires_same_k():
         CountingEngine(g, [get_template("u3"), get_template("u6")])
 
 
+def test_shared_passive_grouping_fewer_aggregations():
+    """Stages sharing a passive canon run over ONE column-batch sweep: the
+    multi-template engine performs strictly fewer passive aggregations than
+    the per-stage (unshared) execution would."""
+    g = rmat_graph(200, 800, seed=1)
+    treelets = [get_template(n) for n in ("path6", "star6", "bintree6", "u6")]
+    eng = CountingEngine(g, treelets, backend="edges")
+    # the schedule actually contains a shared group
+    assert any(len(members) > 1 for members in eng._exec_groups.values())
+    colors = np.random.default_rng(0).integers(0, 6, size=g.n)
+    assert eng.counters["passive_aggregations"] == 0
+    out = eng.raw_counts(colors)
+    shared_calls = eng.counters["passive_aggregations"]
+    # what the ungrouped execution would launch: one aggregation per
+    # (stage, bucketed batch)
+    unshared_calls = sum(
+        len(eng._stage_tables[(q, j)].batches)
+        for members in eng._exec_groups.values()
+        for (q, j) in members
+    )
+    assert 0 < shared_calls < unshared_calls
+    # ... and grouping does not change any count
+    for ti, t in enumerate(treelets):
+        single = CountingEngine(g, [t], backend="edges").raw_counts(colors)[0]
+        assert float(out[ti]) == pytest.approx(float(single), rel=1e-6), t.name
+
+
+def test_single_template_groups_are_singletons_and_exact():
+    """Within one template the actives chain stage-to-stage, so grouping
+    must not fire — and per-stage behavior is unchanged."""
+    g = rmat_graph(150, 600, seed=3)
+    t = get_template("star6")
+    eng = CountingEngine(g, [t], backend="edges")
+    assert all(len(m) == 1 for m in eng._exec_groups.values())
+    colors = np.random.default_rng(1).integers(0, 6, size=g.n)
+    got = float(eng.raw_counts(colors)[0])
+    from repro.core import build_counting_plan, count_colorful_vectorized, spmm_edges
+
+    plan = build_counting_plan(t)
+    ref = float(
+        count_colorful_vectorized(
+            plan,
+            jnp.asarray(colors),
+            partial(spmm_edges, jnp.asarray(g.src), jnp.asarray(g.dst), g.n),
+        )
+    )
+    assert got == pytest.approx(ref, rel=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # Chunk-size picker / memory budget
 # ---------------------------------------------------------------------------

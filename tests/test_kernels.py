@@ -12,9 +12,8 @@ from hypothesis import strategies as st
 
 from repro.core import build_counting_plan, count_colorful_vectorized, get_template
 from repro.core.colorsets import build_split_table
+from repro.core.counting import _ema_apply
 from repro.core.graph import erdos_renyi_graph, grid_graph, rmat_graph
-from repro.kernels.ema.ops import ema_blocked
-from repro.kernels.ema.ref import ema_ref
 from repro.kernels.spmm_blocked.ops import prepare_operand, spmm_blocked
 from repro.kernels.spmm_blocked.ref import spmm_ref
 
@@ -108,21 +107,35 @@ def test_spmm_linearity_property():
 
 
 # ---------------------------------------------------------------------------
-# eMA kernel
+# eMA reference (the jnp fused gather-FMA; the eMA-only Pallas kernel was
+# removed with kernels/ema — the fused kernels/spmm_ema path is covered by
+# tests/test_fused.py)
 # ---------------------------------------------------------------------------
 
 
+def _ema_numpy_oracle(ma, b, idx_a, idx_p):
+    n = ma.shape[0]
+    n_out, n_splits = idx_a.shape
+    out = np.zeros((n, n_out), np.float64)
+    for o in range(n_out):
+        for t in range(n_splits):
+            out[:, o] += np.asarray(ma)[:, idx_a[o, t]].astype(np.float64) * np.asarray(b)[
+                :, idx_p[o, t]
+            ].astype(np.float64)
+    return out
+
+
 @pytest.mark.parametrize(
-    "k,m,m_a,n,vtile",
+    "k,m,m_a,n",
     [
-        (5, 3, 1, 100, 128),
-        (7, 5, 3, 777, 256),
-        (8, 4, 2, 256, 128),
-        (6, 6, 3, 333, 128),  # full-size color set (top template)
-        (9, 2, 1, 64, 128),
+        (5, 3, 1, 100),
+        (7, 5, 3, 777),
+        (8, 4, 2, 256),
+        (6, 6, 3, 333),  # full-size color set (top template)
+        (9, 2, 1, 64),
     ],
 )
-def test_ema_blocked_shapes(k, m, m_a, n, vtile):
+def test_ema_apply_matches_oracle(k, m, m_a, n):
     t = build_split_table(k, m, m_a)
     rng = np.random.default_rng(k * m)
     from repro.core.colorsets import binom
@@ -130,35 +143,14 @@ def test_ema_blocked_shapes(k, m, m_a, n, vtile):
     ma = jnp.asarray(rng.standard_normal((n, binom(k, m_a))).astype(np.float32))
     b = jnp.asarray(rng.standard_normal((n, binom(k, m - m_a))).astype(np.float32))
     ia, ip = jnp.asarray(t.idx_a), jnp.asarray(t.idx_p)
-    ref = ema_ref(ma, b, ia, ip)
-    out = ema_blocked(ma, b, ia, ip, vertex_tile=vtile, interpret=True)
+    ref = _ema_numpy_oracle(ma, b, t.idx_a, t.idx_p)
+    out = _ema_apply(ma, b, ia, ip)
     assert out.shape == ref.shape == (n, t.n_out)
-    assert _rel_err(out, ref) < 1e-6
-
-
-@given(
-    k=st.integers(min_value=3, max_value=8),
-    n=st.integers(min_value=10, max_value=300),
-    seed=st.integers(min_value=0, max_value=50),
-    data=st.data(),
-)
-@settings(max_examples=10, deadline=None)
-def test_ema_blocked_property(k, n, seed, data):
-    m = data.draw(st.integers(min_value=2, max_value=k))
-    m_a = data.draw(st.integers(min_value=1, max_value=m - 1))
-    t = build_split_table(k, m, m_a)
-    from repro.core.colorsets import binom
-
-    rng = np.random.default_rng(seed)
-    ma = jnp.asarray(rng.standard_normal((n, binom(k, m_a))).astype(np.float32))
-    b = jnp.asarray(rng.standard_normal((n, binom(k, m - m_a))).astype(np.float32))
-    ia, ip = jnp.asarray(t.idx_a), jnp.asarray(t.idx_p)
-    out = ema_blocked(ma, b, ia, ip, vertex_tile=128, interpret=True)
-    assert _rel_err(out, ema_ref(ma, b, ia, ip)) < 1e-6
+    assert _rel_err(out, jnp.asarray(ref, jnp.float32)) < 1e-6
 
 
 # ---------------------------------------------------------------------------
-# Full Algorithm 5 running entirely on the Pallas kernels
+# Full Algorithm 5 running on the Pallas SpMM kernel
 # ---------------------------------------------------------------------------
 
 
@@ -176,8 +168,7 @@ def test_full_dp_on_pallas_kernels(tname):
 
     op = prepare_operand(g, block_size=128, edge_chunk=128)
     kern_spmm = lambda m: spmm_blocked(op, m, interpret=True)
-    kern_ema = lambda ma, b, ia, ip: ema_blocked(ma, b, ia, ip, vertex_tile=128, interpret=True)
     kern_total = float(
-        count_colorful_vectorized(plan, jnp.asarray(colors), kern_spmm, ema_fn=kern_ema)
+        count_colorful_vectorized(plan, jnp.asarray(colors), kern_spmm)
     )
     assert kern_total == pytest.approx(ref_total, rel=1e-5)

@@ -1,0 +1,328 @@
+"""CountingService tests: engine-cache semantics, zero-recompile warm
+queries, cross-query batching equality, adaptive-stopper behavior and
+determinism, and starvation-freedom of the admission loop."""
+
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import CountingEngine, engine_cache_key, get_template, rmat_graph
+from repro.serve import AdaptiveStopper, CountingService, EngineCache, normal_quantile
+from repro.serve.stopping import adaptive_estimate
+
+
+def _fold_keys(seed: int, n: int) -> np.ndarray:
+    base = jax.random.PRNGKey(seed)
+    return np.stack([np.asarray(jax.random.fold_in(base, i)) for i in range(n)])
+
+
+def _service(**kw):
+    kw.setdefault("chunk_size", 4)
+    return CountingService(**kw)
+
+
+# ---------------------------------------------------------------------------
+# EngineCache semantics
+# ---------------------------------------------------------------------------
+
+
+def test_cache_hit_miss_evict_counters():
+    cache = EngineCache(capacity=2)
+    built = []
+
+    def factory(tag):
+        def build():
+            built.append(tag)
+            return tag
+
+        return build
+
+    assert cache.get("a", factory("a")) == "a"  # miss
+    assert cache.get("a", factory("a2")) == "a"  # hit (no rebuild)
+    assert cache.get("b", factory("b")) == "b"  # miss
+    assert cache.get("c", factory("c")) == "c"  # miss -> evicts LRU "a"
+    assert "a" not in cache and "b" in cache and "c" in cache
+    assert cache.get("a", factory("a3")) == "a3"  # miss again -> evicts "b"
+    assert cache.counters() == {
+        "hits": 1,
+        "misses": 4,
+        "evictions": 2,
+        "size": 2,
+        "capacity": 2,
+    }
+    assert built == ["a", "b", "c", "a3"]
+
+
+def test_cache_lru_order_follows_hits():
+    cache = EngineCache(capacity=2)
+    cache.get("a", lambda: 1)
+    cache.get("b", lambda: 2)
+    cache.get("a", lambda: None)  # touch "a" -> "b" becomes LRU
+    cache.get("c", lambda: 3)
+    assert "a" in cache and "b" not in cache
+
+
+def test_service_cache_counters_and_eviction():
+    g1 = rmat_graph(300, 1500, seed=2)
+    g2 = rmat_graph(260, 1100, seed=3)
+    svc = _service(max_engines=1)
+    svc.register_graph("g1", g1)
+    svc.register_graph("g2", g2)
+    svc.query("g1", "u5-1", iterations=2)
+    svc.query("g2", "u5-1", iterations=2)  # evicts g1's engine
+    svc.query("g1", "u5-1", iterations=2)  # rebuilt: miss again
+    c = svc.stats()["cache"]
+    assert c["misses"] == 3 and c["evictions"] == 2 and c["hits"] == 0
+
+    wide = _service(max_engines=4)
+    wide.register_graph("g1", g1)
+    wide.register_graph("g2", g2)
+    wide.query("g1", "u5-1", iterations=2)
+    wide.query("g2", "u5-1", iterations=2)
+    wide.query("g1", "u5-1", iterations=3, seed=7)  # warm: key ignores N/seed
+    c = wide.stats()["cache"]
+    assert c["misses"] == 2 and c["hits"] == 1 and c["evictions"] == 0
+
+
+def test_register_graph_content_conflict():
+    svc = _service()
+    svc.register_graph("g", rmat_graph(100, 300, seed=0))
+    svc.register_graph("g", rmat_graph(100, 300, seed=0))  # same content: ok
+    with pytest.raises(ValueError, match="different content"):
+        svc.register_graph("g", rmat_graph(100, 300, seed=1))
+
+
+def test_engine_cache_key_identity():
+    g = rmat_graph(300, 1500, seed=2)
+    g_copy = rmat_graph(300, 1500, seed=2)
+    t = [get_template("u5-1")]
+    assert engine_cache_key(g, t) == engine_cache_key(g_copy, t)
+    assert engine_cache_key(g, t) != engine_cache_key(rmat_graph(300, 1500, seed=3), t)
+    assert engine_cache_key(g, t, chunk_size=4) != engine_cache_key(g, t, chunk_size=8)
+    assert engine_cache_key(g, t, dtype_policy="bf16") != engine_cache_key(g, t)
+    # the engine's own key matches the pre-construction computation
+    eng = CountingEngine(g, t, chunk_size=4)
+    assert eng.cache_key() == engine_cache_key(g, t, chunk_size=4)
+
+
+# ---------------------------------------------------------------------------
+# Warm repeat queries: zero new jit compilations
+# ---------------------------------------------------------------------------
+
+
+def test_warm_repeat_query_zero_new_compilations():
+    svc = _service()
+    svc.register_graph("g", rmat_graph(300, 1500, seed=2))
+    q1 = svc.submit("g", "u5-2", iterations=6, seed=1)
+    svc.run()
+    engine = svc.engine(q1.engine_key)
+    assert engine is not None and engine.trace_count == 1
+    # different seed AND different iteration target: same key, same shape
+    # (launches are padded to chunk_size), so nothing re-traces
+    q2 = svc.submit("g", "u5-2", iterations=3, seed=42)
+    q3 = svc.submit("g", "u5-2", epsilon=0.5, delta=0.2, iterations=8, seed=5)
+    svc.run()
+    assert q2.done and q3.done
+    assert svc.engine(q2.engine_key) is engine
+    assert engine.trace_count == 1  # zero new compilations
+
+
+# ---------------------------------------------------------------------------
+# Cross-query batching == per-query engine runs (acceptance: u3-u7, rmat2k)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tname", ["u3", "u5-1", "u5-2", "u6", "u7"])
+def test_cross_query_batched_equals_per_query_engine(tname):
+    g = rmat_graph(2048, 20_000, seed=1)
+    svc = _service()
+    svc.register_graph("rmat2k", g)
+    # two tenants of one engine key: their colorings share chunk launches
+    qa = svc.submit("rmat2k", tname, iterations=3, seed=11, record_rows=True)
+    qb = svc.submit("rmat2k", tname, iterations=2, seed=22, record_rows=True)
+    svc.run()
+    key_launches = svc.stats()["launches_by_key"][qa.engine_key]
+    assert key_launches == 2  # 5 slots through a chunk of 4 => shared launches
+    engine = CountingEngine(g, [get_template(tname)], chunk_size=4)
+    for q, seed, iters in ((qa, 11, 3), (qb, 22, 2)):
+        solo = engine.count_keys(_fold_keys(seed, iters))
+        got = q.per_iteration()
+        assert got.shape == solo.shape
+        rel = np.max(np.abs(got - solo) / np.maximum(np.abs(solo), 1e-9))
+        assert rel <= 1e-5, (tname, rel)
+        # fp32 edges path: batching may not change values at all
+        assert np.array_equal(got, solo), tname
+
+
+def test_multi_template_query_matches_engine():
+    g = rmat_graph(400, 2000, seed=5)
+    names = ("path6", "star6", "u6")
+    svc = _service()
+    svc.register_graph("g", g)
+    q = svc.submit("g", names, iterations=4, seed=3, record_rows=True)
+    svc.run()
+    engine = CountingEngine(g, [get_template(n) for n in names], chunk_size=4)
+    solo = engine.count_keys(_fold_keys(3, 4))
+    assert np.allclose(q.per_iteration(), solo, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive stopping
+# ---------------------------------------------------------------------------
+
+
+def test_normal_quantile_known_values():
+    assert normal_quantile(0.975) == pytest.approx(1.959964, abs=1e-5)
+    assert normal_quantile(0.5) == pytest.approx(0.0, abs=1e-12)
+    assert normal_quantile(0.025) == pytest.approx(-1.959964, abs=1e-5)
+    assert normal_quantile(0.995) == pytest.approx(2.575829, abs=1e-5)
+    with pytest.raises(ValueError):
+        normal_quantile(0.0)
+
+
+def test_stopper_welford_matches_numpy():
+    rng = np.random.default_rng(0)
+    rows = rng.normal(100.0, 5.0, size=(50, 2))
+    st = AdaptiveStopper(2, epsilon=0.01, budget=1000)
+    st.update(rows[:17])
+    st.update(rows[17:])
+    for t, est in enumerate(st.estimates()):
+        assert est.mean == pytest.approx(rows[:, t].mean(), rel=1e-12)
+        assert est.std == pytest.approx(rows[:, t].std(ddof=1), rel=1e-10)
+
+
+def test_stopper_converges_on_tight_stream_and_respects_budget():
+    # near-constant stream: converges right at min_iterations
+    st = AdaptiveStopper(1, epsilon=0.01, budget=1000, min_iterations=8)
+    st.update(np.full((7, 1), 50.0) + np.linspace(0, 1e-6, 7)[:, None])
+    assert not st.done  # CI not armed yet
+    st.update(np.full((1, 1), 50.0))
+    assert st.converged and st.done and st.iterations == 8
+    # wild stream: runs to the budget without converging
+    rng = np.random.default_rng(1)
+    st = AdaptiveStopper(1, epsilon=0.0001, budget=32, min_iterations=8)
+    while not st.done:
+        st.update(rng.normal(10.0, 8.0, size=(4, 1)))
+    assert st.iterations == 32 and not st.converged
+    # epsilon=None: pure fixed-budget mode
+    st = AdaptiveStopper(1, epsilon=None, budget=5)
+    st.update(np.zeros((5, 1)))
+    assert st.done and not st.converged
+
+
+def test_adaptive_stops_earlier_than_budget_on_real_graph():
+    g = rmat_graph(300, 1500, seed=2)
+    engine = CountingEngine(g, [get_template("u5-1")], chunk_size=8)
+    res = adaptive_estimate(engine, epsilon=0.08, delta=0.1, seed=0, max_iterations=512)[0]
+    assert res.iterations < 512  # stopped on the CI, not the budget
+    assert res.iterations >= 8
+    assert res.per_iteration.shape == (res.iterations,)
+
+
+def test_adaptive_estimate_deterministic_and_batch_invariant():
+    g = rmat_graph(300, 1500, seed=2)
+    a = adaptive_estimate(
+        CountingEngine(g, [get_template("u5-2")], chunk_size=8),
+        epsilon=0.1, delta=0.1, seed=7, max_iterations=256,
+    )[0]
+    b = adaptive_estimate(
+        CountingEngine(g, [get_template("u5-2")], chunk_size=8),
+        epsilon=0.1, delta=0.1, seed=7, max_iterations=256,
+    )[0]
+    assert a.iterations == b.iterations
+    assert np.array_equal(a.per_iteration, b.per_iteration)
+
+
+def test_service_adaptive_determinism_under_fixed_seed():
+    def run_once():
+        svc = _service()
+        svc.register_graph("g", rmat_graph(300, 1500, seed=2))
+        q = svc.submit("g", "u5-1", epsilon=0.1, delta=0.1, iterations=256, seed=9)
+        svc.run()
+        return q
+
+    q1, q2 = run_once(), run_once()
+    assert q1.iterations == q2.iterations
+    assert [e.mean for e in q1.result()] == [e.mean for e in q2.result()]
+    assert [e.halfwidth for e in q1.result()] == [e.halfwidth for e in q2.result()]
+
+
+def test_estimator_epsilon_delta_entry_point():
+    from repro.core import estimate_embeddings
+
+    g = rmat_graph(300, 1500, seed=2)
+    t = get_template("u5-1")
+    res = estimate_embeddings(g, t, epsilon=0.1, delta=0.1, max_iterations=256, seed=0)
+    ref = estimate_embeddings(g, t, iterations=256, seed=0)
+    assert res.iterations < 256
+    assert res.mean == pytest.approx(ref.mean, rel=0.25)  # same estimator family
+    # the CI the stopper certified: mean within ~epsilon of the long run
+    assert not math.isnan(res.std)
+
+
+# ---------------------------------------------------------------------------
+# Admission loop fairness
+# ---------------------------------------------------------------------------
+
+
+def test_round_robin_no_starvation_under_skewed_load():
+    g_hot = rmat_graph(300, 1500, seed=2)
+    g_cold = rmat_graph(260, 1100, seed=3)
+    svc = _service(max_engines=4, chunk_size=2)
+    svc.register_graph("hot", g_hot)
+    svc.register_graph("cold", g_cold)
+    # skew: the hot graph has 6 queries x 8 iterations, the cold one 1 x 4
+    hot = [svc.submit("hot", "u5-1", iterations=8, seed=s) for s in range(6)]
+    cold = svc.submit("cold", "u5-1", iterations=4, seed=0)
+    svc.run()
+    assert all(q.done for q in hot) and cold.done
+    hot_key, cold_key = hot[0].engine_key, cold.engine_key
+    log = svc.launch_log
+    cold_positions = [i for i, k in enumerate(log) if k == cold_key]
+    # while the cold query was live, the hot key never got two consecutive
+    # launches — every cycle served both keys (round-robin admission)
+    last_cold = cold_positions[-1]
+    for i in range(1, last_cold + 1):
+        assert not (log[i] == hot_key and log[i - 1] == hot_key), log
+    # and the cold query finished long before the hot backlog drained
+    assert last_cold < len(log) - 1
+
+
+def test_launches_merge_queries_not_serialize_them():
+    svc = _service(chunk_size=8)
+    svc.register_graph("g", rmat_graph(300, 1500, seed=2))
+    queries = [svc.submit("g", "u5-1", iterations=4, seed=s) for s in range(4)]
+    svc.run()
+    # 16 iterations across 4 queries fit 8-wide launches: 2, not 4+
+    assert svc.stats()["launches"] == 2
+    assert all(q.done for q in queries)
+
+
+# ---------------------------------------------------------------------------
+# describe() / observability
+# ---------------------------------------------------------------------------
+
+
+def test_engine_describe_structure():
+    g = rmat_graph(300, 1500, seed=2)
+    eng = CountingEngine(g, [get_template("u5-1")], chunk_size=4)
+    d = eng.describe()
+    assert d["backend"] == eng.backend
+    assert d["backend_source"] in ("auto", "env", "explicit", "custom", "mesh")
+    assert d["backend_reason"]
+    assert d["n"] == g.n and d["k"] == 5
+    assert d["cache_key"] == eng.cache_key()
+    assert d["memory"]["bytes_per_coloring"] == eng.bytes_per_coloring()
+    assert d["dtype_policy"] == {"store": "float32", "accum": "float32"}
+
+
+def test_service_stats_exposes_engine_descriptions():
+    svc = _service()
+    svc.register_graph("g", rmat_graph(300, 1500, seed=2))
+    svc.query("g", "u5-1", iterations=2)
+    stats = svc.stats()
+    assert stats["queries_completed"] == 1
+    assert len(stats["engines"]) == 1
+    assert stats["engines"][0]["backend_reason"]
