@@ -159,12 +159,16 @@ def _run_engine_vs_loop(datasets, templates, iterations: int, timing_iters: int)
             ma = engine.compiled_memory_analysis(iterations)
             actual = ma["actual_temp_bytes"]
             ratio = ma["ratio"]
+            # applied_fusion_slack records what the picker already folded
+            # in, so re-calibration sees the raw analytic ratio:
+            # raw predicted/actual = predicted_over_actual * slack
             record(
                 f"engine/{dname}/{tname}/memory_model",
                 0.0,
                 f"predicted_bytes={ma['predicted_bytes']:.0f};"
                 f"actual_temp_bytes={'%.0f' % actual if actual else 'n/a'};"
-                f"predicted_over_actual={'%.3f' % ratio if ratio else 'n/a'}",
+                f"predicted_over_actual={'%.3f' % ratio if ratio else 'n/a'};"
+                f"applied_fusion_slack={engine.cost.fusion_slack:.4f}",
             )
             if ratio:
                 print(

@@ -1,18 +1,37 @@
 #!/usr/bin/env bash
-# CI / local gate: tier-1 test suite + a ~30s benchmark smoke + a
-# multi-device smoke of the engine's mesh backend (4 virtual host devices).
+# CI / local gate: lint, the tier-1 test suite split into a fast lane
+# (-m "not slow") and a slow lane (the multi-process mesh subprocess
+# tests, -m slow), a ~30s benchmark smoke, the plan-inspector smoke, and
+# a multi-device smoke of the engine's mesh backend (4 virtual devices).
 #
 #   bash scripts/check.sh
 #
-# Works without optional dev deps (hypothesis): the suite installs a
-# fixed-seed fallback when the real package is missing.
+# Works without optional dev deps (hypothesis, pyflakes): the suite
+# installs a fixed-seed hypothesis fallback and the lint stage degrades
+# to stdlib compileall.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1: pytest =="
-python -m pytest -x -q
+echo "== lint: pyflakes (or stdlib compile-all when absent) =="
+if python -c "import pyflakes" 2>/dev/null; then
+  python -m pyflakes src/repro tests benchmarks
+else
+  python -m compileall -q src/repro tests benchmarks
+fi
+
+echo "== tier-1 (fast lane): pytest -m 'not slow' =="
+python -m pytest -x -q -m "not slow"
+
+echo "== tier-1 (slow lane): mesh/subprocess tests, pytest -m slow =="
+python -m pytest -x -q -m slow
+
+echo "== smoke: plan inspector CLI =="
+python -m repro.plan u6 --graph rmat:300:1500:2 | tee /tmp/plan_inspect.out >/dev/null
+grep -q "liveness peak" /tmp/plan_inspect.out
+grep -q "fusion slack" /tmp/plan_inspect.out
+echo "plan inspector: schedule + cost verdict printed -> OK"
 
 echo "== smoke: batched engine vs per-coloring loop (+ rmat8k cliff row) =="
 python -m benchmarks.bench_counting --quick

@@ -37,7 +37,7 @@ records the relabeling so colorings can follow it).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Optional, Sequence, Tuple
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -47,9 +47,8 @@ from jax.sharding import PartitionSpec as P
 
 from .. import compat
 from .colorsets import binom
-from .counting import CountingPlan, _ema_apply_fused, liveness_peak_columns, schedule_liveness
+from .counting import CountingPlan, _ema_apply_fused, schedule_liveness
 from .graph import Graph
-from .templates import sub_template_canonical
 
 __all__ = [
     "ShardedGraph",
@@ -223,31 +222,6 @@ def build_streamed_tables(plan: CountingPlan, column_batch: int):
     }
 
 
-def _schedule_liveness(plans, canons, ema_mode):
-    """Mesh wrapper over :func:`repro.core.counting.schedule_liveness` —
-    only the non-streamed modes memoize aggregate products."""
-    return schedule_liveness(plans, canons, track_products=(ema_mode != "streamed"))
-
-
-def mesh_peak_columns(
-    plans: Sequence[CountingPlan],
-    canons: Sequence[Sequence[str]],
-    ema_mode: str,
-    pad_unit: int,
-) -> int:
-    """Peak live padded M columns per coloring under the mesh schedule.
-
-    Delegates to :func:`repro.core.counting.liveness_peak_columns` with
-    columns padded to the all-gather column batch; in loop/vectorized mode
-    the memoized SpMM product ``B`` of each stage's passive state counts
-    too.  This is the resident figure the engine's memory-budget chunk
-    picker multiplies by ``rows_per_shard``.
-    """
-    return liveness_peak_columns(
-        plans, canons, pad_unit=pad_unit, track_products=(ema_mode != "streamed")
-    )
-
-
 def make_batched_count_fn(
     plans: Sequence[CountingPlan],
     mesh: Mesh,
@@ -258,6 +232,7 @@ def make_batched_count_fn(
     ema_mode: str = "streamed",
     gather_dtype=None,
     canons: Optional[Sequence[Sequence[str]]] = None,
+    plan_ir=None,
     store_dtype=jnp.float32,
     accum_dtype=jnp.float32,
 ) -> Callable:
@@ -296,8 +271,13 @@ def make_batched_count_fn(
         — the counting analogue of gradient compression.  Counts are an
         (eps, delta) ESTIMATOR, so the ~0.4% bf16 rounding is dominated by
         coloring variance.  Accumulation stays fp32.
-      canons: per-plan, per-sub-template rooted canonical strings (computed
-        from the templates when omitted); equal strings share one DP state.
+      canons: per-plan, per-sub-template rooted canonical strings (legacy
+        override; superseded by ``plan_ir``); equal strings share one DP
+        state.
+      plan_ir: optional :class:`repro.plan.ir.TemplatePlan` for the plan
+        set — the engine's mesh backend passes its bound plan so the
+        schedule (canonical sharing + liveness) is consumed, not
+        re-derived.  Legacy callers omit it and one is planned here.
       store_dtype / accum_dtype: the engine's dtype policy — M matrices are
         kept (and all-gathered) in ``store_dtype``, reductions accumulate in
         ``accum_dtype``.
@@ -316,14 +296,23 @@ def make_batched_count_fn(
     rows = n_padded // n_shards
     pad_unit = column_batch or 128
 
-    if canons is None:
-        canons = [
-            [
-                sub_template_canonical(p.template, s.vertices, s.root)
-                for s in p.partition.subs
-            ]
-            for p in plans
-        ]
+    track_products = ema_mode != "streamed"
+    if canons is not None:
+        # legacy canons override: the DP walk keys states by THESE strings,
+        # so the liveness schedule must be derived from them too (a plan's
+        # schedule would disagree — don't build one)
+        free_at = schedule_liveness(plans, canons, track_products=track_products)
+    else:
+        if plan_ir is None:
+            # legacy surface (launch/cells probes, direct tests): plan the
+            # set here — the schedule must come from ONE planner either way
+            from repro.plan.ir import build_template_plan
+
+            plan_ir = build_template_plan([p.template for p in plans], plans=plans)
+        canons = plan_ir.canons
+        # the plan's liveness schedule: only the non-streamed eMA modes
+        # memoize aggregate products, so they free against that variant
+        free_at = plan_ir.liveness(track_products=track_products)
 
     # --- split tables: built once, de-duplicated by (k, m, m_a).
     tables_dev = {}
@@ -398,8 +387,6 @@ def make_batched_count_fn(
             jnp.zeros((rows, m_a.shape[1], idx_a.shape[0]), accum_dtype), axes
         )
         return _ema_apply_fused(m_a, b, idx_a, idx_p, init)
-
-    free_at = _schedule_liveness(plans, canons, ema_mode)
 
     def local_count(colors, src, dst_local, edge_mask, tables):
         # colors: (B, rows) local slice of the (B, n_padded) coloring batch.

@@ -1,62 +1,28 @@
-"""CountingEngine: batched multi-coloring, multi-template color-coding runs.
+"""CountingEngine: the thin façade over the plan -> cost -> exec pipeline.
 
-The estimator loop in early revisions dispatched ONE jit call per coloring —
-re-entering Python, re-shipping split tables, and syncing a scalar back to
-the host every iteration.  This module amortizes all static work across the
-whole (epsilon, delta) estimation run, the way the paper's Algorithm 5
-amortizes the neighbor reduction across color sets:
+The engine answers batched multi-coloring, multi-template color-coding
+runs.  It is a *compiler driver*, not a monolith — one construction is
+exactly::
 
-* **Plans and tables once** — ``CountingPlan``s are built per template and
-  their split tables land on the device a single time, de-duplicated by
-  ``(k, m, m_a)``.
-* **Backend interface** — each execution strategy is an
-  :class:`EngineBackend`: device-operand construction, the fused
-  SpMM+eMA stage (:meth:`EngineBackend.aggregate_ema`), and the
-  per-coloring live-memory model all live behind one interface.  The local
-  backends (``edges`` / ``ell`` / ``sell`` / ``dense`` / ``blocked`` /
-  ``custom``) run the fused DP on one device; :class:`MeshBackend`
-  (``mesh``) runs the same DP under ``shard_map`` across a device mesh,
-  where each column-batched all-gather feeds the fused step per batch
-  (:mod:`repro.core.distributed`).
-* **Fused execution model** — no backend ever materializes the full
-  aggregate product ``A_G @ M_p``: every stage streams the passive state in
-  ``column_batch``-column slices, aggregates just that slice, and consumes
-  it immediately in the eMA FMA (fp32 accumulation).  DP states are freed
-  at their liveness-scheduled last read, so the resident footprint matches
-  Algorithm 5's in-place storage.
-* **Backend auto-selection** — the local SpMM primitive is picked from
-  graph statistics (:func:`select_backend`): edge-list segment-sum for
-  small skewed graphs, scatter-free degree-bucketed SELL gathers for large
-  skewed graphs (XLA:CPU scatter collapses there), padded ELL for flat
-  degree distributions, dense adjacency when the matmul work is
-  competitive, and the fused Pallas blocked-ELL kernel for large graphs on
-  TPU.  ``REPRO_ENGINE_BACKEND`` overrides the pick; the choice and its
-  predicted transient are logged at construction.  Passing ``mesh=``
-  selects the ``mesh`` backend.
-* **Batched colorings** — a chunk of ``B`` colorings is fused into the
-  *column* dimension of the DP state: every M matrix is ``(n, B, C)`` and
-  each stage's SpMM is ONE wide neighbor reduction over ``B * C`` columns
-  (``lax.map`` walks the chunks inside a single jit).  This is the paper's
-  "batch more columns into one SpMM" principle applied across colorings —
-  a plain ``vmap`` over the leading axis lowers to batched scatters that
-  XLA:CPU executes far slower than one wide scatter.  On the mesh backend
-  the same fusion means every all-gather collective serves all ``B``
-  colorings at once.
-* **Chunk-size picker** — the live M-matrix footprint per coloring is
-  derived from the backend's memory model (resident M columns plus the
-  per-stage gather transient — for the mesh backend, the per-shard gather
-  scratch and the all-gather buffer) and the chunk size is chosen to keep
-  ``chunk * footprint`` under a configurable VMEM/HBM budget.
-* **Multi-template sharing** — several same-``k`` templates are counted per
-  coloring; sub-template DP states and SpMM products are memoized by the
-  rooted canonical form (AHU string) of the sub-template, so coinciding
-  passive sub-templates (and the leaf one-hot + its neighbor sum, shared by
-  *every* template) are computed once per coloring.
-* **Dtype policy** — fp32 end-to-end, or bf16 storage/gather traffic with
-  fp32 accumulation (paper §VI bf16 discussion).  On the mesh backend the
-  storage dtype is also the all-gather wire dtype (plus an optional
-  ``gather_dtype`` override for compressed collectives).
-"""
+    plan   = repro.plan.build_template_plan(templates)   # backend-agnostic IR
+    cost   = repro.plan.cost.CostModel(plan, graph, ...) # calibrated budgets
+    select_backend(graph)                                # graph statistics
+    repro.exec.make_backend(engine)                      # bind plan to devices
+    chunk  = cost.pick_chunk_size(...)                   # fit the budget
+
+and every public surface — :meth:`CountingEngine.describe`,
+:meth:`CountingEngine.cache_key`, the memory figures, the chunked launch
+API — is derived from the bound :class:`~repro.plan.ir.TemplatePlan`.
+``repro.plan`` owns the static schedule + the calibrated cost model,
+``repro.exec`` owns the execution strategies and backend auto-selection;
+this module keeps the dtype policy, the cache-key identity, and the
+chunked launch API.  See ``docs/architecture.md`` / ``docs/planning.md``.
+
+Execution-model invariants (unchanged from the fused PR 3/4 pipeline): the
+aggregate product ``A_G @ M_p`` is never materialized; a chunk of ``B``
+colorings rides the fused column dimension of every M matrix (one jit per
+run); DP states are freed at their liveness-scheduled last read; and
+estimates are bit-exact across chunk sizes."""
 
 from __future__ import annotations
 
@@ -70,78 +36,58 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .colorsets import binom, bucketed_split_entries, colorful_probability
-from .counting import (
-    CountingPlan,
-    build_counting_plan,
-    fused_aggregate_ema_grouped,
-    liveness_peak_columns,
-    schedule_liveness,
+# Submodule imports only (repro.exec/.plan's __init__ import repro.core
+# right back); every re-exported compat name is listed in __all__.
+from repro.exec.base import EngineBackend, StageTables, make_backend
+from repro.exec.local import SELL_GROUP_SIZE
+from repro.exec.mesh import MeshBackend
+from repro.exec.select import (
+    BACKEND_ENV_VAR,
+    BLOCKED_MIN_VERTICES,
+    DENSE_MAX_VERTICES,
+    DENSE_WORK_ADVANTAGE,
+    ELL_PAD_FACTOR,
+    ENGINE_BACKENDS,
+    SELL_MIN_SCATTER_WORK,
+    select_backend,
 )
-from .graph import Graph, build_sell
-from .templates import Template, partition_template, sub_template_canonical
+from repro.plan.cost import (
+    DEFAULT_MEMORY_BUDGET_BYTES,
+    LOCAL_COLUMN_BATCH,
+    MAX_CHUNK_SIZE,
+    CostModel,
+    pick_chunk_size,
+)
+from repro.plan.ir import TemplatePlan, build_template_plan, template_set_canons
+
+from .colorsets import colorful_probability
+from .counting import CountingPlan
+from .graph import Graph
+from .templates import Template, sub_template_canonical
 
 __all__ = [
     "DtypePolicy",
     "EstimateResult",
     "CountingEngine",
     "EngineBackend",
+    "MeshBackend",
     "StageTables",
+    "make_backend",
     "select_backend",
     "pick_chunk_size",
     "sub_template_canonical",
     "template_set_canons",
     "engine_cache_key",
+    "CostModel",
     "ENGINE_BACKENDS",
-    "DEFAULT_MEMORY_BUDGET_BYTES",
-    "MAX_CHUNK_SIZE",
-    "BACKEND_ENV_VAR",
+    # re-exported tuning constants (homes: repro.plan.cost, repro.exec)
+    "DEFAULT_MEMORY_BUDGET_BYTES", "MAX_CHUNK_SIZE", "LOCAL_COLUMN_BATCH",
+    "BACKEND_ENV_VAR", "DENSE_MAX_VERTICES", "ELL_PAD_FACTOR",
+    "BLOCKED_MIN_VERTICES", "SELL_MIN_SCATTER_WORK", "SELL_GROUP_SIZE",
+    "DENSE_WORK_ADVANTAGE",
 ]
 
 logger = logging.getLogger("repro.engine")
-
-#: Default live-footprint budget for one chunk of colorings (bytes).  Sized
-#: for the CPU/laptop case; on real TPUs pass the per-core VMEM/HBM figure.
-DEFAULT_MEMORY_BUDGET_BYTES = 32 * 1024 * 1024
-
-#: Hard cap on colorings fused into one chunk (diminishing returns beyond).
-MAX_CHUNK_SIZE = 64
-
-#: Graphs at or below this vertex count use the dense-adjacency backend.
-DENSE_MAX_VERTICES = 256
-
-#: ELL is chosen only when padding waste is bounded: ``n * max_deg`` must not
-#: exceed this factor times the true directed edge count.
-ELL_PAD_FACTOR = 1.5
-
-#: On TPU, graphs at least this large route to the Pallas blocked-ELL kernel.
-BLOCKED_MIN_VERTICES = 4096
-
-#: Environment variable overriding the auto-selected local backend.
-BACKEND_ENV_VAR = "REPRO_ENGINE_BACKEND"
-
-#: Default passive columns per fused SpMM+eMA slice on the local backends.
-#: Empirically (2-core XLA:CPU interleaved A/B on the rmat2k bench graphs):
-#: 16 beats both narrower slices (the per-call segment-sum fixed cost is
-#: paid more often) and the full-width two-pass dataflow (whose edge-wide
-#: transient thrashes cache), while keeping the chunk picker's fused
-#: transient small enough to grow coloring chunks 2-4x over the seed.
-LOCAL_COLUMN_BATCH = 16
-
-#: Above this ``n * |E_directed|`` product, skewed graphs route to the
-#: scatter-free SELL backend: XLA:CPU's scatter lowering falls off a cliff
-#: in this regime (observed ~200x on 8k vertices / 130k directed edges)
-#: while degree-bucketed gathers stay on the |E|-proportional cost curve.
-SELL_MIN_SCATTER_WORK = 5 * 10**8
-
-#: Degree-sorted rows per SELL group (smaller = tighter padding).
-SELL_GROUP_SIZE = 128
-
-#: Dense adjacency wins only when the gather path's per-column element work
-#: (``|E|``) is within this factor of the dense matmul's per-column ``n^2``
-#: MACs — the throughput advantage of regular matmuls over irregular
-#: gathers.  (The column count cancels: both paths scale linearly in it.)
-DENSE_WORK_ADVANTAGE = 16
 
 
 @dataclass(frozen=True)
@@ -178,117 +124,12 @@ class DtypePolicy:
 
 @dataclass
 class EstimateResult:
-    """Per-template estimation summary (kept API-compatible with the old
-    ``estimator.EstimateResult``)."""
+    """Per-template estimation summary (API-compatible with the estimator's)."""
 
     mean: float
     std: float
     per_iteration: np.ndarray
     iterations: int
-
-
-def select_backend(
-    graph: Graph, platform: Optional[str] = None, explain: bool = False
-):
-    """Pick the local SpMM backend from graph statistics.
-
-    * env override — ``REPRO_ENGINE_BACKEND=<name>`` forces any local
-      backend (a bad auto-pick used to be silent and undiagnosable).
-    * ``dense``   — tiny graphs, or work-dense graphs where the gather
-      path's per-column element work ``|E|`` reaches
-      ``n^2 / DENSE_WORK_ADVANTAGE`` (avg degree ``>= n / 16``): one
-      (n, n) matmul beats gather/scatter.  The DP column count cancels
-      from the comparison — both paths scale linearly in it.
-    * ``blocked`` — large graphs on TPU: the fused Pallas blocked-ELL
-      SpMM+eMA kernel.
-    * ``ell``     — flat degree distributions where row padding is cheap.
-    * ``sell``    — rmat8k-class graphs (``n * |E|`` beyond
-      ``SELL_MIN_SCATTER_WORK``): scatter-free degree-bucketed gathers;
-      XLA:CPU's scatter collapses in this regime.
-    * ``edges``   — everything else (small skewed / power-law graphs: a hub
-      row would blow the ELL padding up to ``n * max_deg``).
-
-    The ``mesh`` backend is never auto-selected from graph statistics — it
-    is chosen by passing ``mesh=`` to :class:`CountingEngine`.
-
-    The decision and its reason are logged on the module logger
-    (``repro.engine``, DEBUG) so callers capture it with standard logging
-    config; ``explain=True`` additionally returns ``(name, reason)`` for
-    structured consumers (:meth:`CountingEngine.describe`).
-    """
-    name, reason = _select_backend_reason(graph, platform)
-    logger.debug(
-        "select_backend: %s for n=%d edges=%d (%s)",
-        name,
-        graph.n,
-        graph.num_directed,
-        reason,
-    )
-    return (name, reason) if explain else name
-
-
-def _select_backend_reason(graph: Graph, platform: Optional[str]) -> Tuple[str, str]:
-    env = os.environ.get(BACKEND_ENV_VAR, "").strip()
-    if env:
-        if env not in ("edges", "ell", "sell", "dense", "blocked"):
-            raise ValueError(
-                f"{BACKEND_ENV_VAR}={env!r} is not a local backend "
-                "(edges | ell | sell | dense | blocked)"
-            )
-        return env, f"{BACKEND_ENV_VAR} env override"
-    platform = platform or jax.default_backend()
-    if graph.n <= DENSE_MAX_VERTICES:
-        return "dense", f"n={graph.n} <= {DENSE_MAX_VERTICES} (tiny graph)"
-    if platform == "tpu" and graph.n >= BLOCKED_MIN_VERTICES:
-        return "blocked", f"tpu and n={graph.n} >= {BLOCKED_MIN_VERTICES}"
-    edges = max(graph.num_directed, 1)
-    if DENSE_WORK_ADVANTAGE * edges >= graph.n**2:
-        return "dense", (
-            f"{DENSE_WORK_ADVANTAGE}*|E|={DENSE_WORK_ADVANTAGE * edges} >= "
-            f"n^2={graph.n**2} (work-dense graph)"
-        )
-    max_deg = graph.max_degree()
-    if graph.n * max_deg <= ELL_PAD_FACTOR * edges:
-        return "ell", (
-            f"n*max_deg={graph.n * max_deg} <= {ELL_PAD_FACTOR}*|E| "
-            "(flat degrees, padding bounded)"
-        )
-    if graph.n * edges >= SELL_MIN_SCATTER_WORK:
-        return "sell", (
-            f"n*|E|={graph.n * edges} >= {SELL_MIN_SCATTER_WORK} "
-            "(XLA:CPU scatter-cliff regime)"
-        )
-    return "edges", "skewed degrees below the scatter-cliff regime"
-
-
-def pick_chunk_size(
-    bytes_per_coloring: int,
-    memory_budget_bytes: int,
-    max_chunk: int = MAX_CHUNK_SIZE,
-) -> int:
-    """Largest chunk whose live footprint stays under the budget (>= 1)."""
-    if bytes_per_coloring <= 0:
-        return max_chunk
-    return max(1, min(max_chunk, int(memory_budget_bytes // bytes_per_coloring)))
-
-
-def template_set_canons(
-    templates: Sequence[Template],
-) -> Tuple[Tuple[str, ...], ...]:
-    """Per-template tuple of rooted canonical forms of the DP stages.
-
-    This is the template half of the engine cache key: two template sets
-    with equal canon tuples produce identical DP schedules (same stages,
-    same split tables, same sharing), so a compiled engine built for one
-    serves the other.  Computable without building plans or split tables.
-    """
-    return tuple(
-        tuple(
-            sub_template_canonical(t, sub.vertices, sub.root)
-            for sub in partition_template(t).subs
-        )
-        for t in templates
-    )
 
 
 def _assemble_cache_key(
@@ -340,9 +181,10 @@ def engine_cache_key(
                                     # deterministically picks one
          column_batch)              # fused-slice width override (or None)
 
-    The key is computable without constructing the engine (plans, tables,
-    and device operands are only built on a cache miss).
-    """
+    The template-set canons are exactly a ``TemplatePlan``'s schedule
+    identity, so **plan equality implies cache-key equality** (pinned in
+    ``tests/test_plan.py``).  The key is computable without constructing
+    the engine (operands are only built on a cache miss)."""
     return _assemble_cache_key(
         graph.signature(),
         template_set_canons(templates),
@@ -351,523 +193,6 @@ def engine_cache_key(
         ("chunk", int(chunk_size)) if chunk_size else ("budget", int(memory_budget_bytes)),
         column_batch,
     )
-
-
-# ---------------------------------------------------------------------------
-# Backend interface
-# ---------------------------------------------------------------------------
-
-
-@dataclass(frozen=True)
-class StageTables:
-    """Split tables for one DP stage, in both shapes the fused pipeline needs.
-
-    ``idx_a_host`` / ``idx_p_host`` are the plain ``(n_out, n_splits)`` rank
-    tables, kept host-side: the fused Pallas kernel expands them per
-    coloring chunk at trace time (``spmm_ema_batched``).  ``batches`` are
-    the same entries re-bucketed by passive-column batch and shipped to the
-    device (:func:`repro.core.colorsets.bucketed_split_entries`) for the
-    streamed pure-JAX executor.  De-duplicated across stages by
-    ``(k, m, m_a)``.
-    """
-
-    n_out: int
-    column_batch: int
-    idx_a_host: np.ndarray
-    idx_p_host: np.ndarray
-    batches: Tuple[Tuple[int, int, jnp.ndarray, jnp.ndarray, jnp.ndarray], ...]
-
-
-class EngineBackend:
-    """One fused SpMM+eMA execution strategy behind :class:`CountingEngine`.
-
-    A backend owns three things:
-
-    * **operand construction** — its device-resident graph representation,
-      built once in ``__init__`` (edge lists, ELL/SELL tables, dense
-      adjacency, Pallas blocked operands, or the sharded edge partition +
-      collective schedule for the mesh backend);
-    * **the DP execution** — :meth:`counts_for_colors` maps a ``(B, n)``
-      chunk of colorings to ``(B, T)`` raw colorful totals.  The per-stage
-      primitive is :meth:`aggregate_ema`: ONE fused neighbor-aggregate +
-      eMA step that never materializes the full ``A_G @ M_p`` product
-      (local backends stream passive column batches through
-      :func:`repro.core.counting.fused_aggregate_ema`; the mesh backend
-      runs the equivalent fusion inside its shard_map program, each
-      all-gathered column batch feeding the eMA immediately);
-    * **the memory model** — :meth:`transient_elements` /
-      :meth:`resident_elements` feed the engine's memory-budget chunk
-      picker.
-    """
-
-    name: str = "abstract"
-
-    def __init__(self, engine: "CountingEngine"):
-        self.engine = engine
-
-    # -- execution ----------------------------------------------------------
-
-    def aggregate_ema(
-        self, m_p: jnp.ndarray, m_a: jnp.ndarray, tables: StageTables
-    ) -> jnp.ndarray:
-        """Fused per-stage step: ``(n, B, C_p), (n, B, C_a) -> (n, B, n_out)``
-        in accum dtype, without materializing ``A_G @ M_p``."""
-        raise NotImplementedError
-
-    def aggregate_ema_grouped(
-        self, m_p: jnp.ndarray, stage_inputs: Sequence[Tuple[jnp.ndarray, StageTables]]
-    ) -> List[jnp.ndarray]:
-        """Run several stages that share the passive state ``m_p``.
-
-        Backends that can share the neighbor aggregation across the group
-        override this (the streamed local pipeline computes each passive
-        column-batch aggregate once for the whole group); the default is
-        the unshared per-stage loop.
-        """
-        return [self.aggregate_ema(m_p, m_a, tables) for m_a, tables in stage_inputs]
-
-    def counts_for_colors(self, colors: jnp.ndarray) -> jnp.ndarray:
-        """``(B, n)`` colorings -> ``(B, T)`` un-normalized colorful totals."""
-        raise NotImplementedError
-
-    def counts_for_keys_chunk(self, keys_chunk: jnp.ndarray) -> jnp.ndarray:
-        """``(B, 2)`` PRNG keys -> ``(B, T)`` normalized estimates.
-
-        The coloring draw is identical across backends (one ``randint`` per
-        key over the *original* vertex ids), so the same keys produce the
-        same colorings — and therefore fp-tolerance-comparable estimates —
-        on every backend, mesh included.
-        """
-        eng = self.engine
-        colors = jax.vmap(
-            lambda key: jax.random.randint(key, (eng.graph.n,), 0, eng.k)
-        )(keys_chunk)
-        return self.counts_for_colors(colors) * eng._norm_factors[None, :]
-
-    def make_run_fn(self) -> Callable:
-        """One jit for the whole run: ``lax.map`` over key chunks.
-
-        Tracing bumps the engine's ``trace_count`` (a Python side effect
-        runs once per trace, i.e. per new compilation), so tests and the
-        serving cache can assert that a warm engine never re-compiles.
-        """
-        engine = self.engine
-
-        def run(keys):
-            engine.trace_count += 1
-            return jax.lax.map(self.counts_for_keys_chunk, keys)
-
-        return jax.jit(run)
-
-    # -- memory model --------------------------------------------------------
-
-    def transient_elements(self) -> int:
-        """Widest per-stage scratch one coloring needs, in store-dtype
-        elements (gather intermediates, collective buffers)."""
-        raise NotImplementedError
-
-    def resident_elements(self) -> int:
-        """Live M-matrix elements one coloring keeps resident."""
-        return self.engine.graph.n * self.engine.peak_columns()
-
-    def bytes_per_coloring(self) -> int:
-        """Estimated live bytes one coloring contributes to a chunk."""
-        itemsize = jnp.dtype(self.engine.policy.store_dtype).itemsize
-        return (self.transient_elements() + self.resident_elements()) * itemsize
-
-
-class LocalBackend(EngineBackend):
-    """Shared single-device fused DP: subclasses only supply :meth:`spmm`.
-
-    The multi-template DP walks every plan's stages with DP states memoized
-    by rooted canonical form, all M matrices in the fused ``(n, B, C)``
-    layout.  Each stage runs through the shared streamed
-    :meth:`aggregate_ema` (passive column batches aggregated and consumed
-    one at a time), and states are dropped at their liveness-scheduled last
-    read — the aggregate product ``A_G @ M_p`` never exists.
-    """
-
-    def spmm(self, m: jnp.ndarray) -> jnp.ndarray:
-        """One neighbor reduction over a fused ``(n, B, c)`` column slice
-        (the fused pipeline only ever passes ``column_batch``-wide slices);
-        returns accum dtype."""
-        raise NotImplementedError
-
-    def _spmm_counted(self, m: jnp.ndarray) -> jnp.ndarray:
-        # the Python-level counter runs once per traced aggregation launch
-        self.engine.counters["passive_aggregations"] += 1
-        return self.spmm(m)
-
-    def aggregate_ema(self, m_p, m_a, tables: StageTables):
-        return self.aggregate_ema_grouped(m_p, [(m_a, tables)])[0]
-
-    def aggregate_ema_grouped(self, m_p, stage_inputs):
-        pol = self.engine.policy
-        return fused_aggregate_ema_grouped(
-            m_p,
-            [(m_a, tables.batches, tables.n_out) for m_a, tables in stage_inputs],
-            self._spmm_counted,
-            pol.accum_dtype,
-        )
-
-    def counts_for_colors(self, colors: jnp.ndarray) -> jnp.ndarray:
-        """(B, n) colorings -> (B, T) un-normalized colorful totals.
-
-        Sub-template states are memoized by canonical form, so templates
-        sharing passive sub-templates (and every template's leaf stage)
-        reuse one state per coloring, and freed at their last scheduled
-        read (Algorithm 5's in-place storage).  Stages reading the same
-        passive canonical form are executed as one group
-        (:attr:`CountingEngine._exec_groups`): the group's passive
-        column-batch sweep aggregates each slice once for all of them.
-        """
-        eng = self.engine
-        pol = eng.policy
-        leaf = jax.nn.one_hot(colors.T, eng.k, dtype=pol.store_dtype)  # (n, B, k)
-        free_at = eng._free_at
-        slots: Dict[str, jnp.ndarray] = {}
-        totals = []
-        executed = set()
-        pos = 0
-        for p_idx, plan in enumerate(eng.plans):
-            canons = eng._canons[p_idx]
-            for i, sub in enumerate(plan.partition.subs):
-                key = canons[i]
-                if key in executed:
-                    continue
-                executed.add(key)
-                if sub.is_leaf:
-                    slots[key] = leaf
-                elif key not in slots:
-                    # group leader: execute every stage sharing this passive
-                    # canon over one column-batch sweep (members whose active
-                    # state is already live; singleton group otherwise)
-                    members = eng._exec_groups[(p_idx, i)]
-                    stage_inputs = []
-                    for q, j in members:
-                        sub_m = eng.plans[q].partition.subs[j]
-                        stage_inputs.append(
-                            (
-                                slots[eng._canons[q][sub_m.active]],
-                                eng._stage_tables[(q, j)],
-                            )
-                        )
-                    outs = self.aggregate_ema_grouped(
-                        slots[canons[sub.passive]], stage_inputs
-                    )
-                    for (q, j), m_s in zip(members, outs):
-                        slots[eng._canons[q][j]] = m_s.astype(pol.store_dtype)
-                # else: already produced early as a member of a prior group
-                for dead in free_at.get(pos, ()):
-                    slots.pop(dead, None)
-                pos += 1
-            root = slots[canons[plan.partition.root_index]].astype(pol.accum_dtype)
-            # reduce color sets first, then vertices: the per-coloring order
-            # is independent of the batch size (bit-exact across chunkings)
-            totals.append(root.sum(axis=2).sum(axis=0).astype(jnp.float32))
-            for dead in free_at.get(pos, ()):
-                slots.pop(dead, None)
-            pos += 1
-        return jnp.stack(totals, axis=1)  # (B, T)
-
-    def transient_elements(self) -> int:
-        # default: one aggregated column-batch slice (n, column_batch)
-        return self.engine.graph.n * self.engine.column_batch
-
-
-class EdgesBackend(LocalBackend):
-    """Edge-list gather + segment-sum (the skew-robust default)."""
-
-    name = "edges"
-
-    def __init__(self, engine: "CountingEngine"):
-        super().__init__(engine)
-        g = engine.graph
-        self._src = jnp.asarray(g.src)
-        self._dst = jnp.asarray(g.dst)
-
-    def spmm(self, m):
-        return jax.ops.segment_sum(
-            m[self._src].astype(self.engine.policy.accum_dtype),
-            self._dst,
-            num_segments=self.engine.graph.n,
-            indices_are_sorted=True,
-        )
-
-    def transient_elements(self) -> int:
-        # per batch: the (edges, column_batch) message gather + its
-        # aggregated (n, column_batch) slice
-        eng = self.engine
-        return (eng.graph.num_directed + eng.graph.n) * eng.column_batch
-
-
-class EllBackend(LocalBackend):
-    """Padded-row neighbor gather (flat degree distributions)."""
-
-    name = "ell"
-
-    def __init__(self, engine: "CountingEngine"):
-        super().__init__(engine)
-        nbr, mask = engine.graph.ell()
-        self._nbr = jnp.asarray(nbr)
-        self._ell_mask = jnp.asarray(mask)
-
-    def spmm(self, m):
-        pol = self.engine.policy
-        gathered = m[self._nbr].astype(pol.accum_dtype)  # (n, max_deg, B, c)
-        return jnp.einsum("ndbc,nd->nbc", gathered, self._ell_mask.astype(pol.accum_dtype))
-
-    def transient_elements(self) -> int:
-        g = self.engine.graph
-        return (g.n * max(g.max_degree(), 1) + g.n) * self.engine.column_batch
-
-
-class SellBackend(LocalBackend):
-    """Degree-bucketed sliced-ELL gather — scatter-free (rmat8k-class graphs).
-
-    Vertices are degree-sorted into :data:`SELL_GROUP_SIZE`-row groups,
-    each padded only to its own max degree (:func:`repro.core.graph.
-    build_sell`); the neighbor reduction is a padded row gather + masked
-    einsum per group, stitched back through one inverse-permutation gather.
-    No scatter appears anywhere — this sidesteps the XLA:CPU scatter cliff
-    that made the edge-list ``segment_sum`` 5–10x *slower* than the scalar
-    traversal baseline on rmat8k, while keeping padding bounded on
-    power-law degree distributions (unlike plain ELL).
-    """
-
-    name = "sell"
-
-    def __init__(self, engine: "CountingEngine", group_size: int = SELL_GROUP_SIZE):
-        super().__init__(engine)
-        sell = build_sell(engine.graph, group_size=group_size)
-        self._sell_padded_slots = sell.padded_slots
-        self._groups = tuple(
-            (jnp.asarray(nbr), jnp.asarray(mask))
-            for nbr, mask in zip(sell.group_nbr, sell.group_mask)
-        )
-        self._inv_order = jnp.asarray(sell.inv_order)
-
-    def spmm(self, m):
-        pol = self.engine.policy
-        parts = [
-            jnp.einsum(
-                "rdbc,rd->rbc",
-                m[nbr].astype(pol.accum_dtype),
-                mask.astype(pol.accum_dtype),
-            )
-            for nbr, mask in self._groups
-        ]
-        return jnp.concatenate(parts, axis=0)[self._inv_order]
-
-    def transient_elements(self) -> int:
-        # per batch: the padded group gathers + the aggregated slice
-        eng = self.engine
-        return (self._sell_padded_slots + eng.graph.n) * eng.column_batch
-
-
-class DenseBackend(LocalBackend):
-    """Dense-adjacency matmul (tiny graphs)."""
-
-    name = "dense"
-
-    def __init__(self, engine: "CountingEngine"):
-        super().__init__(engine)
-        self._adj = jnp.asarray(engine.graph.dense_adjacency())
-
-    def spmm(self, m):
-        pol = self.engine.policy
-        n, b, c = m.shape
-        out = jnp.matmul(
-            self._adj.astype(pol.store_dtype),
-            m.reshape(n, b * c),
-            preferred_element_type=pol.accum_dtype,
-        )
-        return out.reshape(n, b, c).astype(pol.accum_dtype)
-
-
-class BlockedEllBackend(LocalBackend):
-    """Fused Pallas SpMM+eMA kernel over blocked-ELL (large graphs on TPU).
-
-    Each stage is ONE :func:`repro.kernels.spmm_ema.ops.spmm_ema` call: per
-    destination vertex block the kernel accumulates that block's aggregate
-    columns in VMEM scratch and consumes them in the eMA FMA against the
-    resident ``M_a`` tile the moment the block's last edge pair lands —
-    the aggregate product never reaches HBM (this subsumed the removed
-    standalone ``repro.kernels.ema`` kernel, which fused only the eMA half).
-    """
-
-    name = "blocked"
-
-    def __init__(self, engine: "CountingEngine", block_size: int = 256):
-        super().__init__(engine)
-        from repro.kernels.spmm_ema.ops import prepare_fused_operand
-
-        self._fused_op = prepare_fused_operand(engine.graph, block_size=block_size)
-
-    def spmm(self, m):
-        # kernel is 2-D (n, C) — fuse batch into columns
-        from repro.kernels.spmm_blocked.ops import spmm_blocked
-
-        n, b, c = m.shape
-        out = spmm_blocked(
-            self._fused_op.blocked,
-            m.reshape(n, b * c).astype(jnp.float32),
-            interpret=self.engine.interpret,
-        )
-        return out.reshape(n, b, c).astype(self.engine.policy.accum_dtype)
-
-    def aggregate_ema(self, m_p, m_a, tables: StageTables):
-        from repro.kernels.spmm_ema.ops import spmm_ema_batched
-
-        self.engine.counters["passive_aggregations"] += 1
-        return spmm_ema_batched(
-            self._fused_op,
-            m_p,
-            m_a,
-            tables.idx_a_host,
-            tables.idx_p_host,
-            interpret=self.engine.interpret,
-        ).astype(self.engine.policy.accum_dtype)
-
-    def aggregate_ema_grouped(self, m_p, stage_inputs):
-        # the Pallas kernel fuses SpMM+eMA per stage inside one launch; a
-        # cross-stage sweep cannot share its VMEM aggregate scratch, so the
-        # group degrades to the per-stage loop (counted per launch)
-        return [self.aggregate_ema(m_p, m_a, tables) for m_a, tables in stage_inputs]
-
-    def transient_elements(self) -> int:
-        # transposed-layout staging of one stage's operands/output; no
-        # edge-wide or (n, C_p) aggregate intermediate exists
-        eng = self.engine
-        return eng.graph.n * eng._max_stage_columns()
-
-
-class CustomBackend(LocalBackend):
-    """Caller-supplied ``(n, C) -> (n, C)`` neighbor-sum kernel."""
-
-    name = "custom"
-
-    def __init__(self, engine: "CountingEngine", spmm_fn: Callable):
-        super().__init__(engine)
-        self._spmm_fn = spmm_fn
-
-    def spmm(self, m):
-        n, b, c = m.shape
-        out = self._spmm_fn(m.reshape(n, b * c))
-        return out.reshape(n, b, c).astype(self.engine.policy.accum_dtype)
-
-    def transient_elements(self) -> int:
-        # assume edge-list-like internals (the conservative choice)
-        eng = self.engine
-        return (eng.graph.num_directed + eng.graph.n) * eng.column_batch
-
-
-class MeshBackend(EngineBackend):
-    """Distributed backend: the fused DP under ``shard_map`` on a device mesh.
-
-    Wraps the column-batched all-gather SpMM and streamed eMA of
-    :mod:`repro.core.distributed`: vertices are 1-D row-partitioned across
-    every mesh axis, each DP stage all-gathers the passive M matrix in
-    ``column_batch``-column slices (each collective serving all ``B``
-    chunked colorings at once), and the eMA stays vertex-local.  Split
-    tables are built once per plan at construction, de-duplicated by
-    ``(k, m, m_a)``, and closure-captured by the shard_map program.
-
-    Args (via ``CountingEngine(...)``):
-      mesh: the ``jax.sharding.Mesh`` to run on (required).
-      column_batch: passive columns per all-gather; ``None`` auto-sizes to
-        ``min(128, max passive column count)``.
-      ema_mode: ``"streamed"`` (default — fused per-batch SpMM->eMA, the B
-        matrix never materializes) or ``"loop"`` (paper-faithful Algorithm
-        5 with the SpMM product memoized per canonical passive form).
-      gather_dtype: optional wire dtype for compressed all-gathers
-        (e.g. ``jnp.bfloat16``); accumulation stays fp32.
-      balance_degrees: relabel vertices round-robin by degree rank before
-        sharding (spreads hub rows; colorings are permuted to follow, so
-        counts are unchanged).
-    """
-
-    name = "mesh"
-
-    def __init__(
-        self,
-        engine: "CountingEngine",
-        mesh,
-        *,
-        column_batch: Optional[int] = None,
-        ema_mode: str = "streamed",
-        gather_dtype=None,
-        balance_degrees: bool = False,
-    ):
-        super().__init__(engine)
-        if mesh is None:
-            raise ValueError("backend='mesh' needs a jax.sharding.Mesh (mesh=...)")
-        from .distributed import make_batched_count_fn, mesh_peak_columns, shard_graph
-
-        self.mesh = mesh
-        self.ema_mode = ema_mode
-        self.gather_dtype = gather_dtype
-        n_shards = int(np.prod(mesh.devices.shape))
-        self.sharded = shard_graph(engine.graph, n_shards, balance_degrees=balance_degrees)
-        if column_batch is None:
-            column_batch = min(128, max(engine._max_passive_columns(), engine.k))
-        self.column_batch = int(column_batch)
-        self._count_fn = make_batched_count_fn(
-            engine.plans,
-            mesh,
-            self.sharded.n_padded,
-            self.sharded.edges_per_shard,
-            column_batch=self.column_batch,
-            ema_mode=ema_mode,
-            gather_dtype=gather_dtype,
-            canons=engine._canons,
-            store_dtype=engine.policy.store_dtype,
-            accum_dtype=engine.policy.accum_dtype,
-        )
-        self._src = jnp.asarray(self.sharded.src)
-        self._dst_local = jnp.asarray(self.sharded.dst_local)
-        self._edge_mask = jnp.asarray(self.sharded.edge_mask)
-        # colorings follow the degree-balancing relabel (scatter old -> new;
-        # new ids range over [0, n_padded) with pad slots interleaved)
-        self._perm = (
-            jnp.asarray(self.sharded.perm) if self.sharded.perm is not None else None
-        )
-        self._peak_padded = mesh_peak_columns(
-            engine.plans, engine._canons, ema_mode, self.column_batch
-        )
-
-    def counts_for_colors(self, colors: jnp.ndarray) -> jnp.ndarray:
-        colors = jnp.asarray(colors)
-        if self._perm is not None:
-            padded = jnp.zeros((colors.shape[0], self.sharded.n_padded), colors.dtype)
-            colors = padded.at[:, self._perm].set(colors)
-        else:
-            pad = self.sharded.n_padded - colors.shape[1]
-            if pad:
-                colors = jnp.pad(colors, ((0, 0), (0, pad)))
-        return self._count_fn(colors, self._src, self._dst_local, self._edge_mask)
-
-    # -- memory model (per shard!) -------------------------------------------
-
-    def transient_elements(self) -> int:
-        """Per-shard collective scratch: one all-gathered column batch
-        (``n_padded * column_batch``) plus the per-shard edge message gather
-        (``edges_per_shard * column_batch``)."""
-        cb = self.column_batch
-        return self.sharded.n_padded * cb + self.sharded.edges_per_shard * cb
-
-    def resident_elements(self) -> int:
-        """Per-shard live DP state: local rows times the liveness-aware
-        peak of padded M columns under the shared multi-template schedule."""
-        return self.sharded.rows_per_shard * self._peak_padded
-
-
-ENGINE_BACKENDS = ("edges", "ell", "sell", "dense", "blocked", "mesh", "custom")
-
-
-# ---------------------------------------------------------------------------
-# The engine
-# ---------------------------------------------------------------------------
 
 
 class CountingEngine:
@@ -894,7 +219,10 @@ class CountingEngine:
         backends, ``min(128, max passive columns)`` on the mesh backend
         (where a batch is also one all-gather collective).
       mesh / ema_mode / gather_dtype / balance_degrees: mesh-backend knobs
-        — see :class:`MeshBackend`.
+        — see :class:`repro.exec.mesh.MeshBackend`.
+
+    The bound plan is ``engine.plan_ir``, the resource model is
+    ``engine.cost``, the execution strategy is ``engine.backend_impl``.
     """
 
     def __init__(
@@ -920,37 +248,20 @@ class CountingEngine:
             templates = [templates]
         if not templates:
             raise ValueError("CountingEngine needs at least one template")
-        ks = {t.k for t in templates}
-        if len(ks) != 1:
-            raise ValueError(
-                f"all templates must share one k to share colorings, got k={sorted(ks)}"
-            )
+
+        # --- layer 1: the backend-agnostic plan (pure, graph-free).
+        self.plan_ir: TemplatePlan = build_template_plan(templates, plans=plans)
         self.graph = graph
-        self.templates: Tuple[Template, ...] = tuple(templates)
-        self.k = ks.pop()
+        self.templates: Tuple[Template, ...] = self.plan_ir.templates
+        self.plans: Tuple[CountingPlan, ...] = self.plan_ir.counting_plans
+        self.k = self.plan_ir.k
         self.policy = DtypePolicy.resolve(dtype_policy)
         self.memory_budget_bytes = int(memory_budget_bytes)
         self.interpret = interpret
         self.mesh = mesh
 
-        if plans is None:
-            self.plans: Tuple[CountingPlan, ...] = tuple(
-                build_counting_plan(t) for t in self.templates
-            )
-        else:
-            if len(plans) != len(self.templates):
-                raise ValueError("plans must align with templates")
-            self.plans = tuple(plans)
-
-        # --- static schedule: canonical keys + liveness + device tables.
-        self._canons: List[List[str]] = [
-            [
-                sub_template_canonical(plan.template, sub.vertices, sub.root)
-                for sub in plan.partition.subs
-            ]
-            for plan in self.plans
-        ]
-        self._free_at = schedule_liveness(self.plans, self._canons)
+        # --- layer 2: the calibrated cost model.
+        self.cost = CostModel(self.plan_ir, graph, self.policy.store_dtype)
 
         # Fused-slice width: local default keeps the per-batch edge gather
         # cache-sized; the mesh backend auto-sizes its own (one batch there
@@ -958,14 +269,14 @@ class CountingEngine:
         if column_batch:
             self.column_batch = int(column_batch)
         else:
-            self.column_batch = min(LOCAL_COLUMN_BATCH, self._max_passive_columns())
+            self.column_batch = self.cost.pick_local_column_batch()
 
         norm = colorful_probability(self.k)
         self._norm_factors = jnp.asarray(
             [1.0 / (norm * plan.automorphisms) for plan in self.plans], jnp.float32
         )
 
-        # --- backend resolution (operands built once, below).
+        # --- backend resolution (operands bound once, below).
         if spmm_fn is not None:
             self.backend = "custom"
             self.backend_source = "custom"
@@ -983,59 +294,27 @@ class CountingEngine:
                     else "auto"
                 )
         else:
+            if backend not in ENGINE_BACKENDS:
+                raise ValueError(
+                    f"unknown backend {backend!r} (one of {ENGINE_BACKENDS})"
+                )
             self.backend = backend
             self.backend_source = "explicit"
             self.backend_reason = "backend= given"
 
-        # Bucketed per-batch tables feed the local fused executor and the
-        # Pallas kernel only; the mesh backend builds its own streamed
-        # tables at its own (all-gather) column batch.
-        table_cache: Dict[Tuple[int, int, int], StageTables] = {}
-        self._stage_tables: Dict[Tuple[int, int], StageTables] = {}
-        if self.backend != "mesh":
-            for p_idx, plan in enumerate(self.plans):
-                for i, table in enumerate(plan.tables):
-                    if table is None:
-                        continue
-                    key = (table.k, table.m, table.m_a)
-                    if key not in table_cache:
-                        table_cache[key] = StageTables(
-                            n_out=table.n_out,
-                            column_batch=self.column_batch,
-                            idx_a_host=table.idx_a,
-                            idx_p_host=table.idx_p,
-                            batches=tuple(
-                                (
-                                    lo,
-                                    width,
-                                    jnp.asarray(ia),
-                                    jnp.asarray(ip),
-                                    None if va is None else jnp.asarray(va),
-                                )
-                                for lo, width, ia, ip, va in bucketed_split_entries(
-                                    table, self.column_batch
-                                )
-                            ),
-                        )
-                    self._stage_tables[(p_idx, i)] = table_cache[key]
-
-        # Shared-passive execution groups: stages reading one passive canon
-        # whose active states are all live before the group's first stage
-        # execute together over a single column-batch sweep.
-        self._exec_groups = self._build_shared_passive_groups()
-
-        # Observability counters.  ``trace_count`` increments once per jit
-        # trace (== compilation) of a run/chunk program; the aggregation
-        # counter increments per passive-aggregation launch (the
-        # shared-passive satellite's test hook).  Python-level: they count
-        # traced work, so a warm engine replaying compiled programs holds
-        # steady.
+        # Observability counters, Python-level: ``trace_count`` bumps once
+        # per jit trace (== compilation), ``passive_aggregations`` once per
+        # traced aggregation launch — a warm engine replaying compiled
+        # programs holds steady on both.
         self.trace_count = 0
         self.counters: Dict[str, int] = {"passive_aggregations": 0}
 
-        self.backend_impl: EngineBackend = self._make_backend(
+        # --- layer 3: bind the plan to devices.
+        self.backend_impl: EngineBackend = make_backend(
+            self,
             spmm_fn=spmm_fn,
             block_size=block_size,
+            mesh=mesh,
             column_batch=column_batch,
             ema_mode=ema_mode,
             gather_dtype=gather_dtype,
@@ -1046,7 +325,7 @@ class CountingEngine:
         # budget", which is itself deterministic given the budget
         self._chunk_explicit = bool(chunk_size)
         self._column_batch_arg = column_batch
-        self.chunk_size = int(chunk_size) if chunk_size else pick_chunk_size(
+        self.chunk_size = int(chunk_size) if chunk_size else self.cost.pick_chunk_size(
             self.bytes_per_coloring(), self.memory_budget_bytes
         )
 
@@ -1076,85 +355,46 @@ class CountingEngine:
         self._run_fn = None  # built lazily (jit cache)
         self._chunk_fn = None  # streaming per-chunk jit (serving path)
 
-    def _make_backend(
-        self, *, spmm_fn, block_size, column_batch, ema_mode, gather_dtype, balance_degrees
-    ) -> EngineBackend:
-        if self.backend == "custom":
-            return CustomBackend(self, spmm_fn)
-        if self.backend == "edges":
-            return EdgesBackend(self)
-        if self.backend == "ell":
-            return EllBackend(self)
-        if self.backend == "sell":
-            return SellBackend(self)
-        if self.backend == "dense":
-            return DenseBackend(self)
-        if self.backend == "blocked":
-            return BlockedEllBackend(self, block_size=block_size)
-        if self.backend == "mesh":
-            return MeshBackend(
-                self,
-                self.mesh,
-                column_batch=column_batch,
-                ema_mode=ema_mode,
-                gather_dtype=gather_dtype,
-                balance_degrees=balance_degrees,
-            )
-        raise ValueError(f"unknown backend {self.backend!r} (one of {ENGINE_BACKENDS})")
+    # ------------------------------------------------------------------
+    # Plan-derived views (compat names preserved for tests/benchmarks)
+    # ------------------------------------------------------------------
 
-    def _build_shared_passive_groups(self) -> Dict[Tuple[int, int], Tuple[Tuple[int, int], ...]]:
-        """Static schedule of shared-passive stage groups.
+    @property
+    def _canons(self) -> Tuple[Tuple[str, ...], ...]:
+        return self.plan_ir.canons
 
-        Walks the first-occurrence stages in execution order; each non-leaf
-        stage either leads a group or was claimed by an earlier leader.  A
-        later stage joins a leader's group when (a) it reads the same
-        passive canonical form and (b) its active state is already computed
-        before the leader's position (group members execute at the leader's
-        position, so inputs produced between leader and member cannot be
-        used).  Pulling a member earlier only moves its reads/writes
-        forward, so the sequential liveness schedule (``_free_at``) stays
-        valid: nothing a group reads can have been freed yet, and outputs
-        are never freed before their sequential last read.
+    @property
+    def _free_at(self):
+        return self.plan_ir.free_at
 
-        Returns ``leader (plan_idx, stage_idx) -> members`` (leader first;
-        singleton groups for unshared stages).
+    @property
+    def _exec_groups(self):
+        return self.plan_ir.exec_groups
+
+    @property
+    def _stage_tables(self):
+        """Device-bound split tables of the local backends (empty for mesh,
+        which builds its own streamed tables at the all-gather width)."""
+        return getattr(self.backend_impl, "stage_tables", {})
+
+    def peak_columns(self) -> int:
+        """Peak live M columns per coloring across the shared DP.
+
+        Liveness-aware: states shared across templates by canonical form
+        are freed at their last scheduled read, and the fused pipeline
+        never holds an aggregate product, so the figure is the simulated
+        peak of the schedule (for a single template it equals the in-place
+        bound ``CountingPlan.peak_columns()``).
         """
-        seq: List[Tuple[int, int, str]] = []  # first occurrences, exec order
-        seen = set()
-        for p_idx, plan in enumerate(self.plans):
-            for i, _ in enumerate(plan.partition.subs):
-                c = self._canons[p_idx][i]
-                if c in seen:
-                    continue
-                seen.add(c)
-                seq.append((p_idx, i, c))
-        # canons computed strictly before each seq position
-        avail_before: List[frozenset] = []
-        acc: set = set()
-        for _, _, c in seq:
-            avail_before.append(frozenset(acc))
-            acc.add(c)
-        groups: Dict[Tuple[int, int], Tuple[Tuple[int, int], ...]] = {}
-        member: set = set()
-        for idx, (p_idx, i, _) in enumerate(seq):
-            sub = self.plans[p_idx].partition.subs[i]
-            if sub.is_leaf or (p_idx, i) in member:
-                continue
-            passive_canon = self._canons[p_idx][sub.passive]
-            members = [(p_idx, i)]
-            for jdx in range(idx + 1, len(seq)):
-                q, j, _ = seq[jdx]
-                sub2 = self.plans[q].partition.subs[j]
-                if sub2.is_leaf or (q, j) in member:
-                    continue
-                if self._canons[q][sub2.passive] != passive_canon:
-                    continue
-                if self._canons[q][sub2.active] not in avail_before[idx]:
-                    continue
-                members.append((q, j))
-                member.add((q, j))
-            groups[(p_idx, i)] = tuple(members)
-        return groups
+        return self.plan_ir.peak_columns
+
+    def _max_passive_columns(self) -> int:
+        return self.plan_ir.max_passive_columns
+
+    def _max_stage_columns(self) -> int:
+        """Widest single stage: active + passive + output columns (the fused
+        Pallas kernel's per-stage transposed staging footprint)."""
+        return self.plan_ir.max_stage_columns
 
     # ------------------------------------------------------------------
     # Identity & observability (the serving layer builds on these)
@@ -1176,7 +416,7 @@ class CountingEngine:
         """
         return _assemble_cache_key(
             self.graph_signature(),
-            tuple(tuple(c) for c in self._canons),
+            self.plan_ir.canons,
             self.backend,
             self.policy,
             ("chunk", self.chunk_size)
@@ -1186,13 +426,10 @@ class CountingEngine:
         )
 
     def describe(self) -> Dict:
-        """Structured construction/decision record.
-
-        One dict with everything the construction log line says — the
-        backend decision and its reason, shapes, dtype policy, chunk plan,
-        and the memory model — so services can attach it to cache entries
-        and surface it without parsing log text.
-        """
+        """Structured construction/decision record: the backend decision
+        and its reason, shapes, dtype policy, chunk plan, memory model,
+        and the bound plan's summary — what the construction log line
+        says, machine-readable (services attach it to cache entries)."""
         itemsize = jnp.dtype(self.policy.store_dtype).itemsize
         return {
             "backend": self.backend,
@@ -1210,10 +447,12 @@ class CountingEngine:
             "column_batch": getattr(self.backend_impl, "column_batch", self.column_batch),
             "chunk_size": self.chunk_size,
             "shared_passive_groups": sum(
-                1 for m in self._exec_groups.values() if len(m) > 1
+                1 for m in self.plan_ir.exec_groups.values() if len(m) > 1
             ),
+            "plan": self.plan_ir.describe(),
             "memory": {
                 "budget_bytes": self.memory_budget_bytes,
+                "fusion_slack": self.cost.fusion_slack,
                 "predicted_transient_bytes": self.backend_impl.transient_elements()
                 * itemsize,
                 "predicted_resident_bytes": self.backend_impl.resident_elements()
@@ -1225,54 +464,18 @@ class CountingEngine:
         }
 
     # ------------------------------------------------------------------
-    # Memory planning
+    # Memory planning (delegated to the cost model + backend geometry)
     # ------------------------------------------------------------------
 
-    def peak_columns(self) -> int:
-        """Peak live M columns per coloring across the shared DP.
-
-        Liveness-aware: states shared across templates by canonical form
-        are freed at their last scheduled read, and the fused pipeline
-        never holds an aggregate product, so the figure is the simulated
-        peak of the schedule (for a single template it equals the in-place
-        bound ``CountingPlan.peak_columns()``).
-        """
-        return liveness_peak_columns(self.plans, self._canons)
-
-    def _max_passive_columns(self) -> int:
-        cp = 1
-        for plan in self.plans:
-            for sub in plan.partition.subs:
-                if not sub.is_leaf:
-                    passive = plan.partition.subs[sub.passive]
-                    cp = max(cp, binom(self.k, passive.size))
-        return cp
-
-    def _max_stage_columns(self) -> int:
-        """Widest single stage: active + passive + output columns (the fused
-        Pallas kernel's per-stage transposed staging footprint)."""
-        widest = 1
-        for plan in self.plans:
-            for i, sub in enumerate(plan.partition.subs):
-                if sub.is_leaf:
-                    continue
-                active = plan.partition.subs[sub.active]
-                passive = plan.partition.subs[sub.passive]
-                widest = max(
-                    widest,
-                    binom(self.k, active.size)
-                    + binom(self.k, passive.size)
-                    + binom(self.k, sub.size),
-                )
-        return widest
-
     def bytes_per_coloring(self) -> int:
-        """Estimated live bytes one coloring contributes to a chunk.
+        """Calibrated live bytes one coloring contributes to a chunk.
 
-        Delegates to the backend's memory model: resident M-matrix state
-        plus the widest per-stage transient (edge/row gather scratch for the
-        local backends; all-gather buffer + per-shard message gather for the
-        mesh backend, where the figure is per shard).
+        The cost model's formula fed with the bound backend's operand
+        geometry: resident M-matrix state plus the widest per-stage
+        transient (edge/row gather scratch for the local backends;
+        all-gather buffer + per-shard message gather for the mesh backend,
+        where the figure is per shard), corrected by the fusion-slack
+        factor.
         """
         return self.backend_impl.bytes_per_coloring()
 
@@ -1282,7 +485,10 @@ class CountingEngine:
 
     def compiled_memory_analysis(self, iterations: Optional[int] = None) -> Dict[str, Optional[float]]:
         """Compile one run and compare XLA's measured temp allocation with
-        the chunk picker's prediction (the ROADMAP calibration item).
+        the chunk picker's prediction (the fusion-slack calibration data:
+        ``benchmarks/bench_counting`` commits the ratios as
+        ``memory_model`` rows, which :func:`repro.plan.cost.
+        load_fusion_slack` folds back into the picker).
 
         Returns ``{"predicted_bytes", "actual_temp_bytes", "ratio"}`` with
         ``actual_temp_bytes`` / ``ratio`` ``None`` when the backend does not

@@ -74,6 +74,7 @@ def estimate_embeddings(
     epsilon: Optional[float] = None,
     delta: Optional[float] = None,
     max_iterations: Optional[int] = None,
+    bound: str = "normal",
 ) -> EstimateResult:
     """End-to-end estimator (examples & tests), single-host or mesh.
 
@@ -105,6 +106,8 @@ def estimate_embeddings(
         normal CI halfwidth is within ``epsilon * |mean|`` at confidence
         ``1 - delta`` (defaults 0.05 / 0.05) — replacing the blind fixed-N
         choice end to end.
+      bound: adaptive CI family — ``"normal"`` (default) or the more
+        conservative ``"bernstein"`` (empirical-Bernstein; heavy tails).
       max_iterations: alias for the adaptive budget cap, taking precedence
         over ``iterations`` (default 1024; compare ``required_iterations``
         for the a-priori bound the stopper undercuts).
@@ -140,5 +143,6 @@ def estimate_embeddings(
             delta=0.05 if delta is None else float(delta),
             seed=seed,
             max_iterations=budget,
+            bound=bound,
         )[0]
     return engine.estimate(iterations=iterations or 32, seed=seed)[0]

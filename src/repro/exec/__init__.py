@@ -1,0 +1,46 @@
+"""repro.exec: execution backends that bind a TemplatePlan to devices.
+
+The third layer of the plan -> cost -> exec pipeline (see
+``docs/architecture.md``).  Backends never derive a schedule themselves:
+stage order, canonical sharing, exec groups, and liveness all come from
+the :class:`~repro.plan.ir.TemplatePlan` the engine binds them to; the
+memory-model formulas come from :class:`~repro.plan.cost.CostModel`.
+"""
+
+# Import-cycle anchor: repro.core.engine imports this package — entering
+# here first must finish loading the core submodules our modules read.
+# The assignment keeps it visible to linters (pyflakes has no noqa).
+import repro.core
+
+# `repro` (not `repro.core`): mid-cycle the submodule is in sys.modules
+# but not yet bound as an attribute on the parent package
+_CYCLE_ANCHOR = repro
+
+from .base import EngineBackend, StageTables, build_stage_tables, make_backend
+from .local import (
+    SELL_GROUP_SIZE,
+    BlockedEllBackend,
+    CustomBackend,
+    DenseBackend,
+    EdgesBackend,
+    EllBackend,
+    LocalBackend,
+    SellBackend,
+)
+from .mesh import MeshBackend
+
+__all__ = [
+    "EngineBackend",
+    "StageTables",
+    "build_stage_tables",
+    "LocalBackend",
+    "EdgesBackend",
+    "EllBackend",
+    "SellBackend",
+    "DenseBackend",
+    "BlockedEllBackend",
+    "CustomBackend",
+    "MeshBackend",
+    "SELL_GROUP_SIZE",
+    "make_backend",
+]

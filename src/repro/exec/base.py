@@ -1,0 +1,222 @@
+"""EngineBackend interface: how a TemplatePlan binds to devices and runs.
+
+The third layer of the plan -> cost -> exec pipeline.  A backend owns:
+
+* **operand construction** — its device-resident graph representation,
+  built once in ``__init__`` (edge lists, ELL/SELL tables, dense
+  adjacency, Pallas blocked operands, or the sharded edge partition +
+  collective schedule for the mesh backend);
+* **the DP execution** — :meth:`EngineBackend.counts_for_colors` maps a
+  ``(B, n)`` chunk of colorings to ``(B, T)`` raw colorful totals by
+  walking the engine's :class:`~repro.plan.ir.TemplatePlan` (stages,
+  liveness, shared-passive groups — the backend never re-derives a
+  schedule).  The per-stage primitive is :meth:`aggregate_ema`: ONE fused
+  neighbor-aggregate + eMA step that never materializes the full
+  ``A_G @ M_p`` product;
+* **the memory-model geometry** — :meth:`transient_elements` /
+  :meth:`resident_elements` feed the operand measurements into the plan
+  layer's :class:`~repro.plan.cost.CostModel` formulas.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.colorsets import bucketed_split_entries
+
+__all__ = ["StageTables", "EngineBackend", "build_stage_tables", "make_backend"]
+
+
+def make_backend(engine, **kwargs) -> "EngineBackend":
+    """Bind ``engine``'s resolved backend name to an implementation.
+
+    ``kwargs`` carries the backend-specific knobs the engine collected
+    (``spmm_fn``, ``block_size``, mesh parameters).  Imports are local so
+    this module stays import-cycle-safe whichever package loads first.
+    """
+    from .local import (
+        BlockedEllBackend,
+        CustomBackend,
+        DenseBackend,
+        EdgesBackend,
+        EllBackend,
+        SellBackend,
+    )
+    from .mesh import MeshBackend
+
+    name = engine.backend
+    if name == "custom":
+        return CustomBackend(engine, kwargs["spmm_fn"])
+    if name == "edges":
+        return EdgesBackend(engine)
+    if name == "ell":
+        return EllBackend(engine)
+    if name == "sell":
+        return SellBackend(engine)
+    if name == "dense":
+        return DenseBackend(engine)
+    if name == "blocked":
+        return BlockedEllBackend(engine, block_size=kwargs.get("block_size", 256))
+    if name == "mesh":
+        return MeshBackend(
+            engine,
+            kwargs.get("mesh"),
+            column_batch=kwargs.get("column_batch"),
+            ema_mode=kwargs.get("ema_mode", "streamed"),
+            gather_dtype=kwargs.get("gather_dtype"),
+            balance_degrees=kwargs.get("balance_degrees", False),
+        )
+    raise ValueError(f"unknown backend {name!r}")
+
+
+@dataclass(frozen=True)
+class StageTables:
+    """Split tables for one DP stage, in both shapes the fused pipeline needs.
+
+    ``idx_a_host`` / ``idx_p_host`` are the plain ``(n_out, n_splits)`` rank
+    tables, kept host-side: the fused Pallas kernel expands them per
+    coloring chunk at trace time (``spmm_ema_batched``).  ``batches`` are
+    the same entries re-bucketed by passive-column batch and shipped to the
+    device (:func:`repro.core.colorsets.bucketed_split_entries`) for the
+    streamed pure-JAX executor.  De-duplicated across stages by
+    ``(k, m, m_a)``.
+    """
+
+    n_out: int
+    column_batch: int
+    idx_a_host: np.ndarray
+    idx_p_host: np.ndarray
+    batches: Tuple[Tuple[int, int, jnp.ndarray, jnp.ndarray, jnp.ndarray], ...]
+
+
+def build_stage_tables(plan, column_batch: int) -> Dict[Tuple[int, int], StageTables]:
+    """Bind a :class:`~repro.plan.ir.TemplatePlan`'s split tables to the
+    device at one fused-slice width.
+
+    Returns ``(plan_idx, sub_idx) -> StageTables`` for every non-leaf
+    stage of every counting plan (duplicates included — aliases of one
+    shared, de-duplicated-by-``(k, m, m_a)`` device table), so executors
+    can look tables up by the stage address the schedule hands them.
+    """
+    cache: Dict[Tuple[int, int, int], StageTables] = {}
+    out: Dict[Tuple[int, int], StageTables] = {}
+    for p_idx, cplan in enumerate(plan.counting_plans):
+        for i, table in enumerate(cplan.tables):
+            if table is None:
+                continue
+            key = (table.k, table.m, table.m_a)
+            if key not in cache:
+                cache[key] = StageTables(
+                    n_out=table.n_out,
+                    column_batch=column_batch,
+                    idx_a_host=table.idx_a,
+                    idx_p_host=table.idx_p,
+                    batches=tuple(
+                        (
+                            lo,
+                            width,
+                            jnp.asarray(ia),
+                            jnp.asarray(ip),
+                            None if va is None else jnp.asarray(va),
+                        )
+                        for lo, width, ia, ip, va in bucketed_split_entries(
+                            table, column_batch
+                        )
+                    ),
+                )
+            out[(p_idx, i)] = cache[key]
+    return out
+
+
+class EngineBackend:
+    """One fused SpMM+eMA execution strategy behind ``CountingEngine``.
+
+    Backends keep a reference to the engine façade, which exposes the
+    bound :class:`~repro.plan.ir.TemplatePlan` (``engine.plan_ir``), the
+    :class:`~repro.plan.cost.CostModel` (``engine.cost``), the dtype
+    policy, and the observability counters.
+    """
+
+    name: str = "abstract"
+
+    def __init__(self, engine):
+        self.engine = engine
+
+    # -- execution ----------------------------------------------------------
+
+    def aggregate_ema(
+        self, m_p: jnp.ndarray, m_a: jnp.ndarray, tables: StageTables
+    ) -> jnp.ndarray:
+        """Fused per-stage step: ``(n, B, C_p), (n, B, C_a) -> (n, B, n_out)``
+        in accum dtype, without materializing ``A_G @ M_p``."""
+        raise NotImplementedError
+
+    def aggregate_ema_grouped(
+        self, m_p: jnp.ndarray, stage_inputs: Sequence[Tuple[jnp.ndarray, StageTables]]
+    ) -> List[jnp.ndarray]:
+        """Run several stages that share the passive state ``m_p``.
+
+        Backends that can share the neighbor aggregation across the group
+        override this (the streamed local pipeline computes each passive
+        column-batch aggregate once for the whole group); the default is
+        the unshared per-stage loop.
+        """
+        return [self.aggregate_ema(m_p, m_a, tables) for m_a, tables in stage_inputs]
+
+    def counts_for_colors(self, colors: jnp.ndarray) -> jnp.ndarray:
+        """``(B, n)`` colorings -> ``(B, T)`` un-normalized colorful totals."""
+        raise NotImplementedError
+
+    def counts_for_keys_chunk(self, keys_chunk: jnp.ndarray) -> jnp.ndarray:
+        """``(B, 2)`` PRNG keys -> ``(B, T)`` normalized estimates.
+
+        The coloring draw is identical across backends (one ``randint`` per
+        key over the *original* vertex ids), so the same keys produce the
+        same colorings — and therefore fp-tolerance-comparable estimates —
+        on every backend, mesh included.
+        """
+        eng = self.engine
+        colors = jax.vmap(
+            lambda key: jax.random.randint(key, (eng.graph.n,), 0, eng.k)
+        )(keys_chunk)
+        return self.counts_for_colors(colors) * eng._norm_factors[None, :]
+
+    def make_run_fn(self) -> Callable:
+        """One jit for the whole run: ``lax.map`` over key chunks.
+
+        Tracing bumps the engine's ``trace_count`` (a Python side effect
+        runs once per trace, i.e. per new compilation), so tests and the
+        serving cache can assert that a warm engine never re-compiles.
+        """
+        engine = self.engine
+
+        def run(keys):
+            engine.trace_count += 1
+            return jax.lax.map(self.counts_for_keys_chunk, keys)
+
+        return jax.jit(run)
+
+    # -- memory-model geometry ----------------------------------------------
+
+    def transient_elements(self) -> int:
+        """Widest per-stage scratch one coloring needs, in store-dtype
+        elements — the cost-model formula fed with this backend's built
+        operand geometry."""
+        eng = self.engine
+        return eng.cost.transient_elements(self.name, eng.column_batch)
+
+    def resident_elements(self) -> int:
+        """Live M-matrix elements one coloring keeps resident."""
+        return self.engine.cost.resident_elements()
+
+    def bytes_per_coloring(self) -> int:
+        """Calibrated live bytes one coloring contributes to a chunk."""
+        return self.engine.cost.bytes_per_coloring(
+            self.transient_elements(), self.resident_elements()
+        )

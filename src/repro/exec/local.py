@@ -1,0 +1,306 @@
+"""Single-device execution backends for the fused counting pipeline.
+
+Every local backend shares one DP executor (:class:`LocalBackend.
+counts_for_colors`) that walks the engine's bound
+:class:`~repro.plan.ir.TemplatePlan` — stage order, canonical sharing,
+shared-passive exec groups, and the liveness schedule all come from the
+plan IR; subclasses only supply the column-slice neighbor reduction
+:meth:`LocalBackend.spmm` (or, for the fused Pallas kernel, override
+:meth:`~repro.exec.base.EngineBackend.aggregate_ema` outright).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.counting import fused_aggregate_ema_grouped
+from repro.core.graph import build_sell
+
+from .base import EngineBackend, StageTables, build_stage_tables
+
+__all__ = [
+    "LocalBackend",
+    "EdgesBackend",
+    "EllBackend",
+    "SellBackend",
+    "DenseBackend",
+    "BlockedEllBackend",
+    "CustomBackend",
+    "SELL_GROUP_SIZE",
+]
+
+#: Degree-sorted rows per SELL group (smaller = tighter padding).
+SELL_GROUP_SIZE = 128
+
+
+class LocalBackend(EngineBackend):
+    """Shared single-device fused DP: subclasses only supply :meth:`spmm`.
+
+    The multi-template DP walks every plan's stages with DP states memoized
+    by rooted canonical form, all M matrices in the fused ``(n, B, C)``
+    layout.  Each stage runs through the shared streamed
+    :meth:`aggregate_ema` (passive column batches aggregated and consumed
+    one at a time), and states are dropped at their liveness-scheduled last
+    read — the aggregate product ``A_G @ M_p`` never exists.
+    """
+
+    def __init__(self, engine):
+        super().__init__(engine)
+        # Bucketed per-batch tables feed the local fused executor and the
+        # Pallas kernel (the mesh backend builds its own streamed tables
+        # at its own all-gather column batch).
+        self.stage_tables: Dict = build_stage_tables(
+            engine.plan_ir, engine.column_batch
+        )
+
+    def spmm(self, m: jnp.ndarray) -> jnp.ndarray:
+        """One neighbor reduction over a fused ``(n, B, c)`` column slice
+        (the fused pipeline only ever passes ``column_batch``-wide slices);
+        returns accum dtype."""
+        raise NotImplementedError
+
+    def _spmm_counted(self, m: jnp.ndarray) -> jnp.ndarray:
+        # the Python-level counter runs once per traced aggregation launch
+        self.engine.counters["passive_aggregations"] += 1
+        return self.spmm(m)
+
+    def aggregate_ema(self, m_p, m_a, tables: StageTables):
+        return self.aggregate_ema_grouped(m_p, [(m_a, tables)])[0]
+
+    def aggregate_ema_grouped(self, m_p, stage_inputs):
+        pol = self.engine.policy
+        return fused_aggregate_ema_grouped(
+            m_p,
+            [(m_a, tables.batches, tables.n_out) for m_a, tables in stage_inputs],
+            self._spmm_counted,
+            pol.accum_dtype,
+        )
+
+    def counts_for_colors(self, colors: jnp.ndarray) -> jnp.ndarray:
+        """(B, n) colorings -> (B, T) un-normalized colorful totals.
+
+        The walk *is* the plan: sub-template states are memoized by
+        canonical form, freed at the plan's liveness-scheduled last reads
+        (Algorithm 5's in-place storage), and stages reading the same
+        passive canonical form execute as one plan exec group — the
+        group's passive column-batch sweep aggregates each slice once for
+        all of them.
+        """
+        eng = self.engine
+        ir = eng.plan_ir
+        pol = eng.policy
+        leaf = jax.nn.one_hot(colors.T, eng.k, dtype=pol.store_dtype)  # (n, B, k)
+        free_at = ir.free_at
+        slots: Dict[str, jnp.ndarray] = {}
+        totals = []
+        executed = set()
+        pos = 0
+        for p_idx, cplan in enumerate(ir.counting_plans):
+            canons = ir.canons[p_idx]
+            for i, sub in enumerate(cplan.partition.subs):
+                key = canons[i]
+                if key in executed:
+                    continue
+                executed.add(key)
+                if sub.is_leaf:
+                    slots[key] = leaf
+                elif key not in slots:
+                    # group leader: execute every stage sharing this passive
+                    # canon over one column-batch sweep (members whose active
+                    # state is already live; singleton group otherwise)
+                    members = ir.exec_groups[(p_idx, i)]
+                    stage_inputs = []
+                    for q, j in members:
+                        sub_m = ir.counting_plans[q].partition.subs[j]
+                        stage_inputs.append(
+                            (
+                                slots[ir.canons[q][sub_m.active]],
+                                self.stage_tables[(q, j)],
+                            )
+                        )
+                    outs = self.aggregate_ema_grouped(
+                        slots[canons[sub.passive]], stage_inputs
+                    )
+                    for (q, j), m_s in zip(members, outs):
+                        slots[ir.canons[q][j]] = m_s.astype(pol.store_dtype)
+                # else: already produced early as a member of a prior group
+                for dead in free_at.get(pos, ()):
+                    slots.pop(dead, None)
+                pos += 1
+            root = slots[canons[cplan.partition.root_index]].astype(pol.accum_dtype)
+            # reduce color sets first, then vertices: the per-coloring order
+            # is independent of the batch size (bit-exact across chunkings)
+            totals.append(root.sum(axis=2).sum(axis=0).astype(jnp.float32))
+            for dead in free_at.get(pos, ()):
+                slots.pop(dead, None)
+            pos += 1
+        return jnp.stack(totals, axis=1)  # (B, T)
+
+
+class EdgesBackend(LocalBackend):
+    """Edge-list gather + segment-sum (the skew-robust default)."""
+
+    name = "edges"
+
+    def __init__(self, engine):
+        super().__init__(engine)
+        g = engine.graph
+        self._src = jnp.asarray(g.src)
+        self._dst = jnp.asarray(g.dst)
+
+    def spmm(self, m):
+        return jax.ops.segment_sum(
+            m[self._src].astype(self.engine.policy.accum_dtype),
+            self._dst,
+            num_segments=self.engine.graph.n,
+            indices_are_sorted=True,
+        )
+
+
+class EllBackend(LocalBackend):
+    """Padded-row neighbor gather (flat degree distributions)."""
+
+    name = "ell"
+
+    def __init__(self, engine):
+        super().__init__(engine)
+        nbr, mask = engine.graph.ell()
+        self._nbr = jnp.asarray(nbr)
+        self._ell_mask = jnp.asarray(mask)
+
+    def spmm(self, m):
+        pol = self.engine.policy
+        gathered = m[self._nbr].astype(pol.accum_dtype)  # (n, max_deg, B, c)
+        return jnp.einsum("ndbc,nd->nbc", gathered, self._ell_mask.astype(pol.accum_dtype))
+
+
+class SellBackend(LocalBackend):
+    """Degree-bucketed sliced-ELL gather — scatter-free (rmat8k-class graphs).
+
+    Vertices are degree-sorted into :data:`SELL_GROUP_SIZE`-row groups,
+    each padded only to its own max degree (:func:`repro.core.graph.
+    build_sell`); the neighbor reduction is a padded row gather + masked
+    einsum per group, stitched back through one inverse-permutation gather.
+    No scatter appears anywhere — this sidesteps the XLA:CPU scatter cliff
+    that made the edge-list ``segment_sum`` 5–10x *slower* than the scalar
+    traversal baseline on rmat8k, while keeping padding bounded on
+    power-law degree distributions (unlike plain ELL).
+    """
+
+    name = "sell"
+
+    def __init__(self, engine, group_size: int = SELL_GROUP_SIZE):
+        super().__init__(engine)
+        sell = build_sell(engine.graph, group_size=group_size)
+        self._sell_padded_slots = sell.padded_slots
+        self._groups = tuple(
+            (jnp.asarray(nbr), jnp.asarray(mask))
+            for nbr, mask in zip(sell.group_nbr, sell.group_mask)
+        )
+        self._inv_order = jnp.asarray(sell.inv_order)
+
+    def spmm(self, m):
+        pol = self.engine.policy
+        parts = [
+            jnp.einsum(
+                "rdbc,rd->rbc",
+                m[nbr].astype(pol.accum_dtype),
+                mask.astype(pol.accum_dtype),
+            )
+            for nbr, mask in self._groups
+        ]
+        return jnp.concatenate(parts, axis=0)[self._inv_order]
+
+    def transient_elements(self) -> int:
+        eng = self.engine
+        return eng.cost.transient_elements(
+            self.name, eng.column_batch, sell_padded_slots=self._sell_padded_slots
+        )
+
+
+class DenseBackend(LocalBackend):
+    """Dense-adjacency matmul (tiny graphs)."""
+
+    name = "dense"
+
+    def __init__(self, engine):
+        super().__init__(engine)
+        self._adj = jnp.asarray(engine.graph.dense_adjacency())
+
+    def spmm(self, m):
+        pol = self.engine.policy
+        n, b, c = m.shape
+        out = jnp.matmul(
+            self._adj.astype(pol.store_dtype),
+            m.reshape(n, b * c),
+            preferred_element_type=pol.accum_dtype,
+        )
+        return out.reshape(n, b, c).astype(pol.accum_dtype)
+
+
+class BlockedEllBackend(LocalBackend):
+    """Fused Pallas SpMM+eMA kernel over blocked-ELL (large graphs on TPU).
+
+    Each stage is ONE :func:`repro.kernels.spmm_ema.ops.spmm_ema` call: per
+    destination vertex block the kernel accumulates that block's aggregate
+    columns in VMEM scratch and consumes them in the eMA FMA against the
+    resident ``M_a`` tile the moment the block's last edge pair lands —
+    the aggregate product never reaches HBM.
+    """
+
+    name = "blocked"
+
+    def __init__(self, engine, block_size: int = 256):
+        super().__init__(engine)
+        from repro.kernels.spmm_ema.ops import prepare_fused_operand
+
+        self._fused_op = prepare_fused_operand(engine.graph, block_size=block_size)
+
+    def spmm(self, m):
+        # kernel is 2-D (n, C) — fuse batch into columns
+        from repro.kernels.spmm_blocked.ops import spmm_blocked
+
+        n, b, c = m.shape
+        out = spmm_blocked(
+            self._fused_op.blocked,
+            m.reshape(n, b * c).astype(jnp.float32),
+            interpret=self.engine.interpret,
+        )
+        return out.reshape(n, b, c).astype(self.engine.policy.accum_dtype)
+
+    def aggregate_ema(self, m_p, m_a, tables: StageTables):
+        from repro.kernels.spmm_ema.ops import spmm_ema_batched
+
+        self.engine.counters["passive_aggregations"] += 1
+        return spmm_ema_batched(
+            self._fused_op,
+            m_p,
+            m_a,
+            tables.idx_a_host,
+            tables.idx_p_host,
+            interpret=self.engine.interpret,
+        ).astype(self.engine.policy.accum_dtype)
+
+    def aggregate_ema_grouped(self, m_p, stage_inputs):
+        # the Pallas kernel fuses SpMM+eMA per stage inside one launch; a
+        # cross-stage sweep cannot share its VMEM aggregate scratch, so the
+        # group degrades to the per-stage loop (counted per launch)
+        return [self.aggregate_ema(m_p, m_a, tables) for m_a, tables in stage_inputs]
+
+
+class CustomBackend(LocalBackend):
+    """Caller-supplied ``(n, C) -> (n, C)`` neighbor-sum kernel."""
+
+    name = "custom"
+
+    def __init__(self, engine, spmm_fn: Callable):
+        super().__init__(engine)
+        self._spmm_fn = spmm_fn
+
+    def spmm(self, m):
+        n, b, c = m.shape
+        out = self._spmm_fn(m.reshape(n, b * c))
+        return out.reshape(n, b, c).astype(self.engine.policy.accum_dtype)

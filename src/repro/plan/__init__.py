@@ -1,0 +1,64 @@
+"""repro.plan: backend-agnostic compilation plans for the counting pipeline.
+
+This package is the first layer of the engine's three-layer pipeline
+(plan -> cost -> exec):
+
+* :mod:`repro.plan.ir` — the :class:`TemplatePlan` intermediate
+  representation: the complete static DP schedule for a set of same-``k``
+  templates (stages with canonical-form sharing, shared-passive execution
+  groups, the liveness schedule, per-stage width annotations), built once
+  by the pure planner :func:`build_template_plan`.  Every execution
+  backend — local, SELL, blocked Pallas, mesh — consumes a
+  ``TemplatePlan`` instead of re-deriving schedules.
+* :mod:`repro.plan.cost` — the unified resource model
+  (:class:`CostModel`): peak live columns, per-coloring byte footprints,
+  and chunk / column-batch picking for every execution target, calibrated
+  by the empirical fusion-slack factor measured from committed
+  ``memory_model`` bench rows.
+
+``python -m repro.plan <template> [--graph ...]`` pretty-prints a plan
+(stage schedule, exec groups, liveness peak, predicted bytes).
+"""
+
+# Imported first so that entering the package directly (e.g. the CLI or a
+# bare ``import repro.plan``) finishes loading the core submodules this
+# package reads before ``.ir``/``.cost`` resolve them — repro.core.engine
+# itself imports repro.plan, so the two sides meet in the middle.  The
+# assignment keeps the anchor visible to linters (pyflakes has no noqa).
+import repro.core
+
+# `repro` (not `repro.core`): mid-cycle the submodule is in sys.modules
+# but not yet bound as an attribute on the parent package
+_CYCLE_ANCHOR = repro
+
+from .cost import (
+    DEFAULT_MEMORY_BUDGET_BYTES,
+    LOCAL_COLUMN_BATCH,
+    MAX_CHUNK_SIZE,
+    MESH_COLUMN_BATCH,
+    CostModel,
+    fusion_slack_factor,
+    load_fusion_slack,
+    pick_chunk_size,
+)
+from .ir import (
+    PlanStage,
+    TemplatePlan,
+    build_template_plan,
+    template_set_canons,
+)
+
+__all__ = [
+    "PlanStage",
+    "TemplatePlan",
+    "build_template_plan",
+    "template_set_canons",
+    "CostModel",
+    "load_fusion_slack",
+    "fusion_slack_factor",
+    "pick_chunk_size",
+    "DEFAULT_MEMORY_BUDGET_BYTES",
+    "MAX_CHUNK_SIZE",
+    "LOCAL_COLUMN_BATCH",
+    "MESH_COLUMN_BATCH",
+]

@@ -1,0 +1,178 @@
+"""Plan inspector CLI: ``python -m repro.plan <template> [...] [--graph SPEC]``.
+
+Pretty-prints a :class:`~repro.plan.ir.TemplatePlan` — the stage schedule
+(with canonical sharing and liveness frees), the shared-passive exec
+groups, and the liveness peak — and, when a graph is given, binds a real
+``CountingEngine`` to print the calibrated cost-model verdict (backend,
+predicted resident/transient bytes, fusion slack, picked chunk).
+
+Examples::
+
+    python -m repro.plan u6
+    python -m repro.plan path6 star6 bintree6 u6
+    python -m repro.plan u7 --graph rmat:2048:20000:1
+    python -m repro.plan u6 --graph grid:30:30 --backend ell --dtype bf16
+
+Graph specs: ``rmat:N:E[:SEED]``, ``er:N:P[:SEED]``, ``grid:R:C``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.core.graph import erdos_renyi_graph, grid_graph, rmat_graph
+from repro.core.templates import get_template
+
+from .ir import build_template_plan
+
+
+def _parse_graph(spec: str):
+    parts = spec.split(":")
+    kind = parts[0]
+    try:
+        if kind == "rmat":
+            n, e = int(parts[1]), int(parts[2])
+            seed = int(parts[3]) if len(parts) > 3 else 0
+            return rmat_graph(n, e, seed=seed), f"rmat(n={n}, edges={e}, seed={seed})"
+        if kind == "er":
+            n, p = int(parts[1]), float(parts[2])
+            seed = int(parts[3]) if len(parts) > 3 else 0
+            return (
+                erdos_renyi_graph(n, p, seed=seed),
+                f"erdos-renyi(n={n}, p={p}, seed={seed})",
+            )
+        if kind == "grid":
+            r, c = int(parts[1]), int(parts[2])
+            return grid_graph(r, c), f"grid({r}x{c})"
+    except (IndexError, ValueError) as exc:
+        raise SystemExit(f"bad --graph spec {spec!r}: {exc}")
+    raise SystemExit(f"unknown graph kind {kind!r} (rmat | er | grid)")
+
+
+def _fmt_bytes(b: float) -> str:
+    if b >= 2**20:
+        return f"{b / 2**20:.2f} MiB"
+    if b >= 2**10:
+        return f"{b / 2**10:.1f} KiB"
+    return f"{int(b)} B"
+
+
+def _print_plan(plan) -> None:
+    d = plan.describe()
+    names = ", ".join(d["templates"])
+    print(f"TemplatePlan: [{names}]  k={d['k']}")
+    print(
+        f"  {d['total_subs']} sub-templates -> {d['unique_canons']} unique canons "
+        f"-> {d['stages']} scheduled stages ({d['positions']} positions incl. "
+        f"root reads)"
+    )
+    print(
+        f"  liveness peak: {d['peak_columns']} live M columns per coloring "
+        f"(naive per-plan in-place bound: {d['naive_peak_columns']})"
+    )
+    print(
+        f"  widest passive state: {d['max_passive_columns']} cols | widest "
+        f"stage (a+p+out): {d['max_stage_columns']} cols"
+    )
+    print(f"  split tables (k, m, m_a): {d['table_keys'] or '-'}")
+
+    print("\n  pos  stage        kind  cols  active+passive -> out          frees")
+    by_pos = {s.position: s for s in plan.stages}
+    tmpl_names = [t.name for t in plan.templates]
+    pos = 0
+    for p_idx, cplan in enumerate(plan.counting_plans):
+        for i, _sub in enumerate(cplan.partition.subs):
+            s = by_pos.get(pos)
+            if s is None or (s.plan_idx, s.sub_idx) != (p_idx, i):
+                # duplicate canon: executed earlier, takes no position
+                continue
+            frees = ",".join(plan.free_at.get(pos, ())) or "-"
+            label = f"{tmpl_names[s.plan_idx]}[{s.sub_idx}]"
+            if s.is_leaf:
+                body = f"leaf  {s.columns:4d}  {'one-hot coloring':28s}"
+            else:
+                arrow = (
+                    f"{s.active_columns}+{s.passive_columns} -> {s.columns}"
+                )
+                body = f"ema   {s.columns:4d}  {arrow:28s}"
+            print(f"  {pos:3d}  {label:11s}  {body}  {frees}")
+            pos += 1
+        frees = ",".join(plan.free_at.get(pos, ())) or "-"
+        print(
+            f"  {pos:3d}  {tmpl_names[p_idx]:11s}  root        "
+            f"{'sum over colors+vertices':28s}  {frees}"
+        )
+        pos += 1
+
+    shared = {l: m for l, m in plan.exec_groups.items() if len(m) > 1}
+    if shared:
+        print("\n  shared-passive exec groups (one column-batch sweep each):")
+        for (p, i), members in shared.items():
+            mem = ", ".join(f"{tmpl_names[q]}[{j}]" for q, j in members)
+            print(f"    leader {tmpl_names[p]}[{i}] <- [{mem}]")
+    else:
+        print("\n  shared-passive exec groups: none (all singletons)")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.plan",
+        description="Inspect the TemplatePlan IR (and, with --graph, the "
+        "calibrated cost-model verdict) for a template set.",
+    )
+    ap.add_argument("templates", nargs="+", help="template names (same k), e.g. u6")
+    ap.add_argument("--graph", help="rmat:N:E[:SEED] | er:N:P[:SEED] | grid:R:C")
+    ap.add_argument("--backend", default="auto", help="engine backend (default auto)")
+    ap.add_argument("--dtype", default="fp32", help="dtype policy: fp32 | bf16")
+    ap.add_argument(
+        "--budget", type=int, default=None, help="memory budget bytes for the picker"
+    )
+    ap.add_argument("--column-batch", type=int, default=None)
+    ap.add_argument("--chunk-size", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    templates = [get_template(name) for name in args.templates]
+    plan = build_template_plan(templates)
+    _print_plan(plan)
+
+    if args.graph:
+        from repro.core.engine import DEFAULT_MEMORY_BUDGET_BYTES, CountingEngine
+
+        graph, gdesc = _parse_graph(args.graph)
+        eng = CountingEngine(
+            graph,
+            templates,
+            backend=args.backend,
+            dtype_policy=args.dtype,
+            memory_budget_bytes=args.budget or DEFAULT_MEMORY_BUDGET_BYTES,
+            column_batch=args.column_batch,
+            chunk_size=args.chunk_size,
+        )
+        d = eng.describe()
+        mem = d["memory"]
+        print(f"\nCost model on {gdesc}:")
+        print(
+            f"  backend: {d['backend']} ({d['backend_source']}: "
+            f"{d['backend_reason']})"
+        )
+        print(
+            f"  dtype: store={d['dtype_policy']['store']} "
+            f"accum={d['dtype_policy']['accum']} | column_batch={d['column_batch']}"
+        )
+        print(
+            f"  predicted bytes/coloring: {_fmt_bytes(mem['bytes_per_coloring'])} "
+            f"(resident {_fmt_bytes(mem['predicted_resident_bytes'])} + transient "
+            f"{_fmt_bytes(mem['predicted_transient_bytes'])}, fusion slack "
+            f"{mem['fusion_slack']:.4f})"
+        )
+        print(
+            f"  chunk: {d['chunk_size']} colorings under a "
+            f"{_fmt_bytes(mem['budget_bytes'])} budget -> predicted peak "
+            f"{_fmt_bytes(eng.predicted_peak_bytes())}"
+        )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,302 @@
+"""The unified cost model: resource predictions for every execution target.
+
+One :class:`CostModel` per (plan, graph, dtype) owns everything the engine
+used to scatter across backends and the chunk picker:
+
+* the **resident** figure — ``n * TemplatePlan.peak_columns`` live M-matrix
+  elements per coloring (per shard on the mesh target, padded to the
+  all-gather batch);
+* the **transient** formulas per target — one fused ``column_batch``-wide
+  slice of the backend's gather scratch (edge messages, padded rows, SELL
+  groups, the all-gather buffer);
+* **column-batch picking** — the fused-slice width per target;
+* **chunk picking** — the largest coloring chunk whose live footprint fits
+  the memory budget, with the analytic byte model corrected by the
+
+**fusion-slack factor**: the analytic model is compared against XLA's
+measured temp allocation on every bench run
+(``CountingEngine.compiled_memory_analysis``) and the predicted/actual
+ratios are committed as ``memory_model`` rows in ``BENCH_counting.json``.
+:func:`load_fusion_slack` folds their geometric mean back into the picker
+(effective bytes = analytic bytes / slack), so the picker stops trusting
+the analytic model blindly.  With no bench rows the factor is a safe 1.0;
+whenever calibration is applied it is logged on the ``repro.plan`` logger.
+"""
+
+from __future__ import annotations
+
+import json
+import logging
+import math
+import os
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+
+__all__ = [
+    "CostModel",
+    "load_fusion_slack",
+    "fusion_slack_factor",
+    "pick_chunk_size",
+    "DEFAULT_MEMORY_BUDGET_BYTES",
+    "MAX_CHUNK_SIZE",
+    "LOCAL_COLUMN_BATCH",
+    "MESH_COLUMN_BATCH",
+    "SLACK_CLAMP",
+    "BENCH_ENV_VAR",
+]
+
+logger = logging.getLogger("repro.plan")
+
+#: Default live-footprint budget for one chunk of colorings (bytes).  Sized
+#: for the CPU/laptop case; on real TPUs pass the per-core VMEM/HBM figure.
+DEFAULT_MEMORY_BUDGET_BYTES = 32 * 1024 * 1024
+
+#: Hard cap on colorings fused into one chunk (diminishing returns beyond).
+MAX_CHUNK_SIZE = 64
+
+#: Default passive columns per fused SpMM+eMA slice on the local backends.
+#: Empirically (2-core XLA:CPU interleaved A/B on the rmat2k bench graphs):
+#: 16 beats both narrower slices (the per-call segment-sum fixed cost is
+#: paid more often) and the full-width two-pass dataflow (whose edge-wide
+#: transient thrashes cache), while keeping the chunk picker's fused
+#: transient small enough to grow coloring chunks 2-4x over the seed.
+LOCAL_COLUMN_BATCH = 16
+
+#: Default passive columns per all-gather collective on the mesh target.
+MESH_COLUMN_BATCH = 128
+
+#: Calibration ratios outside this band are treated as measurement noise
+#: (a wildly off bench row must not starve or blow the chunk picker).
+SLACK_CLAMP = (0.5, 2.0)
+
+#: Environment override for the bench file the slack factor is read from.
+BENCH_ENV_VAR = "REPRO_FUSION_SLACK_BENCH"
+
+#: memoized slack factors, keyed by resolved bench path ('' = missing).
+_SLACK_CACHE: Dict[str, float] = {}
+
+
+def _default_bench_path() -> Optional[str]:
+    env = os.environ.get(BENCH_ENV_VAR, "").strip()
+    if env:
+        return env
+    # src/repro/plan/cost.py -> repo root (the committed bench lives there)
+    root = os.path.dirname(
+        os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    )
+    return os.path.join(root, "BENCH_counting.json")
+
+
+def load_fusion_slack(path: Optional[str] = None) -> float:
+    """Empirical fusion-slack factor from committed ``memory_model`` rows.
+
+    Each row's ``derived`` field records ``predicted_over_actual`` — the
+    analytic byte model divided by XLA's measured temp allocation for one
+    bench engine config.  The factor returned is the geometric mean of the
+    ratios, clamped to :data:`SLACK_CLAMP`; ``< 1`` means the analytic
+    model under-predicts, so the picker inflates its byte estimates by
+    ``1 / slack``.  **Safe default**: 1.0 whenever the bench file or the
+    rows are missing or unparsable — the picker then behaves exactly like
+    the uncalibrated analytic model.  Applied calibration is logged once
+    per path on the ``repro.plan`` logger.
+    """
+    resolved = path if path is not None else _default_bench_path()
+    key = resolved or ""
+    if key in _SLACK_CACHE:
+        return _SLACK_CACHE[key]
+    slack = 1.0
+    ratios = []
+    try:
+        with open(resolved) as fh:
+            bench = json.load(fh)
+        rows = bench.get("rows", []) if isinstance(bench, dict) else []
+        for row in rows:
+            if not isinstance(row, dict):
+                continue
+            if "memory_model" not in str(row.get("name", "")):
+                continue
+            fields = {}
+            for part in str(row.get("derived", "")).split(";"):
+                if "=" in part:
+                    name, _, val = part.partition("=")
+                    fields[name] = val
+            try:
+                ratio = float(fields["predicted_over_actual"])
+                # rows written by a calibrated picker already fold a slack
+                # into their prediction; multiply it back out so the loader
+                # always sees the RAW analytic-model ratio (fixed point:
+                # re-benching with calibration on does not double-correct)
+                ratio *= float(fields.get("applied_fusion_slack", 1.0))
+                if ratio > 0:  # '%.3f'-rounded zeros would poison the mean
+                    ratios.append(ratio)
+            except (KeyError, ValueError):
+                pass
+        if ratios:
+            mean_log = sum(math.log(r) for r in ratios) / len(ratios)
+            slack = min(max(math.exp(mean_log), SLACK_CLAMP[0]), SLACK_CLAMP[1])
+            logger.info(
+                "fusion-slack calibration applied: factor=%.4f from %d "
+                "memory_model bench rows (%s)",
+                slack,
+                len(ratios),
+                resolved,
+            )
+        else:
+            logger.debug(
+                "no memory_model rows in %s — fusion slack defaults to 1.0",
+                resolved,
+            )
+    except (OSError, ValueError, TypeError, AttributeError, KeyError) as exc:
+        logger.debug(
+            "fusion-slack bench unavailable (%s) — defaulting to 1.0", exc
+        )
+    _SLACK_CACHE[key] = slack
+    return slack
+
+
+def fusion_slack_factor() -> float:
+    """The memoized default-path slack (what engines constructed without an
+    explicit ``fusion_slack`` use)."""
+    return load_fusion_slack()
+
+
+def pick_chunk_size(
+    bytes_per_coloring: int,
+    memory_budget_bytes: int,
+    max_chunk: int = MAX_CHUNK_SIZE,
+) -> int:
+    """Largest chunk whose live footprint stays under the budget (>= 1)."""
+    if bytes_per_coloring <= 0:
+        return max_chunk
+    return max(1, min(max_chunk, int(memory_budget_bytes // bytes_per_coloring)))
+
+
+class CostModel:
+    """Resource predictions for one ``TemplatePlan`` on one graph.
+
+    All element counts are *store-dtype elements per coloring*; byte
+    figures multiply by the store itemsize and divide by the fusion-slack
+    factor, so everything downstream (the chunk picker, ``describe()``,
+    the bench calibration rows) sees one consistent, calibrated model.
+
+    Operand-geometry arguments (``sell_padded_slots``, the mesh shard
+    shape) are supplied by the bound backend — the formulas live here, the
+    measurements live with the operands.
+    """
+
+    def __init__(
+        self,
+        plan,
+        graph,
+        store_dtype=jnp.float32,
+        *,
+        fusion_slack: Optional[float] = None,
+    ):
+        self.plan = plan
+        self.graph = graph
+        self.itemsize = jnp.dtype(store_dtype).itemsize
+        self.fusion_slack = (
+            load_fusion_slack() if fusion_slack is None else float(fusion_slack)
+        )
+        if not SLACK_CLAMP[0] <= self.fusion_slack <= SLACK_CLAMP[1]:
+            raise ValueError(
+                f"fusion_slack {self.fusion_slack} outside sane band {SLACK_CLAMP}"
+            )
+
+    # -- column-batch picking ------------------------------------------------
+
+    def pick_local_column_batch(self) -> int:
+        """Fused-slice width for the single-device backends."""
+        return min(LOCAL_COLUMN_BATCH, self.plan.max_passive_columns)
+
+    def pick_mesh_column_batch(self) -> int:
+        """Columns per all-gather collective on the mesh target."""
+        return min(MESH_COLUMN_BATCH, max(self.plan.max_passive_columns, self.plan.k))
+
+    # -- local targets -------------------------------------------------------
+
+    def resident_elements(self) -> int:
+        """Live M-matrix elements one coloring keeps resident: ``n`` rows
+        times the plan's liveness-aware peak columns."""
+        return self.graph.n * self.plan.peak_columns
+
+    def transient_elements(
+        self,
+        target: str,
+        column_batch: int,
+        *,
+        sell_padded_slots: Optional[int] = None,
+    ) -> int:
+        """Widest per-stage scratch one coloring needs on ``target``.
+
+        One fused slice: the backend's gather intermediate plus the
+        aggregated ``(n, column_batch)`` slice — never the full passive
+        width (that is the fused pipeline's whole point).
+        """
+        g = self.graph
+        if target in ("edges", "custom"):
+            return (g.num_directed + g.n) * column_batch
+        if target == "ell":
+            return (g.n * max(g.max_degree(), 1) + g.n) * column_batch
+        if target == "sell":
+            if sell_padded_slots is None:
+                raise ValueError("sell transient needs the built SELL geometry")
+            return (sell_padded_slots + g.n) * column_batch
+        if target == "dense":
+            return g.n * column_batch
+        if target == "blocked":
+            # transposed-layout staging of one stage's operands/output; no
+            # edge-wide or (n, C_p) aggregate intermediate exists
+            return g.n * self.plan.max_stage_columns
+        raise ValueError(f"unknown cost target {target!r}")
+
+    # -- mesh target (per shard!) --------------------------------------------
+
+    def mesh_transient_elements(
+        self, n_padded: int, edges_per_shard: int, column_batch: int
+    ) -> int:
+        """Per-shard collective scratch: one all-gathered column batch
+        plus the per-shard edge message gather."""
+        return (n_padded + edges_per_shard) * column_batch
+
+    def mesh_resident_elements(
+        self, rows_per_shard: int, column_batch: int, ema_mode: str = "streamed"
+    ) -> int:
+        """Per-shard live DP state: local rows times the liveness-aware
+        peak of padded M columns (memoized SpMM products count too in the
+        non-streamed eMA modes)."""
+        peak = self.plan.padded_peak_columns(
+            pad_unit=column_batch, track_products=(ema_mode != "streamed")
+        )
+        return rows_per_shard * peak
+
+    # -- bytes + chunk -------------------------------------------------------
+
+    def bytes_per_coloring(
+        self, transient_elements: int, resident_elements: int
+    ) -> int:
+        """Calibrated live bytes one coloring contributes to a chunk.
+
+        The analytic element model times the store itemsize, corrected by
+        the empirical fusion-slack factor (``slack < 1`` means the model
+        under-predicts, so the effective figure grows).
+        """
+        raw = (transient_elements + resident_elements) * self.itemsize
+        return int(math.ceil(raw / self.fusion_slack))
+
+    def pick_chunk_size(
+        self,
+        bytes_per_coloring: int,
+        memory_budget_bytes: int = DEFAULT_MEMORY_BUDGET_BYTES,
+        max_chunk: int = MAX_CHUNK_SIZE,
+    ) -> int:
+        return pick_chunk_size(bytes_per_coloring, memory_budget_bytes, max_chunk)
+
+    def describe(self) -> Dict:
+        return {
+            "fusion_slack": self.fusion_slack,
+            "itemsize": self.itemsize,
+            "peak_columns": self.plan.peak_columns,
+            "resident_elements": self.resident_elements(),
+        }

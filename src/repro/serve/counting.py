@@ -208,6 +208,7 @@ class CountingService:
         iterations: Optional[int] = None,
         seed: int = 0,
         record_rows: bool = False,
+        bound: str = "normal",
     ) -> Query:
         """Queue a query; returns its handle (drive it with :meth:`run`).
 
@@ -218,6 +219,9 @@ class CountingService:
         fixed ``iterations`` colorings (default ``32``).  ``record_rows``
         keeps the per-coloring estimates on the handle
         (:meth:`Query.per_iteration`) instead of just the running moments.
+        ``bound`` picks the CI the stopper tests: ``"normal"`` (default)
+        or the more conservative ``"bernstein"`` for heavy-tailed
+        per-coloring counts (see :mod:`repro.serve.stopping`).
         """
         graph = self.graph(graph_ref)
         tset = self._resolve_templates(templates)
@@ -239,6 +243,7 @@ class CountingService:
             delta=delta,
             budget=budget,
             min_iterations=self.min_iterations,
+            bound=bound,
         )
         query = Query(
             qid=self._next_qid,

@@ -17,6 +17,22 @@ approximation is solid (the paper's estimates need >= tens of iterations for
 useful accuracy anyway), and empirically the stopper lands 3-5 orders of
 magnitude below the blind bound at the same (epsilon, delta) target.
 
+For very small iteration counts or heavy-tailed per-coloring counts the
+normal CI can under-cover (the sample variance lags the true tail);
+``AdaptiveStopper(bound="bernstein")`` switches the halfwidth to the
+**empirical-Bernstein** bound (Audibert et al. 2007; Maurer & Pontil 2009)
+
+    halfwidth = sqrt(2 * var_sample * ln(3/delta) / n)
+                + 3 * range_n * ln(3/delta) / n
+
+which is variance-adaptive AND range-guarded: the second term keeps the
+interval honest while the variance estimate is still warming up, at the
+price of stopping later (never earlier) than the normal CI on the same
+stream.  ``range_n`` is the *observed* sample range — the classical bound
+assumes a known a-priori range, which per-coloring counts do not have, so
+this is the standard plug-in variant (still a far heavier tail guard than
+the CLT).  The normal CI stays the default.
+
 Everything here is host-side float64 NumPy — deterministic under a fixed
 seed and independent of how iterations were batched into launches.
 """
@@ -96,7 +112,10 @@ class AdaptiveStopper:
     ``epsilon * |mean|`` (after ``min_iterations``), or at ``budget``
     iterations.  ``epsilon=None`` disables the CI rule — the stopper
     degenerates to a fixed-``budget`` run, so fixed-N and adaptive queries
-    drive through one code path.
+    drive through one code path.  ``bound`` picks the CI: ``"normal"``
+    (default, CLT z-interval) or ``"bernstein"`` (empirical-Bernstein —
+    variance-adaptive with an observed-range guard, sequentially more
+    conservative; see the module docstring).
 
     State is a vectorized Welford accumulation in float64: deterministic,
     O(T) memory, and independent of launch batching (the same sample
@@ -113,6 +132,7 @@ class AdaptiveStopper:
         delta: float = 0.05,
         budget: int = 1024,
         min_iterations: int = DEFAULT_MIN_ITERATIONS,
+        bound: str = "normal",
     ):
         if epsilon is not None and epsilon <= 0:
             raise ValueError(f"epsilon must be positive, got {epsilon}")
@@ -120,15 +140,25 @@ class AdaptiveStopper:
             raise ValueError(f"delta must be in (0, 1), got {delta}")
         if budget < 1:
             raise ValueError(f"budget must be >= 1, got {budget}")
+        if bound not in ("normal", "bernstein"):
+            raise ValueError(f"unknown CI bound {bound!r} (normal | bernstein)")
         self.num_templates = int(num_templates)
         self.epsilon = epsilon
         self.delta = float(delta)
         self.budget = int(budget)
         self.min_iterations = max(2, int(min_iterations))
+        self.bound = bound
         self.z = normal_quantile(1 - self.delta / 2) if epsilon is not None else None
+        # ln(3/delta) — the empirical-Bernstein confidence term
+        self._log3d = math.log(3.0 / self.delta)
         self.count = 0
         self._mean = np.zeros(self.num_templates, np.float64)
         self._m2 = np.zeros(self.num_templates, np.float64)
+        # observed per-template sample range (the bernstein range guard);
+        # tracked unconditionally — it is O(T) and makes bound switches in
+        # tests/debugging honest
+        self._min = np.full(self.num_templates, np.inf)
+        self._max = np.full(self.num_templates, -np.inf)
 
     # -- accumulation --------------------------------------------------------
 
@@ -142,12 +172,26 @@ class AdaptiveStopper:
             delta = row - self._mean
             self._mean += delta / self.count
             self._m2 += delta * (row - self._mean)
+        if rows.shape[0]:
+            np.minimum(self._min, rows.min(axis=0), out=self._min)
+            np.maximum(self._max, rows.max(axis=0), out=self._max)
 
     # -- inspection ----------------------------------------------------------
 
     @property
     def iterations(self) -> int:
         return self.count
+
+    def _halfwidth(self, t: int, std: float) -> float:
+        """CI halfwidth for template ``t`` under the configured bound."""
+        n = self.count
+        if self.bound == "bernstein":
+            rng = float(self._max[t] - self._min[t]) if n >= 1 else 0.0
+            return (
+                math.sqrt(2.0 * std * std * self._log3d / n)
+                + 3.0 * rng * self._log3d / n
+            )
+        return self.z * std / math.sqrt(n)
 
     def estimates(self) -> List[TemplateCI]:
         """Current per-template mean / std / CI halfwidth."""
@@ -158,11 +202,11 @@ class AdaptiveStopper:
                 std = math.sqrt(max(var, 0.0))
             else:
                 std = 0.0
-            if self.z is not None and self.count >= self.min_iterations:
-                half = self.z * std / math.sqrt(self.count)
+            if self.epsilon is not None and self.count >= self.min_iterations:
+                half = self._halfwidth(t, std)
                 conv = half <= self.epsilon * abs(self._mean[t])
             else:
-                half = math.inf if self.z is not None else 0.0
+                half = math.inf if self.epsilon is not None else 0.0
                 conv = False
             out.append(
                 TemplateCI(
@@ -194,6 +238,7 @@ def adaptive_estimate(
     seed: int = 0,
     max_iterations: int = 1024,
     min_iterations: int = DEFAULT_MIN_ITERATIONS,
+    bound: str = "normal",
 ):
     """Drive one :class:`~repro.core.engine.CountingEngine` adaptively.
 
@@ -218,6 +263,7 @@ def adaptive_estimate(
         delta=delta,
         budget=max_iterations,
         min_iterations=min_iterations,
+        bound=bound,
     )
     import jax.numpy as jnp
 

@@ -13,8 +13,30 @@ if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
 
 try:
-    import hypothesis  # noqa: F401  (the real package always wins)
+    import hypothesis
+
+    _USING_HYPOTHESIS_FALLBACK = getattr(hypothesis, "__is_repro_fallback__", False)
 except ImportError:
     from repro.testing import hypothesis_fallback
 
     hypothesis_fallback.install()
+    _USING_HYPOTHESIS_FALLBACK = True
+
+
+def pytest_report_header(config):
+    return (
+        "hypothesis: fixed-seed repro fallback (property tests run 10-20 "
+        "deterministic examples)"
+        if _USING_HYPOTHESIS_FALLBACK
+        else "hypothesis: real package"
+    )
+
+
+def pytest_configure(config):
+    # fast/slow split: `-m "not slow"` is the quick tier-1 lane in
+    # scripts/check.sh; the multi-process mesh smokes run behind `-m slow`
+    config.addinivalue_line(
+        "markers",
+        "slow: multi-process / virtual-device subprocess tests (run via "
+        "`pytest -m slow`; excluded from the fast check.sh lane)",
+    )

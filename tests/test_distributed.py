@@ -8,6 +8,9 @@ import sys
 
 import pytest
 
+# subprocess smokes over 8 virtual devices: the slow check.sh lane
+pytestmark = pytest.mark.slow
+
 _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

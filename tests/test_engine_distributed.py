@@ -11,6 +11,11 @@ import os
 import subprocess
 import sys
 
+import pytest
+
+# subprocess smokes over 4 virtual devices: the slow check.sh lane
+pytestmark = pytest.mark.slow
+
 _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

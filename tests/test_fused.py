@@ -237,6 +237,7 @@ def test_compiled_memory_analysis_reports_prediction():
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 def test_fused_mesh_backend_matches_two_pass():
     """The mesh backend's streamed all-gather fusion agrees with the local
     fused engine AND the legacy two-pass reference on a 4-device mesh."""

@@ -1,0 +1,342 @@
+"""TemplatePlan IR invariants (property tests; hypothesis fallback OK).
+
+The plan layer's contract with the executors, pinned over u3-u10 and
+random trees:
+
+* the liveness peak never exceeds the naive in-place plan bound (sharing
+  can only help) and never undershoots the widest single stage;
+* every exec-group member's active state is live at the leader's position
+  (the group executes there, so inputs must already exist and must not
+  have been freed);
+* plan equality implies identical ``engine_cache_key`` (the plan IS the
+  template half of the key);
+* the schedule is executable: a symbolic walk never reads a freed or
+  not-yet-computed state, and every plan's root is live at its read.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import engine_cache_key, get_template, rmat_graph
+from repro.core.counting import build_counting_plan
+from repro.core.templates import random_tree_template
+from repro.plan.ir import build_template_plan, template_set_canons
+
+U_TEMPLATES = ["u3", "u5-1", "u5-2", "u6", "u7", "u10"]
+
+#: same-k groups for multi-template plans
+SAME_K_SETS = [
+    ["u5-1", "u5-2"],
+    ["path6", "star6", "bintree6", "u6"],
+    ["path7", "star7", "u7"],
+]
+
+
+def _coexistence_floor(plan) -> int:
+    """Columns that MUST coexist at some stage: output + distinct children
+    (``max_stage_columns`` double-counts a child read twice, e.g. u3's two
+    leaf children are ONE shared canonical state — the Pallas staging
+    figure wants that, a liveness lower bound does not)."""
+    floor = 1
+    for s in plan.stages:
+        if s.is_leaf:
+            continue
+        cols = s.columns + s.active_columns
+        if s.passive_canon != s.active_canon:
+            cols += s.passive_columns
+        floor = max(floor, cols)
+    return floor
+
+
+def _simulate(plan):
+    """Walk the schedule exactly like an executor: returns the sequence of
+    (position, live-set-before-free) snapshots and asserts basic sanity."""
+    live = set()
+    executed = set()
+    snapshots = []
+    pos = 0
+    for p_idx, cplan in enumerate(plan.counting_plans):
+        pc = plan.canons[p_idx]
+        for i, sub in enumerate(cplan.partition.subs):
+            if pc[i] in executed:
+                continue
+            executed.add(pc[i])
+            if not sub.is_leaf:
+                # inputs must be computed and still live
+                assert pc[sub.active] in live, (pos, "active freed or missing")
+                assert pc[sub.passive] in live, (pos, "passive freed or missing")
+            live.add(pc[i])
+            snapshots.append((pos, frozenset(live)))
+            for dead in plan.free_at.get(pos, ()):
+                live.discard(dead)
+            pos += 1
+        root_canon = pc[cplan.partition.root_index]
+        assert root_canon in live, "plan root freed before its read"
+        snapshots.append((pos, frozenset(live)))
+        for dead in plan.free_at.get(pos, ()):
+            live.discard(dead)
+        pos += 1
+    assert pos == plan.num_positions
+    return snapshots
+
+
+# ---------------------------------------------------------------------------
+# Liveness peak bounds
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tname", U_TEMPLATES)
+def test_liveness_peak_le_plan_bound_u3_to_u10(tname):
+    """Single template: the IR's liveness peak is sandwiched between the
+    widest single stage and the per-plan in-place bound."""
+    cplan = build_counting_plan(get_template(tname))
+    plan = build_template_plan([get_template(tname)], plans=[cplan])
+    assert plan.peak_columns <= cplan.peak_columns()
+    assert plan.peak_columns >= _coexistence_floor(plan)
+
+
+@pytest.mark.parametrize("names", SAME_K_SETS)
+def test_multi_template_peak_le_sum_of_plan_bounds(names):
+    """Shared schedules only ever help: the multi-template peak never
+    exceeds the sum of the independent per-plan bounds."""
+    templates = [get_template(n) for n in names]
+    plan = build_template_plan(templates)
+    naive = sum(p.peak_columns() for p in plan.counting_plans)
+    assert plan.peak_columns <= naive
+    assert plan.peak_columns >= _coexistence_floor(plan)
+
+
+@settings(max_examples=15, deadline=None)
+@given(k=st.integers(min_value=3, max_value=10), seed=st.integers(0, 2**16))
+def test_liveness_peak_bounds_random_trees(k, seed):
+    """Arbitrary trees: canonical sharing holds a state live from its
+    first computation to its LAST duplicate read, where the in-place
+    executor recomputes (and quickly re-frees) each duplicate — so the
+    liveness peak may exceed the naive bound by at most the width of the
+    within-plan duplicated canons (it trades that residency for strictly
+    fewer stage computations).  The strict ``peak <= plan bound`` of the
+    u3-u10 test only holds when no duplicate spans the widest region."""
+    from collections import Counter
+
+    from repro.core.colorsets import binom
+
+    t = random_tree_template(k, seed=seed, name=f"rt{k}-{seed}")
+    cplan = build_counting_plan(t)
+    plan = build_template_plan([t], plans=[cplan])
+    counts = Counter(plan.canons[0])
+    dup_allowance = sum(
+        binom(k, len(sub.vertices))
+        for i, sub in enumerate(cplan.partition.subs)
+        if counts[plan.canons[0][i]] > 1 and plan.stage_at(0, i) is not None
+    )
+    assert plan.peak_columns <= cplan.peak_columns() + dup_allowance
+    assert plan.peak_columns >= _coexistence_floor(plan)
+    _simulate(plan)
+
+
+# ---------------------------------------------------------------------------
+# Exec-group validity
+# ---------------------------------------------------------------------------
+
+
+def _assert_groups_valid(plan):
+    """Every member's active is computed AND still live at the leader's
+    position, and every member reads the leader's passive canon."""
+    live_at = dict(_simulate(plan))
+    for (lp, li), members in plan.exec_groups.items():
+        leader_stage = plan.stage_at(lp, li)
+        assert leader_stage is not None and not leader_stage.is_leaf
+        assert members[0] == (lp, li), "leader must come first"
+        live = live_at[leader_stage.position]
+        for q, j in members:
+            sub = plan.counting_plans[q].partition.subs[j]
+            assert plan.canons[q][sub.passive] == leader_stage.passive_canon
+            assert plan.canons[q][sub.active] in live, (
+                f"member ({q},{j}) active not live at leader position "
+                f"{leader_stage.position}"
+            )
+
+
+@pytest.mark.parametrize("names", SAME_K_SETS + [[n] for n in U_TEMPLATES])
+def test_exec_group_actives_live_at_leader(names):
+    _assert_groups_valid(build_template_plan([get_template(n) for n in names]))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    k=st.integers(min_value=4, max_value=9),
+    s1=st.integers(0, 2**10),
+    s2=st.integers(0, 2**10),
+    s3=st.integers(0, 2**10),
+)
+def test_exec_groups_valid_random_multi_template(k, s1, s2, s3):
+    templates = [
+        random_tree_template(k, seed=s, name=f"rt{k}-{s}-{i}")
+        for i, s in enumerate((s1, s2, s3))
+    ]
+    _assert_groups_valid(build_template_plan(templates))
+
+
+# ---------------------------------------------------------------------------
+# Plan equality => identical engine_cache_key
+# ---------------------------------------------------------------------------
+
+
+def test_plan_equality_implies_identical_cache_key():
+    """Two independently built plans over the same template set are equal,
+    and equal plans yield byte-identical engine cache keys."""
+    g = rmat_graph(300, 1500, seed=2)
+    for names in SAME_K_SETS:
+        templates_a = [get_template(n) for n in names]
+        templates_b = [get_template(n) for n in names]
+        pa, pb = build_template_plan(templates_a), build_template_plan(templates_b)
+        assert pa == pb and hash(pa) == hash(pb)
+        assert pa.schedule_key() == pb.schedule_key()
+        ka = engine_cache_key(g, templates_a, backend="edges")
+        kb = engine_cache_key(g, templates_b, backend="edges")
+        assert ka == kb
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    k=st.integers(min_value=3, max_value=9),
+    seed_a=st.integers(0, 64),
+    seed_b=st.integers(0, 64),
+)
+def test_plan_equality_implies_cache_key_random(k, seed_a, seed_b):
+    """The implication direction, over random tree pairs (some coincide,
+    some differ): plans equal => cache keys equal; plans unequal => the
+    template halves of the keys differ."""
+    g = rmat_graph(120, 500, seed=1)
+    ta = random_tree_template(k, seed=seed_a, name="a")
+    tb = random_tree_template(k, seed=seed_b, name="b")
+    pa, pb = build_template_plan([ta]), build_template_plan([tb])
+    ka = engine_cache_key(g, [ta], backend="edges")
+    kb = engine_cache_key(g, [tb], backend="edges")
+    if pa == pb:
+        assert ka == kb  # names differ, schedules agree -> same compiled engine
+    else:
+        assert ka != kb
+
+
+def test_canons_are_label_free():
+    """template_set_canons (the key's template half) ignores names and
+    equals the plan IR's canons."""
+    t = get_template("u6")
+    plan = build_template_plan([t])
+    assert template_set_canons([t]) == plan.canons
+
+
+# ---------------------------------------------------------------------------
+# Schedule executability + engine integration
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("names", SAME_K_SETS)
+def test_schedule_executes_without_dangling_reads(names):
+    _simulate(build_template_plan([get_template(n) for n in names]))
+
+
+# ---------------------------------------------------------------------------
+# Cost model: fusion-slack calibration
+# ---------------------------------------------------------------------------
+
+
+def test_fusion_slack_defaults_to_one_without_bench_rows(tmp_path, caplog):
+    """Missing file, unparsable file, and row-free file all fall back to
+    the safe 1.0 (the uncalibrated analytic model)."""
+    import json
+    import logging
+
+    from repro.plan.cost import load_fusion_slack
+
+    with caplog.at_level(logging.DEBUG, logger="repro.plan"):
+        assert load_fusion_slack(str(tmp_path / "missing.json")) == 1.0
+        empty = tmp_path / "empty.json"
+        empty.write_text(json.dumps({"rows": []}))
+        assert load_fusion_slack(str(empty)) == 1.0
+        junk = tmp_path / "junk.json"
+        junk.write_text("not json at all")
+        assert load_fusion_slack(str(junk)) == 1.0
+
+
+def test_fusion_slack_calibration_applied_and_logged(tmp_path, caplog):
+    """memory_model rows calibrate the factor (geometric mean, raw-ratio
+    fixed point via applied_fusion_slack) and the application is logged on
+    the repro.plan logger."""
+    import json
+    import logging
+    import math
+
+    from repro.plan.cost import load_fusion_slack
+
+    bench = tmp_path / "bench.json"
+    bench.write_text(
+        json.dumps(
+            {
+                "rows": [
+                    {
+                        "name": "engine/g/u5/memory_model",
+                        "derived": "predicted_over_actual=0.900",
+                    },
+                    {
+                        "name": "engine/g/u6/memory_model",
+                        # calibrated row: raw ratio = 1.000 * 0.8 = 0.8
+                        "derived": "predicted_over_actual=1.000;"
+                        "applied_fusion_slack=0.8",
+                    },
+                    {"name": "engine/g/u6/batched64", "derived": "speedup=3x"},
+                ]
+            }
+        )
+    )
+    with caplog.at_level(logging.INFO, logger="repro.plan"):
+        got = load_fusion_slack(str(bench))
+    assert got == pytest.approx(math.sqrt(0.9 * 0.8))
+    assert any("fusion-slack calibration applied" in r.message for r in caplog.records)
+
+
+def test_picker_applies_slack_to_bytes():
+    """slack < 1 (model under-predicts) inflates the effective bytes and
+    can only shrink the picked chunk; slack = 1 is the identity."""
+    from repro.core import CountingEngine
+    from repro.plan.cost import CostModel
+
+    g = rmat_graph(2048, 20_000, seed=1)
+    eng = CountingEngine(g, [get_template("u6")])
+    raw = (
+        eng.backend_impl.transient_elements() + eng.backend_impl.resident_elements()
+    ) * eng.cost.itemsize
+    identity = CostModel(eng.plan_ir, g, fusion_slack=1.0)
+    halved = CostModel(eng.plan_ir, g, fusion_slack=0.5)
+    t, r = eng.backend_impl.transient_elements(), eng.backend_impl.resident_elements()
+    assert identity.bytes_per_coloring(t, r) == raw
+    assert halved.bytes_per_coloring(t, r) == 2 * raw
+    budget = 32 * 1024 * 1024
+    assert halved.pick_chunk_size(halved.bytes_per_coloring(t, r), budget) <= (
+        identity.pick_chunk_size(identity.bytes_per_coloring(t, r), budget)
+    )
+    # out-of-band factors are rejected, not silently clamped
+    with pytest.raises(ValueError, match="fusion_slack"):
+        CostModel(eng.plan_ir, g, fusion_slack=4.0)
+
+
+def test_engine_binds_the_plan_it_was_given():
+    """The façade derives its public figures from the bound plan."""
+    from repro.core import CountingEngine
+
+    g = rmat_graph(300, 1500, seed=2)
+    templates = [get_template(n) for n in ("path6", "u6")]
+    plan = build_template_plan(templates)
+    eng = CountingEngine(g, templates)
+    assert eng.plan_ir == plan
+    assert eng.peak_columns() == plan.peak_columns
+    assert eng._canons == plan.canons
+    assert eng._exec_groups == plan.exec_groups
+    # counts are unchanged by the planning indirection (vs per-template runs)
+    colors = np.random.default_rng(0).integers(0, 6, size=g.n)
+    multi = eng.raw_counts(colors)
+    for ti, t in enumerate(templates):
+        single = CountingEngine(g, [t]).raw_counts(colors)[0]
+        assert float(multi[ti]) == pytest.approx(float(single), rel=1e-6)

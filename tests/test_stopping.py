@@ -1,0 +1,128 @@
+"""AdaptiveStopper CI-bound tests: normal vs empirical-Bernstein.
+
+The per-coloring colorful counts of skewed graphs are heavy-tailed (a hub
+that happens to be rainbow-colored spikes the count); the Bernstein bound's
+whole reason to exist is honest coverage on such streams.  These tests run
+both bounds over a fixed heavy-tailed synthetic stream (lognormal — finite
+variance, tail heavy enough that the sample variance lags) and pin the
+ordering and determinism properties the serving layer relies on.
+"""
+
+import numpy as np
+import pytest
+
+from repro.serve.stopping import AdaptiveStopper
+
+
+def _heavy_tailed_stream(
+    n: int, templates: int = 1, seed: int = 0, sigma: float = 1.2
+) -> np.ndarray:
+    """(n, T) lognormal rows: occasional >10x spikes over the median."""
+    rng = np.random.default_rng(seed)
+    return rng.lognormal(mean=1.0, sigma=sigma, size=(n, templates))
+
+
+def _run_until_done(stopper: AdaptiveStopper, rows: np.ndarray, block: int = 8) -> int:
+    i = 0
+    while not stopper.done and i < rows.shape[0]:
+        stopper.update(rows[i : i + block])
+        i += block
+    return stopper.iterations
+
+
+def test_bound_validation():
+    with pytest.raises(ValueError, match="unknown CI bound"):
+        AdaptiveStopper(1, epsilon=0.1, bound="hoeffding")
+    # the two supported bounds construct fine
+    AdaptiveStopper(1, epsilon=0.1, bound="normal")
+    AdaptiveStopper(1, epsilon=0.1, bound="bernstein")
+
+
+def test_bernstein_halfwidth_dominates_normal_on_heavy_tail():
+    """On the same stream state, the empirical-Bernstein halfwidth must be
+    at least the normal halfwidth (it adds the range-guard term and its
+    variance term carries the larger ln(3/delta) constant at any delta
+    below ~0.5), i.e. Bernstein is never less conservative."""
+    rows = _heavy_tailed_stream(256, templates=3, seed=1)
+    normal = AdaptiveStopper(3, epsilon=0.05, delta=0.05, budget=10**6)
+    bern = AdaptiveStopper(3, epsilon=0.05, delta=0.05, budget=10**6, bound="bernstein")
+    normal.update(rows)
+    bern.update(rows)
+    for e_n, e_b in zip(normal.estimates(), bern.estimates()):
+        assert e_b.halfwidth >= e_n.halfwidth
+        # moments are bound-independent
+        assert e_b.mean == e_n.mean and e_b.std == e_n.std
+
+
+def test_bernstein_stops_later_than_normal_same_stream():
+    """Sequentially, at the same (epsilon, delta), the Bernstein stopper
+    can only spend MORE iterations than the normal one on any stream —
+    and both must actually converge on this one within the budget."""
+    rows = _heavy_tailed_stream(4096, seed=2, sigma=1.0)
+    n_iters = _run_until_done(
+        AdaptiveStopper(1, epsilon=0.15, delta=0.1, budget=4096), rows
+    )
+    b_stop = AdaptiveStopper(1, epsilon=0.15, delta=0.1, budget=4096, bound="bernstein")
+    b_iters = _run_until_done(b_stop, rows)
+    assert b_iters >= n_iters
+    assert b_stop.converged, "bernstein must still converge within the budget"
+    assert b_iters < 4096  # ... and strictly before the budget cap here
+
+
+def test_bernstein_deterministic_and_batch_invariant_decisions():
+    """Same sample sequence => same moments and same converged verdict at
+    every common inspection point, however the rows were batched."""
+    rows = _heavy_tailed_stream(512, seed=3)
+    fine = AdaptiveStopper(1, epsilon=0.1, delta=0.1, budget=10**6, bound="bernstein")
+    coarse = AdaptiveStopper(1, epsilon=0.1, delta=0.1, budget=10**6, bound="bernstein")
+    for i in range(0, 512, 4):
+        fine.update(rows[i : i + 4])
+        if i % 16 == 12:
+            coarse.update(rows[i - 12 : i + 4])
+            e_f, e_c = fine.estimates()[0], coarse.estimates()[0]
+            assert e_f.mean == e_c.mean
+            assert e_f.halfwidth == e_c.halfwidth
+            assert fine.converged == coarse.converged
+
+
+def test_bernstein_range_guard_blocks_early_stop_on_quiet_prefix():
+    """A stream whose first samples are near-constant fools the normal CI
+    (tiny sample variance => instant convergence) but the Bernstein range
+    term keeps the interval open once a spike reveals the tail."""
+    quiet = np.full((16, 1), 100.0) + np.linspace(0, 0.1, 16)[:, None]
+    spike = np.array([[1000.0]])
+    normal = AdaptiveStopper(1, epsilon=0.01, delta=0.05, budget=10**6)
+    bern = AdaptiveStopper(1, epsilon=0.01, delta=0.05, budget=10**6, bound="bernstein")
+    normal.update(quiet)
+    bern.update(quiet)
+    assert normal.converged  # the CLT interval collapses on the quiet prefix
+    bern.update(spike)
+    assert not bern.converged  # range guard: 3 * range * ln(3/d) / n >> eps*mean
+
+
+def test_fixed_budget_path_ignores_bound():
+    """epsilon=None degenerates both bounds to the fixed-budget run."""
+    rows = _heavy_tailed_stream(64, seed=4)
+    for bound in ("normal", "bernstein"):
+        st = AdaptiveStopper(1, epsilon=None, budget=32, bound=bound)
+        _run_until_done(st, rows)
+        assert st.iterations == 32 and st.done and not st.converged
+
+
+def test_service_accepts_bernstein_bound():
+    """End-to-end: a CountingService query with bound="bernstein" runs,
+    stops before the budget on an easy target, and never stops earlier
+    than the normal-bound twin of the same query."""
+    from repro.core import rmat_graph
+    from repro.serve import CountingService
+
+    svc = CountingService(chunk_size=8)
+    svc.register_graph("g", rmat_graph(260, 1200, seed=5))
+    qn = svc.submit("g", "u5-1", epsilon=0.2, delta=0.1, iterations=512, seed=0)
+    qb = svc.submit(
+        "g", "u5-1", epsilon=0.2, delta=0.1, iterations=512, seed=0, bound="bernstein"
+    )
+    svc.run()
+    assert qn.done and qb.done
+    assert qb.iterations >= qn.iterations
+    assert qb.iterations < 512 and qb.result()[0].converged
