@@ -1,6 +1,12 @@
 """Fig 12 analog: template-size scaling — peak live M-matrix columns and
 bytes as the template grows (the distributed system's memory-extension
-argument), plus measured wall time per template on the CPU host."""
+argument), plus measured wall time per template on the CPU host.
+
+Non-tree rows: width-2 graphlets (triangle / square / diamond) ride the
+bag pipeline through a ``CountingEngine`` — the tree-only
+``count_colorful_vectorized`` cannot run them — and report the
+element-level liveness peak (a bag state over ``r`` axes is ``n**r``
+rows wide, so columns alone understate the footprint)."""
 
 from __future__ import annotations
 
@@ -30,4 +36,22 @@ def run() -> None:
             f"fig12/template_scaling/{tname}",
             us,
             f"peak_cols={peak_cols};bytes_at_1M_vertices={bytes_1m / 1e9:.1f}GB",
+        )
+
+    # non-tree (bag-compiled) graphlets: engine path, element-level peak
+    from repro.core.engine import CountingEngine
+
+    for tname in ["triangle", "square", "diamond"]:
+        t = get_template(tname)
+        eng = CountingEngine(g, t, backend="edges")
+        colors = jnp.asarray(rng.integers(0, t.k, size=(1, g.n)))
+        fn = jax.jit(eng.backend_impl.counts_for_colors)
+        us = time_fn(fn, colors, iters=2)
+        peak_el = eng.plan_ir.peak_elements(g.n)
+        width = eng.plan_ir.decomposition_widths[0]
+        record(
+            f"fig12/template_scaling/{tname}",
+            us,
+            f"tw={width};peak_elements={peak_el};"
+            f"bytes={peak_el * 4 / 1e6:.1f}MB",
         )

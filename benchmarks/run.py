@@ -60,11 +60,17 @@ def print_trend(prev_rows: dict, threshold: float = REGRESSION_THRESHOLD) -> int
     for name, us, _ in ROWS:
         prev = prev_rows.get(name)
         prev_us = prev.get("us_per_call") if prev else None
+        if prev_us is not None:
+            # tolerate unparsable previous values (hand-edited files, rows
+            # written by newer schema) — treat them as newly-introduced keys
+            try:
+                prev_us = float(prev_us)
+            except (TypeError, ValueError):
+                prev_us = None
         if prev_us is None:
             fresh += 1
             print(f"{name:<{width}}  {'-':>12}  {us:>12.1f}  {'new':>8}", file=sys.stderr)
             continue
-        prev_us = float(prev_us)
         if prev_us == 0.0:
             # legit zero baseline (e.g. derived-only rows): nothing to diff
             print(f"{name:<{width}}  {prev_us:>12.1f}  {us:>12.1f}  {'n/a':>8}", file=sys.stderr)

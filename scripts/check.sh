@@ -27,11 +27,38 @@ python -m pytest -x -q -m "not slow"
 echo "== tier-1 (slow lane): mesh/subprocess tests, pytest -m slow =="
 python -m pytest -x -q -m slow
 
+echo "== guard: tree-template canonical schedules frozen =="
+python scripts/check_tree_canons.py
+
 echo "== smoke: plan inspector CLI =="
 python -m repro.plan u6 --graph rmat:300:1500:2 | tee /tmp/plan_inspect.out >/dev/null
 grep -q "liveness peak" /tmp/plan_inspect.out
 grep -q "fusion slack" /tmp/plan_inspect.out
-echo "plan inspector: schedule + cost verdict printed -> OK"
+python -m repro.plan --template triangle --template square | tee /tmp/plan_bag.out >/dev/null
+grep -q "bag stages" /tmp/plan_bag.out
+grep -q "decomposition widths" /tmp/plan_bag.out
+echo "plan inspector: schedule + cost verdict + bag schedules printed -> OK"
+
+echo "== smoke: non-tree (bag) counting — triangle end-to-end =="
+python - <<'PY'
+import numpy as np
+from repro.core import CountingEngine, rmat_graph
+from repro.core.counting import brute_force_colorful
+from repro.core.templates import get_template, graph_automorphisms
+
+g = rmat_graph(64, 400, seed=4)  # small enough to brute-force
+t = get_template("triangle")
+eng = CountingEngine(g, [t], backend="edges")
+colors = np.random.default_rng(0).integers(0, 3, size=(4, g.n))
+nonzero = 0
+for c in colors:
+    raw = float(eng.raw_counts(c)[0])
+    exact = brute_force_colorful(g, t, c) * graph_automorphisms(t)
+    assert abs(raw - exact) <= 1e-5 * max(1.0, exact), (raw, exact)
+    nonzero += exact > 0
+assert nonzero, "all colorings missed — graph too sparse for the smoke"
+print(f"triangle smoke: {len(colors)} colorings exact vs brute force -> OK")
+PY
 
 echo "== smoke: batched engine vs per-coloring loop (+ rmat8k cliff row) =="
 python -m benchmarks.bench_counting --quick

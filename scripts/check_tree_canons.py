@@ -1,0 +1,83 @@
+"""Guard: the tree-template compilation route is frozen.
+
+Computes a SHA-256 digest over the canonical stage sequences
+(:func:`repro.plan.ir.template_canon_sequence`) of every paper tree
+template and compares it against the committed digest in
+``scripts/tree_canons.sha256``.  The canon sequence IS the schedule
+identity (plan equality and the engine cache key both reduce to it), so
+any refactor that perturbs how trees compile — e.g. the bag-stage
+generalization growing new code paths — trips this guard BEFORE counts
+can drift.
+
+Usage::
+
+    PYTHONPATH=src python scripts/check_tree_canons.py           # verify
+    PYTHONPATH=src python scripts/check_tree_canons.py --update  # re-pin
+
+Only re-pin when a tree-schedule change is intentional; note it in the
+commit message.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import os
+import sys
+
+sys.path.insert(
+    0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+)
+
+from repro.core.templates import PAPER_TEMPLATES  # noqa: E402
+from repro.plan.ir import template_canon_sequence  # noqa: E402
+
+DIGEST_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)), "tree_canons.sha256")
+
+
+def current_digest() -> str:
+    payload = []
+    for name in sorted(PAPER_TEMPLATES):
+        canons = template_canon_sequence(PAPER_TEMPLATES[name])
+        payload.append(f"{name}: {canons!r}")
+    return hashlib.sha256("\n".join(payload).encode()).hexdigest()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--update", action="store_true", help="re-pin the committed digest"
+    )
+    args = ap.parse_args(argv)
+    digest = current_digest()
+    if args.update:
+        with open(DIGEST_PATH, "w") as fh:
+            fh.write(digest + "\n")
+        print(f"tree canon digest re-pinned: {digest}")
+        return 0
+    try:
+        with open(DIGEST_PATH) as fh:
+            committed = fh.read().strip()
+    except FileNotFoundError:
+        print(
+            f"no committed digest at {DIGEST_PATH} — run with --update to pin",
+            file=sys.stderr,
+        )
+        return 1
+    if digest != committed:
+        print(
+            "tree-template canonical schedules CHANGED:\n"
+            f"  committed: {committed}\n"
+            f"  current:   {digest}\n"
+            "Tree plans must stay byte-identical across refactors; if this "
+            "change is intentional, re-pin with --update and say so in the "
+            "commit message.",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"tree canon digest OK ({len(PAPER_TEMPLATES)} templates): {digest}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

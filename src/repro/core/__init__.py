@@ -20,6 +20,7 @@ from .counting import (
     fused_aggregate_ema,
     fused_aggregate_ema_grouped,
     liveness_peak_columns,
+    liveness_peak_elements,
     normalize_count,
     schedule_liveness,
     spmm_edges,
@@ -50,10 +51,16 @@ from .graph import (
     rmat_graph,
 )
 from .templates import (
+    GRAPHLET_TEMPLATES,
     PAPER_TEMPLATES,
     Template,
     TemplatePartition,
+    TreeDecomposition,
+    build_bag_program,
+    build_tree_decomposition,
+    connected_graphlets,
     get_template,
+    graph_automorphisms,
     partition_template,
     path_template,
     random_tree_template,

@@ -35,6 +35,8 @@ __all__ = [
     "unrank_subsets",
     "SplitTable",
     "build_split_table",
+    "UnionSplitTable",
+    "build_union_split_table",
     "bucketed_split_entries",
     "colorful_probability",
 ]
@@ -155,6 +157,90 @@ def build_split_table(k: int, m: int, m_a: int) -> SplitTable:
         idx_a[:, t] = rank_subsets(sub_a).astype(np.int32)
         idx_p[:, t] = rank_subsets(sub_p).astype(np.int32)
     return SplitTable(idx_a=idx_a, idx_p=idx_p, n_out=n_out, n_splits=n_splits, k=k, m=m, m_a=m_a)
+
+
+@dataclass(frozen=True)
+class UnionSplitTable:
+    """Color-subset convolution table for a bag-join step.
+
+    A bag join multiplies two DP states whose covered vertex sets overlap
+    in exactly the join bag: color sets of sizes ``m1`` and ``m2`` sharing
+    exactly ``overlap`` colors combine into an output set of size
+    ``m = m1 + m2 - overlap``.  For every output color set ``S`` (row, in
+    colex rank order) the columns enumerate every admissible pair
+    ``(S1, S2)`` with ``S1 ∪ S2 = S``, ``|S1| = m1``, ``|S2| = m2`` and
+    ``|S1 ∩ S2| = overlap``, as colex ranks into the two input states.
+
+    Attributes:
+      idx_a: ``(n_out, n_pairs)`` int32 — ranks of ``S1`` into state 1.
+      idx_p: ``(n_out, n_pairs)`` int32 — ranks of ``S2`` into state 2.
+      n_out: ``C(k, m)`` output color sets.
+      n_pairs: pairs per output set, ``C(m, overlap) * C(m - overlap,
+        m1 - overlap)`` (uniform across rows — the join stays a dense
+        gather-FMA exactly like the eMA split tables).
+    """
+
+    idx_a: np.ndarray
+    idx_p: np.ndarray
+    n_out: int
+    n_pairs: int
+    k: int
+    m1: int
+    m2: int
+    overlap: int
+
+    @property
+    def m(self) -> int:
+        return self.m1 + self.m2 - self.overlap
+
+
+def build_union_split_table(k: int, m1: int, m2: int, overlap: int) -> UnionSplitTable:
+    """Build the join table for color sets of sizes ``m1``/``m2`` overlapping
+    in exactly ``overlap`` colors.
+
+    Each pair is generated once: pick the ``overlap`` positions of ``S`` that
+    form the intersection, then the ``m1 - overlap`` positions that belong
+    only to ``S1`` (the rest belong only to ``S2``).  Vectorized over the
+    ``C(k, m)`` output color sets like :func:`build_split_table` — the
+    combinatorial loop is only over position masks.
+
+    With ``overlap == 0`` and ``m_a = m1`` this degenerates to the disjoint
+    eMA split table (same entries as ``build_split_table(k, m, m1)``), which
+    is the treewidth-1 special case of the color-subset convolution.
+    """
+    m = m1 + m2 - overlap
+    if not (0 <= overlap <= min(m1, m2) and 0 < m1 <= k and 0 < m2 <= k and m <= k):
+        raise ValueError(
+            f"invalid union split sizes k={k} m1={m1} m2={m2} overlap={overlap}"
+        )
+    sets_m = enumerate_subsets(k, m)  # (n_out, m), colex order
+    n_out = sets_m.shape[0]
+    combos = []
+    positions = range(m)
+    for inter in itertools.combinations(positions, overlap):
+        rest = [p for p in positions if p not in inter]
+        for extra1 in itertools.combinations(rest, m1 - overlap):
+            pos1 = tuple(sorted(inter + extra1))
+            pos2 = tuple(sorted(set(positions) - set(extra1)))
+            combos.append((pos1, pos2))
+    n_pairs = len(combos)
+    idx_a = np.zeros((n_out, n_pairs), dtype=np.int32)
+    idx_p = np.zeros((n_out, n_pairs), dtype=np.int32)
+    for t, (pos1, pos2) in enumerate(combos):
+        sub1 = sets_m[:, pos1]
+        sub2 = sets_m[:, pos2]
+        idx_a[:, t] = rank_subsets(sub1).astype(np.int32)
+        idx_p[:, t] = rank_subsets(sub2).astype(np.int32)
+    return UnionSplitTable(
+        idx_a=idx_a,
+        idx_p=idx_p,
+        n_out=n_out,
+        n_pairs=n_pairs,
+        k=k,
+        m1=m1,
+        m2=m2,
+        overlap=overlap,
+    )
 
 
 def bucketed_split_entries(table: SplitTable, column_batch: int):

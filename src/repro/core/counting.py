@@ -27,9 +27,24 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .colorsets import SplitTable, binom, build_split_table, colorful_probability
+from .colorsets import (
+    SplitTable,
+    UnionSplitTable,
+    binom,
+    build_split_table,
+    build_union_split_table,
+    colorful_probability,
+)
 from .graph import Graph
-from .templates import Template, TemplatePartition, partition_template, tree_automorphisms
+from .templates import (
+    BagProgram,
+    Template,
+    TemplatePartition,
+    build_bag_program,
+    graph_automorphisms,
+    partition_template,
+    tree_automorphisms,
+)
 
 __all__ = [
     "CountingPlan",
@@ -40,6 +55,7 @@ __all__ = [
     "fused_aggregate_ema_grouped",
     "schedule_liveness",
     "liveness_peak_columns",
+    "liveness_peak_elements",
     "count_colorful_vectorized",
     "count_colorful_traversal",
     "brute_force_embeddings",
@@ -52,22 +68,43 @@ __all__ = [
 class CountingPlan:
     """Static DP schedule for one template: stages + split tables.
 
-    ``stages`` lists, in topological order, one entry per sub-template:
-    ``("leaf", None)`` or ``("ema", SplitTable)`` together with the indices of
-    the active/passive children in the M-matrix slot list.  ``last_use`` lets
-    the executor free (overwrite) M slots as soon as possible — the in-place
-    trick of Algorithm 5.
+    Tree templates carry a ``partition`` (binary sub-template recursion,
+    paper §II-C) with one optional :class:`SplitTable` per sub-template;
+    non-tree templates carry a ``bag_program`` (tree-decomposition lowering)
+    with one optional :class:`SplitTable` (extend) or
+    :class:`UnionSplitTable` (join) per bag op.  Exactly one of
+    ``partition`` / ``bag_program`` is set; executors branch on
+    ``partition is not None`` and the tree path is untouched by the bag
+    generalization.
     """
 
     template: Template
-    partition: TemplatePartition
+    partition: Optional[TemplatePartition]
     k: int
-    tables: Tuple[Optional[SplitTable], ...]  # per sub-template, None for leaves
+    tables: Tuple[object, ...]  # SplitTable | UnionSplitTable | None per stage
     automorphisms: int
+    bag_program: Optional[BagProgram] = None
+
+    @property
+    def is_tree_plan(self) -> bool:
+        return self.partition is not None
 
     @property
     def num_subs(self) -> int:
-        return len(self.partition.subs)
+        if self.partition is not None:
+            return len(self.partition.subs)
+        return len(self.bag_program.ops)
+
+    def stage_canons(self) -> Tuple[str, ...]:
+        """Canonical form per stage (sub-template or bag op), in DP order."""
+        if self.partition is not None:
+            from .templates import sub_template_canonical
+
+            return tuple(
+                sub_template_canonical(self.template, sub.vertices, sub.root)
+                for sub in self.partition.subs
+            )
+        return tuple(op.canon for op in self.bag_program.ops)
 
     def table_arrays(self) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
         return {
@@ -77,35 +114,76 @@ class CountingPlan:
         }
 
     def peak_columns(self) -> int:
-        """Max total live M columns — the memory planner's key figure."""
+        """Max total live M columns — the memory planner's key figure.
+
+        For bag plans this counts colorset columns of live states (the
+        per-state vertex-axis factor ``n^len(axes)`` is accounted for by
+        :func:`liveness_peak_elements`, which the cost model uses instead).
+        """
+        if self.partition is not None:
+            live: Dict[int, int] = {}
+            peak = 0
+            for i, sub in enumerate(self.partition.subs):
+                live[i] = binom(self.k, sub.size)
+                peak = max(peak, sum(live.values()))
+                if not sub.is_leaf:
+                    live.pop(sub.active, None)
+                    live.pop(sub.passive, None)
+            return peak
+        ops = self.bag_program.ops
+        last_read: Dict[int, int] = {}
+        for i, op in enumerate(ops):
+            for inp in op.inputs:
+                last_read[inp] = i
+        last_read[len(ops) - 1] = len(ops)
         live: Dict[int, int] = {}
         peak = 0
-        for i, sub in enumerate(self.partition.subs):
-            live[i] = binom(self.k, sub.size)
+        for i, op in enumerate(ops):
+            live[i] = binom(self.k, op.m)
             peak = max(peak, sum(live.values()))
-            if not sub.is_leaf:
-                live.pop(sub.active, None)
-                live.pop(sub.passive, None)
+            for j in list(live):
+                if last_read.get(j, -1) <= i:
+                    live.pop(j)
         return peak
 
 
 def build_counting_plan(template: Template, root: Optional[int] = None) -> CountingPlan:
-    part = partition_template(template, root)
     k = template.k
-    tables: List[Optional[SplitTable]] = []
-    for sub in part.subs:
-        if sub.is_leaf:
+    if template.is_tree:
+        part = partition_template(template, root)
+        tables: List[object] = []
+        for sub in part.subs:
+            if sub.is_leaf:
+                tables.append(None)
+            else:
+                m = sub.size
+                m_a = part.subs[sub.active].size
+                tables.append(build_split_table(k, m, m_a))
+        return CountingPlan(
+            template=template,
+            partition=part,
+            k=k,
+            tables=tuple(tables),
+            automorphisms=tree_automorphisms(template),
+        )
+    prog = build_bag_program(template)
+    tables = []
+    for op in prog.ops:
+        if op.kind == "extend":
+            tables.append(build_split_table(k, op.m, 1))
+        elif op.kind == "join":
+            o1, o2 = (prog.ops[i] for i in op.inputs)
+            overlap = len(set(o1.covered) & set(o2.covered))
+            tables.append(build_union_split_table(k, o1.m, o2.m, overlap))
+        else:  # leaf / forget
             tables.append(None)
-        else:
-            m = sub.size
-            m_a = part.subs[sub.active].size
-            tables.append(build_split_table(k, m, m_a))
     return CountingPlan(
         template=template,
-        partition=part,
+        partition=None,
         k=k,
         tables=tuple(tables),
-        automorphisms=tree_automorphisms(template),
+        automorphisms=graph_automorphisms(template),
+        bag_program=prog,
     )
 
 
@@ -317,18 +395,32 @@ def schedule_liveness(plans, canons, track_products: bool = False):
     pos = 0
     for p_idx, plan in enumerate(plans):
         pc = canons[p_idx]
-        for i, sub in enumerate(plan.partition.subs):
-            if pc[i] in executed:
-                continue
-            executed.add(pc[i])
-            if not sub.is_leaf:
-                last_read[pc[sub.active]] = pos
-                last_read[pc[sub.passive]] = pos
-                if track_products:
-                    last_read[("prod", pc[sub.passive])] = pos
+        if plan.partition is not None:
+            for i, sub in enumerate(plan.partition.subs):
+                if pc[i] in executed:
+                    continue
+                executed.add(pc[i])
+                if not sub.is_leaf:
+                    last_read[pc[sub.active]] = pos
+                    last_read[pc[sub.passive]] = pos
+                    if track_products:
+                        last_read[("prod", pc[sub.passive])] = pos
+                pos += 1
+            last_read[pc[plan.partition.root_index]] = pos
             pos += 1
-        last_read[pc[plan.partition.root_index]] = pos
-        pos += 1
+        else:
+            # Bag plans: same first-occurrence / position discipline; bag ops
+            # have no memoized aggregate products (extend SpMMs consume their
+            # input directly), so track_products adds nothing here.
+            for i, op in enumerate(plan.bag_program.ops):
+                if pc[i] in executed:
+                    continue
+                executed.add(pc[i])
+                for inp in op.inputs:
+                    last_read[pc[inp]] = pos
+                pos += 1
+            last_read[pc[len(plan.bag_program.ops) - 1]] = pos
+            pos += 1
     free_at = {}
     for key, p in last_read.items():
         free_at.setdefault(p, []).append(key)
@@ -360,16 +452,63 @@ def liveness_peak_columns(
     pos = 0
     for p_idx, plan in enumerate(plans):
         pc = canons[p_idx]
-        for i, sub in enumerate(plan.partition.subs):
+        if plan.partition is not None:
+            stage_widths = [binom(k, sub.size) for sub in plan.partition.subs]
+            stage_prod = [
+                (pc[sub.passive], binom(k, plan.partition.subs[sub.passive].size))
+                if (not sub.is_leaf and track_products)
+                else None
+                for sub in plan.partition.subs
+            ]
+        else:
+            stage_widths = [binom(k, op.m) for op in plan.bag_program.ops]
+            stage_prod = [None] * len(stage_widths)
+        for i, width in enumerate(stage_widths):
             if pc[i] in executed:
                 continue
             executed.add(pc[i])
-            live[pc[i]] = pad_cols(binom(k, sub.size))
-            if not sub.is_leaf and track_products:
-                passive = plan.partition.subs[sub.passive]
-                live.setdefault(
-                    ("prod", pc[sub.passive]), pad_cols(binom(k, passive.size))
-                )
+            live[pc[i]] = pad_cols(width)
+            if stage_prod[i] is not None:
+                prod_canon, prod_width = stage_prod[i]
+                live.setdefault(("prod", prod_canon), pad_cols(prod_width))
+            peak = max(peak, sum(live.values()))
+            for key in free_at.get(pos, ()):
+                live.pop(key, None)
+            pos += 1
+        peak = max(peak, sum(live.values()))
+        for key in free_at.get(pos, ()):
+            live.pop(key, None)
+        pos += 1
+    return peak
+
+
+def liveness_peak_elements(plans, canons, n: int) -> int:
+    """Peak live DP-state *elements* per coloring (vertex axes included).
+
+    Generalizes :func:`liveness_peak_columns` to bag plans, where a state
+    with ``r`` vertex axes holds ``n**r * C(k, m)`` elements per coloring.
+    Tree states are the ``r = 1`` case, so for pure-tree plan lists this is
+    exactly ``n * liveness_peak_columns(plans, canons)``.
+    """
+    k = plans[0].k
+    free_at = schedule_liveness(plans, canons)
+    executed = set()
+    live = {}
+    peak = 0
+    pos = 0
+    for p_idx, plan in enumerate(plans):
+        pc = canons[p_idx]
+        if plan.partition is not None:
+            stage_elems = [n * binom(k, sub.size) for sub in plan.partition.subs]
+        else:
+            stage_elems = [
+                (n ** len(op.axes)) * binom(k, op.m) for op in plan.bag_program.ops
+            ]
+        for i, elems in enumerate(stage_elems):
+            if pc[i] in executed:
+                continue
+            executed.add(pc[i])
+            live[pc[i]] = elems
             peak = max(peak, sum(live.values()))
             for key in free_at.get(pos, ()):
                 live.pop(key, None)
@@ -401,6 +540,11 @@ def count_colorful_vectorized(
     :func:`normalize_count`).
     """
     ema = ema_fn or _ema_apply
+    if plan.partition is None:
+        raise ValueError(
+            f"count_colorful_vectorized is tree-only; template "
+            f"{plan.template.name} has a bag program — use a CountingEngine"
+        )
     n = colors.shape[0]
     k = plan.k
     leaf = jax.nn.one_hot(colors, k, dtype=dtype)  # rank({c}) == c
@@ -430,6 +574,11 @@ def count_colorful_traversal(plan: CountingPlan, graph: Graph, colors: np.ndarra
     The neighbor reduction ``sum_{j in N(i)} M_p(j, I_p)`` is recomputed for
     every (output color set, split) pair — the redundancy Figure 3 points at.
     """
+    if plan.partition is None:
+        raise ValueError(
+            f"count_colorful_traversal is tree-only; template "
+            f"{plan.template.name} has a bag program — use a CountingEngine"
+        )
     n, k = graph.n, plan.k
     src, dst = graph.src, graph.dst
     leaf = np.zeros((n, k), dtype=np.float64)
@@ -525,9 +674,9 @@ def _injective_hom_count(
 
 
 def brute_force_embeddings(graph: Graph, template: Template) -> float:
-    """Exact count of non-induced embeddings of T in G."""
+    """Exact count of non-induced embeddings of T in G (any template)."""
     homs = _injective_hom_count(graph, template, lambda img: True)
-    return homs / tree_automorphisms(template)
+    return homs / graph_automorphisms(template)
 
 
 def brute_force_colorful(graph: Graph, template: Template, colors: np.ndarray) -> float:
@@ -539,7 +688,7 @@ def brute_force_colorful(graph: Graph, template: Template, colors: np.ndarray) -
         return len(set(colors[img].tolist())) == k
 
     homs = _injective_hom_count(graph, template, accept)
-    return homs / tree_automorphisms(template)
+    return homs / graph_automorphisms(template)
 
 
 def normalize_count(raw_total: jnp.ndarray, plan: CountingPlan) -> jnp.ndarray:

@@ -21,6 +21,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from .colorsets import colorful_probability
 from .counting import CountingPlan, build_counting_plan, count_colorful_vectorized, normalize_count
 from .engine import CountingEngine, EstimateResult
 from .graph import Graph
@@ -29,9 +30,19 @@ from .templates import Template
 __all__ = ["required_iterations", "EstimateResult", "estimate_embeddings", "make_count_step"]
 
 
-def required_iterations(k: int, epsilon: float, delta: float) -> int:
-    """Alon et al. iteration bound ``O(e^k log(1/delta) / eps^2)``."""
-    return int(math.ceil(math.exp(k) * math.log(1.0 / delta) / (epsilon**2)))
+def required_iterations(template_or_k, epsilon: float, delta: float) -> int:
+    """Alon et al. iteration bound ``ceil(p^-1 log(1/delta) / eps^2)``.
+
+    ``p = k!/k^k`` is the colorful-hit probability of ONE random coloring
+    for *any* k-vertex template — it depends only on the vertex count, not
+    on tree shape, so the same bound serves trees, cycles, cliques, and
+    every bag-compiled graphlet.  Accepts a :class:`Template` (its ``k`` is
+    used) or the vertex count directly.  The exact ``k^k/k!`` factor is a
+    ``sqrt(2 pi k)`` improvement over the classical ``e^k`` form.
+    """
+    k = template_or_k.k if isinstance(template_or_k, Template) else int(template_or_k)
+    inv_p = 1.0 / colorful_probability(k)
+    return int(math.ceil(inv_p * math.log(1.0 / delta) / (epsilon**2)))
 
 
 def make_count_step(
@@ -83,7 +94,8 @@ def estimate_embeddings(
     round-trip per coloring).
 
     Args:
-      graph / template: the network and the tree template to count.
+      graph / template: the network and the template to count — a tree or
+        any connected graphlet (non-trees compile via tree decomposition).
       iterations / seed: number of independent random colorings (default
         32) + PRNG seed.  With an ``epsilon``/``delta`` target,
         ``iterations`` becomes the adaptive run's budget cap instead —

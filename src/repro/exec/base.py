@@ -30,7 +30,14 @@ import jax.numpy as jnp
 
 from repro.core.colorsets import bucketed_split_entries
 
-__all__ = ["StageTables", "EngineBackend", "build_stage_tables", "make_backend"]
+__all__ = [
+    "StageTables",
+    "BagStageTables",
+    "EngineBackend",
+    "build_stage_tables",
+    "build_bag_tables",
+    "make_backend",
+]
 
 
 def make_backend(engine, **kwargs) -> "EngineBackend":
@@ -107,6 +114,8 @@ def build_stage_tables(plan, column_batch: int) -> Dict[Tuple[int, int], StageTa
     cache: Dict[Tuple[int, int, int], StageTables] = {}
     out: Dict[Tuple[int, int], StageTables] = {}
     for p_idx, cplan in enumerate(plan.counting_plans):
+        if cplan.partition is None:
+            continue  # bag plans bind through build_bag_tables
         for i, table in enumerate(cplan.tables):
             if table is None:
                 continue
@@ -129,6 +138,60 @@ def build_stage_tables(plan, column_batch: int) -> Dict[Tuple[int, int], StageTa
                             table, column_batch
                         )
                     ),
+                )
+            out[(p_idx, i)] = cache[key]
+    return out
+
+
+@dataclass(frozen=True)
+class BagStageTables:
+    """Device-resident color tables for one bag op.
+
+    ``extend`` ops carry a :class:`~repro.core.colorsets.SplitTable` with
+    ``m_a = 1`` (the new vertex's one-hot color against the input's
+    colorsets); ``join`` ops carry a
+    :class:`~repro.core.colorsets.UnionSplitTable` (color-subset
+    convolution).  Both reduce to the same gather-FMA loop over the term
+    axis, so the executor only needs ``(idx_a, idx_p, n_out, n_terms)``.
+    """
+
+    kind: str  # "extend" | "join"
+    n_out: int
+    n_terms: int
+    idx_a: jnp.ndarray  # (n_out, n_terms) int32, device
+    idx_p: jnp.ndarray  # (n_out, n_terms) int32, device
+
+
+def build_bag_tables(plan) -> Dict[Tuple[int, int], BagStageTables]:
+    """Bind every bag plan's extend/join tables to the device.
+
+    Returns ``(plan_idx, op_idx) -> BagStageTables`` for every extend and
+    join op of every bag counting plan, de-duplicated by table identity so
+    shared widths ship once (mirror of :func:`build_stage_tables` for the
+    tree family).
+    """
+    cache: Dict[Tuple, BagStageTables] = {}
+    out: Dict[Tuple[int, int], BagStageTables] = {}
+    for p_idx, cplan in enumerate(plan.counting_plans):
+        if cplan.partition is not None:
+            continue
+        for i, op in enumerate(cplan.bag_program.ops):
+            table = cplan.tables[i]
+            if table is None:
+                continue
+            if op.kind == "extend":
+                key = ("extend", table.k, table.m, table.m_a)
+                n_terms = table.n_splits
+            else:
+                key = ("join", table.k, table.m1, table.m2, table.overlap)
+                n_terms = table.n_pairs
+            if key not in cache:
+                cache[key] = BagStageTables(
+                    kind=op.kind,
+                    n_out=table.n_out,
+                    n_terms=n_terms,
+                    idx_a=jnp.asarray(table.idx_a),
+                    idx_p=jnp.asarray(table.idx_p),
                 )
             out[(p_idx, i)] = cache[key]
     return out

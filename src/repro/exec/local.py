@@ -19,7 +19,13 @@ import jax.numpy as jnp
 from repro.core.counting import fused_aggregate_ema_grouped
 from repro.core.graph import build_sell
 
-from .base import EngineBackend, StageTables, build_stage_tables
+from .base import (
+    BagStageTables,
+    EngineBackend,
+    StageTables,
+    build_bag_tables,
+    build_stage_tables,
+)
 
 __all__ = [
     "LocalBackend",
@@ -55,6 +61,12 @@ class LocalBackend(EngineBackend):
         self.stage_tables: Dict = build_stage_tables(
             engine.plan_ir, engine.column_batch
         )
+        self.bag_tables: Dict = build_bag_tables(engine.plan_ir)
+        self._bag_adj = None
+        if engine.plan_ir.has_bag_stages:
+            # Edge masks of bag-extend steps multiply by A[u_w, u_x]; the
+            # dense adjacency broadcasts scatter-free against any state rank.
+            self._bag_adj = jnp.asarray(engine.graph.dense_adjacency())
 
     def spmm(self, m: jnp.ndarray) -> jnp.ndarray:
         """One neighbor reduction over a fused ``(n, B, c)`` column slice
@@ -87,7 +99,9 @@ class LocalBackend(EngineBackend):
         (Algorithm 5's in-place storage), and stages reading the same
         passive canonical form execute as one plan exec group — the
         group's passive column-batch sweep aggregates each slice once for
-        all of them.
+        all of them.  Bag plans (non-tree templates) walk their bag
+        programs through the same slot/liveness discipline; single-axis
+        bag states share slots with tree stages whenever canons agree.
         """
         eng = self.engine
         ir = eng.plan_ir
@@ -100,6 +114,30 @@ class LocalBackend(EngineBackend):
         pos = 0
         for p_idx, cplan in enumerate(ir.counting_plans):
             canons = ir.canons[p_idx]
+            if cplan.partition is None:
+                ops = cplan.bag_program.ops
+                for i, op in enumerate(ops):
+                    key = canons[i]
+                    if key in executed:
+                        continue
+                    executed.add(key)
+                    if op.kind == "leaf":
+                        slots[key] = leaf
+                    elif key not in slots:
+                        slots[key] = self._run_bag_op(
+                            cplan, canons, p_idx, i, op, leaf, slots
+                        ).astype(pol.store_dtype)
+                    for dead in free_at.get(pos, ()):
+                        slots.pop(dead, None)
+                    pos += 1
+                # final op has no vertex axes: state is (B, 1) — the single
+                # C(k, k) colorset column holds the full colorful total
+                root = slots[canons[len(ops) - 1]].astype(pol.accum_dtype)
+                totals.append(root.sum(axis=-1).astype(jnp.float32))
+                for dead in free_at.get(pos, ()):
+                    slots.pop(dead, None)
+                pos += 1
+                continue
             for i, sub in enumerate(cplan.partition.subs):
                 key = canons[i]
                 if key in executed:
@@ -138,6 +176,114 @@ class LocalBackend(EngineBackend):
                 slots.pop(dead, None)
             pos += 1
         return jnp.stack(totals, axis=1)  # (B, T)
+
+    # -- bag-program execution ------------------------------------------------
+
+    def _run_bag_op(self, cplan, canons, p_idx, i, op, leaf, slots) -> jnp.ndarray:
+        """Execute one extend / forget / join bag op on the fused layout.
+
+        States are ``(n,)*r + (B, C)`` tensors — vertex axes (sorted by
+        template vertex id) in front of the tree family's fused ``(B, C)``
+        tail, so single-axis states are layout-identical to tree states.
+        """
+        if op.kind == "extend":
+            return self._bag_extend(cplan, canons, p_idx, i, op, leaf, slots)
+        if op.kind == "forget":
+            in_op = cplan.bag_program.ops[op.inputs[0]]
+            state = slots[canons[op.inputs[0]]]
+            return self._bag_forget(state, list(in_op.axes), op.forget_vertices)[0]
+        if op.kind == "join":
+            return self._bag_join(canons, p_idx, i, op, slots)
+        raise ValueError(f"unknown bag op kind {op.kind!r}")
+
+    @staticmethod
+    def _bag_forget(state, axes_now, forget_vertices):
+        for x in forget_vertices:
+            ax = axes_now.index(x)
+            state = state.sum(axis=ax)
+            axes_now.pop(ax)
+        return state, axes_now
+
+    def _bag_extend(self, cplan, canons, p_idx, i, op, leaf, slots) -> jnp.ndarray:
+        eng = self.engine
+        pol = eng.policy
+        n = eng.graph.n
+        tables: BagStageTables = self.bag_tables[(p_idx, i)]
+        in_op = cplan.bag_program.ops[op.inputs[0]]
+        state = slots[canons[op.inputs[0]]]
+        axes_now = list(in_op.axes)
+        w = op.vertex
+        if op.spmm_vertex is not None:
+            # Contract the eliminated axis through the adjacency: apply edge
+            # (spmm_vertex, w) with the backend's neighbor reduction (the
+            # state is flattened to the (n, B', C) layout spmm expects).
+            ax = axes_now.index(op.spmm_vertex)
+            state = jnp.moveaxis(state, ax, 0)
+            rest = state.shape[1:]
+            flat = state.reshape(n, -1, state.shape[-1])
+            state = self._spmm_counted(flat).reshape((n,) + rest)
+            axes_now.pop(ax)
+            axes_now = [w] + axes_now
+        else:
+            # Broadcast introduction: the new vertex has no eliminated
+            # neighbor; its edges (if any) arrive as masks below.
+            state = jnp.broadcast_to(state[None, ...], (n,) + state.shape)
+            axes_now = [w] + axes_now
+        for x in op.mask_vertices:
+            ax = axes_now.index(x)
+            mask = self._bag_adj.reshape(
+                (n,) + (1,) * (ax - 1) + (n,) + (1,) * (state.ndim - 1 - ax)
+            )
+            state = state * mask.astype(state.dtype)
+        # Colorset update against the new vertex's one-hot leaf:
+        # SplitTable(k, m, 1) — exactly the tree eMA with a width-1 active.
+        accum = pol.accum_dtype
+        r = state.ndim
+        idx_a, idx_p = tables.idx_a, tables.idx_p
+
+        def body(t, acc):
+            ia = jax.lax.dynamic_index_in_dim(idx_a, t, axis=1, keepdims=False)
+            ip = jax.lax.dynamic_index_in_dim(idx_p, t, axis=1, keepdims=False)
+            la = jnp.take(leaf, ia, axis=2).astype(accum)  # (n, B, n_out)
+            la = la.reshape((n,) + (1,) * (r - 3) + la.shape[1:])
+            gp = jnp.take(state, ip, axis=-1).astype(accum)
+            return acc + la * gp
+
+        out = jax.lax.fori_loop(
+            0,
+            tables.n_terms,
+            body,
+            jnp.zeros(state.shape[:-1] + (tables.n_out,), accum),
+        )
+        out, axes_now = self._bag_forget(out, axes_now, op.forget_vertices)
+        # Restore sorted-axis order (the new vertex axis sits in front).
+        order = sorted(range(len(axes_now)), key=lambda idx: axes_now[idx])
+        if order != list(range(len(axes_now))):
+            perm = order + list(range(len(axes_now), out.ndim))
+            out = jnp.transpose(out, perm)
+        return out
+
+    def _bag_join(self, canons, p_idx, i, op, slots) -> jnp.ndarray:
+        pol = self.engine.policy
+        tables: BagStageTables = self.bag_tables[(p_idx, i)]
+        s1 = slots[canons[op.inputs[0]]]
+        s2 = slots[canons[op.inputs[1]]]
+        accum = pol.accum_dtype
+        idx_a, idx_p = tables.idx_a, tables.idx_p
+
+        def body(t, acc):
+            ia = jax.lax.dynamic_index_in_dim(idx_a, t, axis=1, keepdims=False)
+            ip = jax.lax.dynamic_index_in_dim(idx_p, t, axis=1, keepdims=False)
+            g1 = jnp.take(s1, ia, axis=-1).astype(accum)
+            g2 = jnp.take(s2, ip, axis=-1).astype(accum)
+            return acc + g1 * g2
+
+        return jax.lax.fori_loop(
+            0,
+            tables.n_terms,
+            body,
+            jnp.zeros(s1.shape[:-1] + (tables.n_out,), accum),
+        )
 
 
 class EdgesBackend(LocalBackend):

@@ -54,6 +54,12 @@ class MeshBackend(EngineBackend):
         balance_degrees: bool = False,
     ):
         super().__init__(engine)
+        if engine.plan_ir.has_bag_stages:
+            raise NotImplementedError(
+                "backend='mesh' does not execute bag (non-tree) plans yet — "
+                "multi-axis bag states need a 2-D sharding story; use a "
+                "local backend for non-tree templates"
+            )
         if mesh is None:
             raise ValueError("backend='mesh' needs a jax.sharding.Mesh (mesh=...)")
         from repro.core.distributed import make_batched_count_fn, shard_graph

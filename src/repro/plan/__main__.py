@@ -12,8 +12,16 @@ Examples::
     python -m repro.plan path6 star6 bintree6 u6
     python -m repro.plan u7 --graph rmat:2048:20000:1
     python -m repro.plan u6 --graph grid:30:30 --backend ell --dtype bf16
+    python -m repro.plan --template triangle --template square --graph er:500:2000
 
-Graph specs: ``rmat:N:E[:SEED]``, ``er:N:P[:SEED]``, ``grid:R:C``.
+Non-tree templates (triangle, square, diamond, clique4, ...) print their
+bag schedule — tree-decomposition ops (extend/forget/join), live axes,
+decomposition width — alongside the same liveness and cost verdicts.
+
+Templates of different vertex counts cannot share colorings, so the CLI
+groups them by ``k`` and prints one plan (and one cost verdict) per group.
+
+Graph specs: ``rmat:N:E[:SEED]``, ``er:N:E[:SEED]``, ``grid:R:C``.
 """
 
 from __future__ import annotations
@@ -36,11 +44,11 @@ def _parse_graph(spec: str):
             seed = int(parts[3]) if len(parts) > 3 else 0
             return rmat_graph(n, e, seed=seed), f"rmat(n={n}, edges={e}, seed={seed})"
         if kind == "er":
-            n, p = int(parts[1]), float(parts[2])
+            n, e = int(parts[1]), int(parts[2])
             seed = int(parts[3]) if len(parts) > 3 else 0
             return (
-                erdos_renyi_graph(n, p, seed=seed),
-                f"erdos-renyi(n={n}, p={p}, seed={seed})",
+                erdos_renyi_graph(n, e, seed=seed),
+                f"erdos-renyi(n={n}, edges={e}, seed={seed})",
             )
         if kind == "grid":
             r, c = int(parts[1]), int(parts[2])
@@ -76,12 +84,67 @@ def _print_plan(plan) -> None:
         f"stage (a+p+out): {d['max_stage_columns']} cols"
     )
     print(f"  split tables (k, m, m_a): {d['table_keys'] or '-'}")
+    if d.get("bag_stages"):
+        widths = ", ".join(
+            f"{name}={w}" for name, w in d["decomposition_widths"].items()
+        )
+        print(
+            f"  bag stages: {d['bag_stages']} (max live axes "
+            f"{d['max_bag_axes']}) | decomposition widths: {widths}"
+        )
+        print(
+            f"  join tables (k, m1, m2, overlap): {d['join_table_keys'] or '-'}"
+        )
 
     print("\n  pos  stage        kind  cols  active+passive -> out          frees")
     by_pos = {s.position: s for s in plan.stages}
     tmpl_names = [t.name for t in plan.templates]
     pos = 0
     for p_idx, cplan in enumerate(plan.counting_plans):
+        if cplan.partition is None:
+            ops = cplan.bag_program.ops
+            for i, op in enumerate(ops):
+                s = by_pos.get(pos)
+                if s is None or (s.plan_idx, s.sub_idx) != (p_idx, i):
+                    continue  # duplicate canon: executed earlier, no position
+                frees = ",".join(plan.free_at.get(pos, ())) or "-"
+                label = f"{tmpl_names[p_idx]}[{i}]"
+                axes = ",".join(map(str, op.axes)) or "-"
+                if op.kind == "leaf":
+                    body = f"leaf  {s.columns:4d}  {'one-hot coloring':28s}"
+                else:
+                    bits = [f"axes[{axes}]"]
+                    if op.kind == "extend":
+                        bits.append(f"+v{op.vertex}")
+                        if op.spmm_vertex is not None:
+                            bits.append(f"spmm(v{op.spmm_vertex})")
+                        if op.mask_vertices:
+                            bits.append(
+                                "mask("
+                                + ",".join(f"v{v}" for v in op.mask_vertices)
+                                + ")"
+                            )
+                    elif op.kind == "join":
+                        bits.append("color-conv")
+                    if op.forget_vertices:
+                        bits.append(
+                            "fgt("
+                            + ",".join(f"v{v}" for v in op.forget_vertices)
+                            + ")"
+                        )
+                    kind = {"extend": "ext ", "join": "join", "forget": "fgt "}[
+                        op.kind
+                    ]
+                    body = f"{kind}  {s.columns:4d}  {' '.join(bits):28s}"
+                print(f"  {pos:3d}  {label:11s}  {body}  {frees}")
+                pos += 1
+            frees = ",".join(plan.free_at.get(pos, ())) or "-"
+            print(
+                f"  {pos:3d}  {tmpl_names[p_idx]:11s}  root        "
+                f"{'sum over colors+vertices':28s}  {frees}"
+            )
+            pos += 1
+            continue
         for i, _sub in enumerate(cplan.partition.subs):
             s = by_pos.get(pos)
             if s is None or (s.plan_idx, s.sub_idx) != (p_idx, i):
@@ -121,8 +184,20 @@ def main(argv=None) -> int:
         description="Inspect the TemplatePlan IR (and, with --graph, the "
         "calibrated cost-model verdict) for a template set.",
     )
-    ap.add_argument("templates", nargs="+", help="template names (same k), e.g. u6")
-    ap.add_argument("--graph", help="rmat:N:E[:SEED] | er:N:P[:SEED] | grid:R:C")
+    ap.add_argument(
+        "templates", nargs="*", help="template names (same k), e.g. u6 or triangle"
+    )
+    ap.add_argument(
+        "--template",
+        action="append",
+        default=[],
+        dest="extra_templates",
+        metavar="NAME",
+        help="additional template (repeatable) — same namespace as the "
+        "positionals; graphlets like triangle/square/diamond compile to "
+        "bag schedules",
+    )
+    ap.add_argument("--graph", help="rmat:N:E[:SEED] | er:N:E[:SEED] | grid:R:C")
     ap.add_argument("--backend", default="auto", help="engine backend (default auto)")
     ap.add_argument("--dtype", default="fp32", help="dtype policy: fp32 | bf16")
     ap.add_argument(
@@ -132,45 +207,60 @@ def main(argv=None) -> int:
     ap.add_argument("--chunk-size", type=int, default=None)
     args = ap.parse_args(argv)
 
-    templates = [get_template(name) for name in args.templates]
-    plan = build_template_plan(templates)
-    _print_plan(plan)
+    names = list(args.templates) + list(args.extra_templates)
+    if not names:
+        ap.error("need at least one template (positional or --template)")
+    templates = [get_template(name) for name in names]
+    # templates of different k cannot share colorings — one plan per k
+    groups: dict = {}
+    for t in templates:
+        groups.setdefault(t.k, []).append(t)
 
+    graph = gdesc = None
     if args.graph:
-        from repro.core.engine import DEFAULT_MEMORY_BUDGET_BYTES, CountingEngine
-
         graph, gdesc = _parse_graph(args.graph)
-        eng = CountingEngine(
-            graph,
-            templates,
-            backend=args.backend,
-            dtype_policy=args.dtype,
-            memory_budget_bytes=args.budget or DEFAULT_MEMORY_BUDGET_BYTES,
-            column_batch=args.column_batch,
-            chunk_size=args.chunk_size,
-        )
-        d = eng.describe()
-        mem = d["memory"]
-        print(f"\nCost model on {gdesc}:")
-        print(
-            f"  backend: {d['backend']} ({d['backend_source']}: "
-            f"{d['backend_reason']})"
-        )
-        print(
-            f"  dtype: store={d['dtype_policy']['store']} "
-            f"accum={d['dtype_policy']['accum']} | column_batch={d['column_batch']}"
-        )
-        print(
-            f"  predicted bytes/coloring: {_fmt_bytes(mem['bytes_per_coloring'])} "
-            f"(resident {_fmt_bytes(mem['predicted_resident_bytes'])} + transient "
-            f"{_fmt_bytes(mem['predicted_transient_bytes'])}, fusion slack "
-            f"{mem['fusion_slack']:.4f})"
-        )
-        print(
-            f"  chunk: {d['chunk_size']} colorings under a "
-            f"{_fmt_bytes(mem['budget_bytes'])} budget -> predicted peak "
-            f"{_fmt_bytes(eng.predicted_peak_bytes())}"
-        )
+
+    for g_idx, (k, group) in enumerate(sorted(groups.items())):
+        if g_idx:
+            print("\n" + "=" * 72 + "\n")
+        plan = build_template_plan(group)
+        _print_plan(plan)
+        if graph is not None:
+            from repro.core.engine import DEFAULT_MEMORY_BUDGET_BYTES, CountingEngine
+
+            eng = CountingEngine(
+                graph,
+                group,
+                backend=args.backend,
+                dtype_policy=args.dtype,
+                memory_budget_bytes=args.budget or DEFAULT_MEMORY_BUDGET_BYTES,
+                column_batch=args.column_batch,
+                chunk_size=args.chunk_size,
+            )
+            d = eng.describe()
+            mem = d["memory"]
+            print(f"\nCost model on {gdesc}:")
+            print(
+                f"  backend: {d['backend']} ({d['backend_source']}: "
+                f"{d['backend_reason']})"
+            )
+            print(
+                f"  dtype: store={d['dtype_policy']['store']} "
+                f"accum={d['dtype_policy']['accum']} | "
+                f"column_batch={d['column_batch']}"
+            )
+            print(
+                f"  predicted bytes/coloring: "
+                f"{_fmt_bytes(mem['bytes_per_coloring'])} "
+                f"(resident {_fmt_bytes(mem['predicted_resident_bytes'])} + "
+                f"transient {_fmt_bytes(mem['predicted_transient_bytes'])}, "
+                f"fusion slack {mem['fusion_slack']:.4f})"
+            )
+            print(
+                f"  chunk: {d['chunk_size']} colorings under a "
+                f"{_fmt_bytes(mem['budget_bytes'])} budget -> predicted peak "
+                f"{_fmt_bytes(eng.predicted_peak_bytes())}"
+            )
     return 0
 
 

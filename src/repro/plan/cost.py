@@ -217,8 +217,15 @@ class CostModel:
     # -- local targets -------------------------------------------------------
 
     def resident_elements(self) -> int:
-        """Live M-matrix elements one coloring keeps resident: ``n`` rows
-        times the plan's liveness-aware peak columns."""
+        """Live DP-state elements one coloring keeps resident.
+
+        Tree-only plans: ``n`` rows times the plan's liveness-aware peak
+        columns (unchanged).  Plans with bag stages use the element-level
+        liveness peak — a bag state over ``r`` live axes is an
+        ``n**r * C(k, m)`` tensor, so the row factor is no longer uniform.
+        """
+        if getattr(self.plan, "has_bag_stages", False):
+            return self.plan.peak_elements(self.graph.n)
         return self.graph.n * self.plan.peak_columns
 
     def transient_elements(
@@ -233,23 +240,81 @@ class CostModel:
         One fused slice: the backend's gather intermediate plus the
         aggregated ``(n, column_batch)`` slice — never the full passive
         width (that is the fused pipeline's whole point).
+
+        Plans with bag stages take the max with the bag-op scratch
+        (:meth:`bag_transient_elements`) — bag-join contractions run
+        un-batched over the flattened state, so their slice can dominate.
         """
         g = self.graph
         if target in ("edges", "custom"):
-            return (g.num_directed + g.n) * column_batch
-        if target == "ell":
-            return (g.n * max(g.max_degree(), 1) + g.n) * column_batch
-        if target == "sell":
+            out = (g.num_directed + g.n) * column_batch
+        elif target == "ell":
+            out = (g.n * max(g.max_degree(), 1) + g.n) * column_batch
+        elif target == "sell":
             if sell_padded_slots is None:
                 raise ValueError("sell transient needs the built SELL geometry")
-            return (sell_padded_slots + g.n) * column_batch
-        if target == "dense":
-            return g.n * column_batch
-        if target == "blocked":
+            out = (sell_padded_slots + g.n) * column_batch
+        elif target == "dense":
+            out = g.n * column_batch
+        elif target == "blocked":
             # transposed-layout staging of one stage's operands/output; no
             # edge-wide or (n, C_p) aggregate intermediate exists
-            return g.n * self.plan.max_stage_columns
-        raise ValueError(f"unknown cost target {target!r}")
+            out = g.n * self.plan.max_stage_columns
+        else:
+            raise ValueError(f"unknown cost target {target!r}")
+        if getattr(self.plan, "has_bag_stages", False):
+            out = max(
+                out,
+                self.bag_transient_elements(
+                    target, sell_padded_slots=sell_padded_slots
+                ),
+            )
+        return out
+
+    def bag_transient_elements(
+        self, target: str, *, sell_padded_slots: Optional[int] = None
+    ) -> int:
+        """Widest per-bag-op scratch one coloring needs on ``target``.
+
+        Two shapes compete: the SpMM contraction of an ``extend`` runs the
+        backend's gather intermediate over the *flattened* trailing width
+        ``n**(r_in - 1) * C(k, m_in)`` (bag contractions are not
+        column-batched), and the color-table loop of an extend/join holds
+        two gathered operands plus the accumulator — three output-state
+        tensors of ``n**r_out * C(k, m_out)`` elements.
+        """
+        # local import: core.engine imports this module at load time
+        from repro.core.colorsets import binom
+
+        g = self.graph
+        if target in ("edges", "custom"):
+            per_col = g.num_directed + g.n
+        elif target == "ell":
+            per_col = g.n * max(g.max_degree(), 1) + g.n
+        elif target == "sell":
+            if sell_padded_slots is None:
+                raise ValueError("sell transient needs the built SELL geometry")
+            per_col = sell_padded_slots + g.n
+        elif target in ("dense", "blocked"):
+            per_col = g.n
+        else:
+            raise ValueError(f"unknown cost target {target!r}")
+        worst = 0
+        for cplan in self.plan.counting_plans:
+            if cplan.partition is not None:
+                continue
+            ops = cplan.bag_program.ops
+            for op in ops:
+                if op.kind == "leaf":
+                    continue
+                if op.kind == "extend" and op.spmm_vertex is not None:
+                    src = ops[op.inputs[0]]
+                    flat = g.n ** (len(src.axes) - 1) * binom(cplan.k, src.m)
+                    worst = max(worst, per_col * flat)
+                # gathered active/passive operands + the term accumulator
+                r_out = len(op.axes) + len(op.forget_vertices)
+                worst = max(worst, 3 * g.n**r_out * binom(cplan.k, op.m))
+        return worst
 
     # -- mesh target (per shard!) --------------------------------------------
 
@@ -294,9 +359,13 @@ class CostModel:
         return pick_chunk_size(bytes_per_coloring, memory_budget_bytes, max_chunk)
 
     def describe(self) -> Dict:
-        return {
+        out = {
             "fusion_slack": self.fusion_slack,
             "itemsize": self.itemsize,
             "peak_columns": self.plan.peak_columns,
             "resident_elements": self.resident_elements(),
         }
+        if getattr(self.plan, "has_bag_stages", False):
+            out["peak_elements"] = self.plan.peak_elements(self.graph.n)
+            out["max_bag_axes"] = self.plan.max_bag_axes
+        return out

@@ -31,10 +31,12 @@ from repro.core.counting import (
     CountingPlan,
     build_counting_plan,
     liveness_peak_columns,
+    liveness_peak_elements,
     schedule_liveness,
 )
 from repro.core.templates import (
     Template,
+    build_bag_program,
     partition_template,
     sub_template_canonical,
 )
@@ -43,27 +45,39 @@ __all__ = [
     "PlanStage",
     "TemplatePlan",
     "build_template_plan",
+    "template_canon_sequence",
     "template_set_canons",
 ]
+
+
+def template_canon_sequence(template: Template) -> Tuple[str, ...]:
+    """Canonical form per DP stage of one template's default compilation.
+
+    Trees: the rooted AHU canon of every partition sub-template.  Non-trees:
+    the bag-state canon of every bag-program op.  Matches the per-stage
+    canons :func:`build_template_plan` derives for default plans.
+    """
+    if template.is_tree:
+        return tuple(
+            sub_template_canonical(template, sub.vertices, sub.root)
+            for sub in partition_template(template).subs
+        )
+    return tuple(op.canon for op in build_bag_program(template).ops)
 
 
 def template_set_canons(
     templates: Sequence[Template],
 ) -> Tuple[Tuple[str, ...], ...]:
-    """Per-template tuple of rooted canonical forms of the DP stages.
+    """Per-template tuple of canonical forms of the DP stages.
 
     This is the template half of the engine cache key: two template sets
     with equal canon tuples produce identical DP schedules (same stages,
     same split tables, same sharing), so a compiled engine built for one
     serves the other.  Computable without building plans or split tables.
+    Covers both families — tree canons are AHU strings, bag canons carry a
+    ``"bag:"`` prefix, so the two can never alias.
     """
-    return tuple(
-        tuple(
-            sub_template_canonical(t, sub.vertices, sub.root)
-            for sub in partition_template(t).subs
-        )
-        for t in templates
-    )
+    return tuple(template_canon_sequence(t) for t in templates)
 
 
 @dataclass(frozen=True)
@@ -89,6 +103,16 @@ class PlanStage:
     active_columns: int = 0
     passive_columns: int = 0
     table_key: Optional[Tuple[int, int, int]] = None  # (k, m, m_a)
+    # Bag-stage annotations (tree stages leave these at their defaults, so
+    # tree-only plans are byte-identical to the pre-bag IR):
+    bag_kind: Optional[str] = None  # "leaf" | "extend" | "forget" | "join"
+    bag_axes: Tuple[int, ...] = ()
+    input_canons: Tuple[str, ...] = ()
+    join_table_key: Optional[Tuple[int, int, int, int]] = None  # (k, m1, m2, overlap)
+
+    @property
+    def is_bag(self) -> bool:
+        return self.bag_kind is not None
 
     @property
     def stage_columns(self) -> int:
@@ -140,6 +164,11 @@ class TemplatePlan:
     peak_columns: int
     max_passive_columns: int
     max_stage_columns: int
+    # Bag-family annotations (defaults = the tree-only values, so tree-only
+    # plans are unchanged by the generalization):
+    has_bag_stages: bool = False
+    max_bag_axes: int = 1
+    decomposition_widths: Tuple[Optional[int], ...] = ()
 
     # -- identity ------------------------------------------------------------
 
@@ -195,6 +224,12 @@ class TemplatePlan:
             track_products=track_products,
         )
 
+    def peak_elements(self, n: int) -> int:
+        """Liveness peak of live DP-state *elements* per coloring on an
+        ``n``-vertex graph.  For tree-only plans this is exactly
+        ``n * peak_columns``; bag states contribute ``n**axes * columns``."""
+        return liveness_peak_elements(self.counting_plans, self.canons, n)
+
     def table_keys(self) -> Tuple[Tuple[int, int, int], ...]:
         """Distinct split-table identities ``(k, m, m_a)`` the plan needs."""
         seen: List[Tuple[int, int, int]] = []
@@ -203,10 +238,19 @@ class TemplatePlan:
                 seen.append(s.table_key)
         return tuple(seen)
 
+    def join_table_keys(self) -> Tuple[Tuple[int, int, int, int], ...]:
+        """Distinct union-table identities ``(k, m1, m2, overlap)`` needed
+        by bag-join stages (empty for tree-only plans)."""
+        seen: List[Tuple[int, int, int, int]] = []
+        for s in self.stages:
+            if s.join_table_key is not None and s.join_table_key not in seen:
+                seen.append(s.join_table_key)
+        return tuple(seen)
+
     def describe(self) -> Dict:
         """Structured summary (the CLI and ``CountingEngine.describe()``
         both render from this)."""
-        return {
+        out = {
             "k": self.k,
             "templates": [t.name for t in self.templates],
             "stages": len(self.stages),
@@ -222,6 +266,16 @@ class TemplatePlan:
             "max_stage_columns": self.max_stage_columns,
             "table_keys": [list(tk) for tk in self.table_keys()],
         }
+        if self.has_bag_stages:
+            out["bag_stages"] = sum(1 for s in self.stages if s.is_bag)
+            out["max_bag_axes"] = self.max_bag_axes
+            out["decomposition_widths"] = {
+                t.name: w
+                for t, w in zip(self.templates, self.decomposition_widths)
+                if w is not None
+            }
+            out["join_table_keys"] = [list(tk) for tk in self.join_table_keys()]
+        return out
 
 
 def _build_shared_passive_groups(
@@ -247,7 +301,12 @@ def _build_shared_passive_groups(
     seq: List[Tuple[int, int, str]] = []  # first occurrences, exec order
     seen = set()
     for p_idx, plan in enumerate(counting_plans):
-        for i, _ in enumerate(plan.partition.subs):
+        n_stages = (
+            len(plan.partition.subs)
+            if plan.partition is not None
+            else len(plan.bag_program.ops)
+        )
+        for i in range(n_stages):
             c = canons[p_idx][i]
             if c in seen:
                 continue
@@ -262,6 +321,11 @@ def _build_shared_passive_groups(
     groups: Dict[Tuple[int, int], Tuple[Tuple[int, int], ...]] = {}
     member: set = set()
     for idx, (p_idx, i, _) in enumerate(seq):
+        if counting_plans[p_idx].partition is None:
+            # Bag ops never lead a shared-passive group (their SpMM runs on
+            # one axis of a multi-axis state, not a passive column sweep);
+            # they still occupy `seq` so their canons gate availability.
+            continue
         sub = counting_plans[p_idx].partition.subs[i]
         if sub.is_leaf or (p_idx, i) in member:
             continue
@@ -269,6 +333,8 @@ def _build_shared_passive_groups(
         members = [(p_idx, i)]
         for jdx in range(idx + 1, len(seq)):
             q, j, _ = seq[jdx]
+            if counting_plans[q].partition is None:
+                continue
             sub2 = counting_plans[q].partition.subs[j]
             if sub2.is_leaf or (q, j) in member:
                 continue
@@ -314,11 +380,7 @@ def build_template_plan(
         counting_plans = tuple(plans)
 
     canons: Tuple[Tuple[str, ...], ...] = tuple(
-        tuple(
-            sub_template_canonical(plan.template, sub.vertices, sub.root)
-            for sub in plan.partition.subs
-        )
-        for plan in counting_plans
+        plan.stage_canons() for plan in counting_plans
     )
 
     # first-occurrence schedule with width annotations (positions shared
@@ -327,49 +389,84 @@ def build_template_plan(
     executed = set()
     max_passive = 1
     max_stage = 1
+    max_bag_axes = 1
     pos = 0
     for p_idx, plan in enumerate(counting_plans):
         pc = canons[p_idx]
-        for i, sub in enumerate(plan.partition.subs):
-            if pc[i] in executed:
-                continue
-            executed.add(pc[i])
-            if sub.is_leaf:
+        if plan.partition is not None:
+            for i, sub in enumerate(plan.partition.subs):
+                if pc[i] in executed:
+                    continue
+                executed.add(pc[i])
+                if sub.is_leaf:
+                    stages.append(
+                        PlanStage(
+                            plan_idx=p_idx,
+                            sub_idx=i,
+                            position=pos,
+                            canon=pc[i],
+                            is_leaf=True,
+                            size=1,
+                            columns=k,
+                        )
+                    )
+                else:
+                    active = plan.partition.subs[sub.active]
+                    passive = plan.partition.subs[sub.passive]
+                    c_a = binom(k, active.size)
+                    c_p = binom(k, passive.size)
+                    stage = PlanStage(
+                        plan_idx=p_idx,
+                        sub_idx=i,
+                        position=pos,
+                        canon=pc[i],
+                        is_leaf=False,
+                        size=sub.size,
+                        columns=binom(k, sub.size),
+                        active_canon=pc[sub.active],
+                        passive_canon=pc[sub.passive],
+                        active_columns=c_a,
+                        passive_columns=c_p,
+                        table_key=(k, sub.size, active.size),
+                    )
+                    stages.append(stage)
+                    max_passive = max(max_passive, c_p)
+                    max_stage = max(max_stage, stage.stage_columns)
+                pos += 1
+            pos += 1  # the plan's root read
+        else:
+            prog = plan.bag_program
+            for i, op in enumerate(prog.ops):
+                if pc[i] in executed:
+                    continue
+                executed.add(pc[i])
+                table_key = (k, op.m, 1) if op.kind == "extend" else None
+                join_key = None
+                if op.kind == "join":
+                    o1, o2 = prog.ops[op.inputs[0]], prog.ops[op.inputs[1]]
+                    overlap = len(set(o1.covered) & set(o2.covered))
+                    join_key = (k, o1.m, o2.m, overlap)
                 stages.append(
                     PlanStage(
                         plan_idx=p_idx,
                         sub_idx=i,
                         position=pos,
                         canon=pc[i],
-                        is_leaf=True,
-                        size=1,
-                        columns=k,
+                        is_leaf=op.kind == "leaf",
+                        size=op.m,
+                        columns=k if op.kind == "leaf" else binom(k, op.m),
+                        table_key=table_key,
+                        bag_kind=op.kind,
+                        bag_axes=op.axes,
+                        input_canons=tuple(pc[j] for j in op.inputs),
+                        join_table_key=join_key,
                     )
                 )
-            else:
-                active = plan.partition.subs[sub.active]
-                passive = plan.partition.subs[sub.passive]
-                c_a = binom(k, active.size)
-                c_p = binom(k, passive.size)
-                stage = PlanStage(
-                    plan_idx=p_idx,
-                    sub_idx=i,
-                    position=pos,
-                    canon=pc[i],
-                    is_leaf=False,
-                    size=sub.size,
-                    columns=binom(k, sub.size),
-                    active_canon=pc[sub.active],
-                    passive_canon=pc[sub.passive],
-                    active_columns=c_a,
-                    passive_columns=c_p,
-                    table_key=(k, sub.size, active.size),
+                max_bag_axes = max(
+                    max_bag_axes, len(op.axes) + len(op.forget_vertices)
                 )
-                stages.append(stage)
-                max_passive = max(max_passive, c_p)
-                max_stage = max(max_stage, stage.stage_columns)
-            pos += 1
-        pos += 1  # the plan's root read
+                pos += 1
+            pos += 1  # the plan's root read
 
     free_at = {
         p: tuple(keys)
@@ -394,4 +491,10 @@ def build_template_plan(
         peak_columns=liveness_peak_columns(counting_plans, canons),
         max_passive_columns=max_passive,
         max_stage_columns=max_stage,
+        has_bag_stages=any(p.partition is None for p in counting_plans),
+        max_bag_axes=max_bag_axes,
+        decomposition_widths=tuple(
+            p.bag_program.width if p.partition is None else None
+            for p in counting_plans
+        ),
     )

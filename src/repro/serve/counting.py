@@ -49,8 +49,9 @@ from repro.core.engine import (
     CountingEngine,
     engine_cache_key,
 )
+from repro.core.estimator import required_iterations
 from repro.core.graph import Graph
-from repro.core.templates import Template, get_template
+from repro.core.templates import Template, connected_graphlets, get_template
 
 from .cache import EngineCache
 from .stopping import DEFAULT_MIN_ITERATIONS, AdaptiveStopper, TemplateCI
@@ -226,7 +227,16 @@ class CountingService:
         graph = self.graph(graph_ref)
         tset = self._resolve_templates(templates)
         if epsilon is not None:
-            budget = int(iterations) if iterations else self.default_budget
+            if iterations:
+                budget = int(iterations)
+            else:
+                # never budget past the a-priori Alon bound — it is generic
+                # over k-vertex templates (k!/k^k colorful-hit probability),
+                # so non-tree graphlet queries get the same default cap
+                blind = required_iterations(
+                    max(t.k for t in tset), epsilon, delta
+                )
+                budget = min(self.default_budget, blind)
         else:
             budget = int(iterations) if iterations else DEFAULT_FIXED_ITERATIONS
         key = engine_cache_key(
@@ -383,6 +393,45 @@ class CountingService:
         q = self.submit(graph_ref, templates, **submit_kwargs)
         self.run()
         return q.result()
+
+    def graphlet_profile(
+        self,
+        graph_ref: str,
+        max_size: int = 5,
+        *,
+        min_size: int = 3,
+        run: bool = True,
+        **submit_kwargs,
+    ) -> Union[Dict[str, QueryEstimate], List[Query]]:
+        """Estimate counts of EVERY connected graphlet up to ``max_size``.
+
+        First-class motif/graphlet-profile queries: one submission covers
+        all connected templates of each size ``min_size <= k <= max_size``
+        (:func:`repro.core.templates.connected_graphlets` — 2, 6, and 21
+        shapes for k = 3, 4, 5).  Templates of one size share one query —
+        and therefore one engine, one set of colorings, and the plan
+        layer's canonical sub-plan sharing (trees ride the fused tree
+        pipeline, non-trees the bag pipeline, duplicated stage canons
+        de-duplicated within the shared schedule).  Different sizes need
+        different colorings, so they become separate queries served
+        round-robin by the same admission loop.
+
+        With ``run=True`` (default) drains the loop and returns
+        ``{template name: QueryEstimate}``; with ``run=False`` returns the
+        queued :class:`Query` handles (drive them with :meth:`run`, e.g.
+        to interleave with other tenants).  ``submit_kwargs`` are forwarded
+        to every :meth:`submit` (epsilon/delta/iterations/seed/...).
+        """
+        if min_size > max_size:
+            raise ValueError(f"min_size {min_size} > max_size {max_size}")
+        queries = [
+            self.submit(graph_ref, connected_graphlets(k), **submit_kwargs)
+            for k in range(min_size, max_size + 1)
+        ]
+        if not run:
+            return queries
+        self.run()
+        return {est.template: est for q in queries for est in q.result()}
 
     # ------------------------------------------------------------------
     # Observability

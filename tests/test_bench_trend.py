@@ -1,0 +1,56 @@
+"""The benchmark harness's trend diff must tolerate imperfect history.
+
+``benchmarks/run.py`` diffs this run's rows against the committed
+``BENCH_counting.json``: newly-introduced row keys (a bench module grew
+rows, e.g. the non-tree template-scaling entries) and unparsable previous
+values (hand-edited files, schema drift) must both degrade to "new row",
+never crash the run.
+"""
+
+import sys
+
+import benchmarks.run as bench_run
+from benchmarks.common import ROWS
+
+
+def _with_rows(monkeypatch, rows):
+    monkeypatch.setattr(bench_run, "ROWS", rows)
+
+
+def test_trend_tolerates_new_row_keys(monkeypatch, capsys):
+    _with_rows(
+        monkeypatch,
+        [("old/row", 10.0, ""), ("brand/new/row", 5.0, "")],
+    )
+    prev = {"old/row": {"name": "old/row", "us_per_call": 10.0, "derived": ""}}
+    regressions = bench_run.print_trend(prev)
+    err = capsys.readouterr().err
+    assert regressions == 0
+    assert "brand/new/row" in err
+    assert "1 new row(s)" in err
+
+
+def test_trend_tolerates_unparsable_previous_values(monkeypatch, capsys):
+    _with_rows(monkeypatch, [("weird/row", 7.0, ""), ("none/row", 3.0, "")])
+    prev = {
+        "weird/row": {"name": "weird/row", "us_per_call": "not-a-number"},
+        "none/row": {"name": "none/row"},  # us_per_call key absent entirely
+    }
+    regressions = bench_run.print_trend(prev)
+    err = capsys.readouterr().err
+    assert regressions == 0
+    assert "2 new row(s)" in err
+
+
+def test_trend_still_flags_regressions(monkeypatch, capsys):
+    _with_rows(monkeypatch, [("slow/row", 100.0, "")])
+    prev = {"slow/row": {"name": "slow/row", "us_per_call": 10.0}}
+    assert bench_run.print_trend(prev) == 1
+    assert "REGRESSION" in capsys.readouterr().err
+
+
+def test_trend_zero_baseline_is_not_a_regression(monkeypatch, capsys):
+    _with_rows(monkeypatch, [("derived/row", 4.0, "")])
+    prev = {"derived/row": {"name": "derived/row", "us_per_call": 0.0}}
+    assert bench_run.print_trend(prev) == 0
+    assert "n/a" in capsys.readouterr().err

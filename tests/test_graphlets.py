@@ -1,0 +1,308 @@
+"""Non-tree (bag-compiled) template counting, pinned against an oracle.
+
+The bag pipeline's correctness contract, checked end to end:
+
+* an INDEPENDENT brute-force oracle (ordered-tuple enumeration over vertex
+  permutations — no code shared with ``repro.core.counting``) must agree
+  per-coloring and bit-tight with the engine's raw colorful totals for
+  triangle / square / diamond / cliques / 5-graphlets on small random
+  graphs, across the ``edges`` and ``sell`` backends;
+* plan equality implies engine-cache-key equality across BOTH plan
+  families (label-permuted graphlets share one schedule);
+* tree decompositions satisfy the textbook properties (vertex/edge cover,
+  running intersection, width floors);
+* the graphlet-profile service query runs warm with zero new traces;
+* ``required_iterations`` is generic over k-vertex templates (k!/k^k).
+"""
+
+import itertools
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.counting import brute_force_colorful, build_counting_plan
+from repro.core.engine import CountingEngine, engine_cache_key
+from repro.core.estimator import required_iterations
+from repro.core.graph import erdos_renyi_graph
+from repro.core.templates import (
+    Template,
+    build_bag_program,
+    build_tree_decomposition,
+    connected_graphlets,
+    get_template,
+    graph_automorphisms,
+)
+from repro.plan.ir import build_template_plan
+
+# ---------------------------------------------------------------------------
+# The oracle: ordered-tuple enumeration, independent of repro.core.counting
+# ---------------------------------------------------------------------------
+
+
+def oracle_colorful_injective(graph, template, colors) -> int:
+    """# injective colorful homomorphisms = |Aut| * colorful embeddings.
+
+    Enumerates every ordered k-tuple of distinct vertices and checks all
+    template edges plus colorfulness directly — O(n^k), fine for n <= 9.
+    """
+    k = template.k
+    adj = set()
+    for u, v in zip(graph.src, graph.dst):
+        adj.add((int(u), int(v)))
+    count = 0
+    for tup in itertools.permutations(range(graph.n), k):
+        if len({int(colors[v]) for v in tup}) != k:
+            continue
+        if all((tup[a], tup[b]) in adj for a, b in template.edges):
+            count += 1
+    return count
+
+
+GRAPHS = [
+    erdos_renyi_graph(7, 16, seed=1),
+    erdos_renyi_graph(8, 22, seed=2),
+    erdos_renyi_graph(9, 30, seed=5),
+]
+
+NON_TREE_NAMES = ["triangle", "square", "diamond", "clique4"]
+FIVE_GRAPHLETS = [t for t in connected_graphlets(5) if not t.is_tree][:4]
+
+
+# ---------------------------------------------------------------------------
+# Golden per-coloring equality: engine == oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", NON_TREE_NAMES)
+@pytest.mark.parametrize("backend", ["edges", "sell"])
+def test_engine_matches_oracle_per_coloring(name, backend):
+    t = get_template(name)
+    rng = np.random.default_rng(11)
+    hits = 0
+    for g in GRAPHS:
+        eng = CountingEngine(g, t, backend=backend)
+        colors = rng.integers(0, t.k, size=(6, g.n))
+        raw = np.asarray(eng.backend_impl.counts_for_colors(jnp.asarray(colors)))
+        for b in range(colors.shape[0]):
+            exact = oracle_colorful_injective(g, t, colors[b])
+            assert raw[b, 0] == pytest.approx(exact, rel=1e-5, abs=1e-5)
+            hits += exact > 0
+    assert hits > 0, "test graphs too sparse — no colorful hit exercised"
+
+
+@pytest.mark.parametrize("template", FIVE_GRAPHLETS, ids=lambda t: t.name)
+def test_five_graphlets_match_oracle(template):
+    rng = np.random.default_rng(13)
+    g = GRAPHS[2]
+    eng = CountingEngine(g, template, backend="edges")
+    colors = rng.integers(0, 5, size=(8, g.n))
+    raw = np.asarray(eng.backend_impl.counts_for_colors(jnp.asarray(colors)))
+    for b in range(colors.shape[0]):
+        exact = oracle_colorful_injective(g, template, colors[b])
+        assert raw[b, 0] == pytest.approx(exact, rel=1e-5, abs=1e-5)
+
+
+def test_oracle_agrees_with_core_brute_force():
+    """The in-repo brute force (used by other suites) matches the
+    independent oracle through the |Aut| normalization."""
+    rng = np.random.default_rng(3)
+    for name in NON_TREE_NAMES:
+        t = get_template(name)
+        g = GRAPHS[0]
+        colors = rng.integers(0, t.k, size=g.n)
+        assert oracle_colorful_injective(g, t, colors) == pytest.approx(
+            brute_force_colorful(g, t, colors) * graph_automorphisms(t)
+        )
+
+
+def test_mixed_tree_and_bag_one_engine():
+    """One engine serving a tree and a non-tree of the same k (the
+    graphlet-profile shape): both columns match the oracle."""
+    g = GRAPHS[1]
+    path3, tri = get_template("u3"), get_template("triangle")
+    eng = CountingEngine(g, [path3, tri], backend="edges")
+    rng = np.random.default_rng(7)
+    colors = rng.integers(0, 3, size=(6, g.n))
+    raw = np.asarray(eng.backend_impl.counts_for_colors(jnp.asarray(colors)))
+    for b in range(colors.shape[0]):
+        assert raw[b, 0] == pytest.approx(
+            oracle_colorful_injective(g, path3, colors[b]), rel=1e-5
+        )
+        assert raw[b, 1] == pytest.approx(
+            oracle_colorful_injective(g, tri, colors[b]), rel=1e-5
+        )
+
+
+# ---------------------------------------------------------------------------
+# Template / decomposition structure
+# ---------------------------------------------------------------------------
+
+
+def test_connected_graphlet_counts():
+    assert [len(connected_graphlets(k)) for k in (2, 3, 4, 5)] == [1, 2, 6, 21]
+
+
+def test_connected_graphlets_valid_and_distinct():
+    for k in (3, 4, 5):
+        ts = connected_graphlets(k)
+        for t in ts:
+            t.validate()
+            assert t.k == k
+        assert len({t.edge_set() for t in ts}) == len(ts)
+
+
+@pytest.mark.parametrize(
+    "name,width",
+    [("triangle", 2), ("square", 2), ("diamond", 2), ("clique4", 3), ("clique5", 4)],
+)
+def test_decomposition_width(name, width):
+    assert build_tree_decomposition(get_template(name)).width == width
+
+
+def test_decomposition_textbook_properties():
+    for t in connected_graphlets(5):
+        dec = build_tree_decomposition(t)
+        # vertex + edge cover
+        assert set().union(*dec.bags) == set(range(t.k))
+        for u, v in t.edges:
+            assert any(u in b and v in b for b in dec.bags)
+        # running intersection: bags containing v form a connected subtree
+        for v in range(t.k):
+            holding = [i for i, b in enumerate(dec.bags) if v in b]
+            seen = {holding[0]}
+            frontier = [holding[0]]
+            holding_set = set(holding)
+            while frontier:
+                i = frontier.pop()
+                for j in holding:
+                    if j in seen:
+                        continue
+                    if dec.parent[j] == i or dec.parent[i] == j:
+                        seen.add(j)
+                        frontier.append(j)
+            assert seen == holding_set, (t.name, v)
+
+
+def test_tree_bag_program_shares_ahu_canons():
+    """A tree compiled through the BAG route yields single-axis states
+    whose canons are the same AHU strings the tree pipeline uses — the
+    cross-family sharing hook."""
+    t = get_template("u5-1")
+    prog = build_bag_program(t)
+    assert prog.width == 1
+    assert all(len(op.axes) <= 1 for op in prog.ops)
+    for op in prog.ops:
+        if op.axes:
+            assert op.canon.startswith("("), op.canon  # AHU, not "bag:"
+
+
+# ---------------------------------------------------------------------------
+# Plan identity across families
+# ---------------------------------------------------------------------------
+
+
+def _relabel(template: Template, perm, name: str) -> Template:
+    return Template(
+        name=name, edges=tuple((perm[u], perm[v]) for u, v in template.edges)
+    )
+
+
+def test_plan_equality_implies_cache_key_bag_family():
+    g = GRAPHS[0]
+    tri = get_template("triangle")
+    tri_p = _relabel(tri, {0: 2, 1: 0, 2: 1}, "triangle")
+    p1 = build_template_plan((tri,))
+    p2 = build_template_plan((tri_p,))
+    assert p1 == p2
+    assert engine_cache_key(g, [tri]) == engine_cache_key(g, [tri_p])
+
+
+def test_plan_equality_spans_families():
+    """Permuted diamonds agree; tree vs non-tree of equal k never do."""
+    g = GRAPHS[0]
+    dia = get_template("diamond")
+    dia_p = _relabel(dia, {0: 3, 1: 1, 2: 2, 3: 0}, "diamond")
+    assert build_template_plan((dia,)) == build_template_plan((dia_p,))
+    assert engine_cache_key(g, [dia]) == engine_cache_key(g, [dia_p])
+
+    tree4 = get_template("square")  # non-tree, k=4
+    star4 = Template(name="star4", edges=((0, 1), (0, 2), (0, 3)))
+    assert build_template_plan((tree4,)) != build_template_plan((star4,))
+    assert engine_cache_key(g, [tree4]) != engine_cache_key(g, [star4])
+
+
+def test_mesh_backend_rejects_bag_plans():
+    from repro.exec.mesh import MeshBackend  # noqa: F401 — import must work
+
+    g = GRAPHS[0]
+    with pytest.raises((NotImplementedError, ValueError)):
+        CountingEngine(g, get_template("triangle"), backend="mesh", mesh=None)
+
+
+def test_vectorized_counter_rejects_bag_plans():
+    from repro.core.counting import count_colorful_vectorized
+
+    t = get_template("triangle")
+    plan = build_counting_plan(t)
+    with pytest.raises(ValueError):
+        count_colorful_vectorized(plan, np.zeros(5, np.int32), lambda m: m)
+
+
+# ---------------------------------------------------------------------------
+# Serving: graphlet profiles + the generic iteration bound
+# ---------------------------------------------------------------------------
+
+
+def test_graphlet_profile_warm_requery_zero_traces():
+    from repro.serve.counting import CountingService
+
+    svc = CountingService(backend="edges", chunk_size=4)
+    svc.register_graph("g", GRAPHS[1])
+    prof = svc.graphlet_profile("g", 4, iterations=4)
+    assert set(prof) == {t.name for k in (3, 4) for t in connected_graphlets(k)}
+    traces = {k: svc.engine(k).trace_count for k in svc._cache.keys()}
+    prof2 = svc.graphlet_profile("g", 4, iterations=4)
+    assert {k: svc.engine(k).trace_count for k in svc._cache.keys()} == traces
+    for name in prof:
+        assert prof2[name].mean == pytest.approx(prof[name].mean)
+
+
+def test_required_iterations_generic_over_templates():
+    import math
+
+    # template and raw-k spellings agree
+    assert required_iterations(get_template("triangle"), 0.1, 0.05) == (
+        required_iterations(3, 0.1, 0.05)
+    )
+    # exact k!/k^k inverse probability, tighter than the classical e^k form
+    k, eps, delta = 5, 0.1, 0.05
+    inv_p = k**k / math.factorial(k)
+    expect = math.ceil(inv_p * math.log(1 / delta) / eps**2)
+    assert required_iterations(k, eps, delta) == expect
+    assert required_iterations(k, eps, delta) < math.ceil(
+        math.exp(k) * math.log(1 / delta) / eps**2
+    )
+
+
+def test_adaptive_budget_capped_by_blind_bound():
+    """A loose (epsilon, delta) target makes the a-priori bound SMALLER
+    than the default budget — the submit cap must follow it."""
+    from repro.serve.counting import CountingService
+
+    svc = CountingService(backend="edges", chunk_size=4)
+    svc.register_graph("g", GRAPHS[0])
+    q = svc.submit("g", "triangle", epsilon=1.0, delta=0.5)
+    blind = required_iterations(3, 1.0, 0.5)
+    assert blind < svc.default_budget
+    assert q.budget == blind
+
+
+def test_estimate_embeddings_runs_nontree():
+    from repro.core.estimator import estimate_embeddings
+
+    res = estimate_embeddings(GRAPHS[2], get_template("triangle"), iterations=6)
+    assert np.isfinite(res.mean)
+    assert res.mean >= 0
+    assert res.iterations == 6
