@@ -5,6 +5,12 @@ Rows (all merged into ``BENCH_counting.json`` for the trend diff):
 
 * ``service/<graph>/<template>/cold_query`` — first query on an empty
   service: engine construction + trace + compile + the run itself.
+  Min-of-``COLD_SAMPLES`` fresh services (each sample pays its own
+  build+compile; the min strips scheduler noise, not the compile).
+  ``--warmup`` runs one untimed throwaway cold query first so process-
+  level one-time costs (JAX backend init, dispatch caches) don't land in
+  the samples; the ``derived`` column records ``samples``/``agg``/
+  ``warmup`` so trend diffs know what they are comparing.
 * ``service/<graph>/<template>/warm_query`` — p50 latency of serial warm
   queries (cache hit, zero recompilation); ``derived`` carries p95,
   queries/sec, and the cache hit rate.
@@ -17,42 +23,59 @@ Rows (all merged into ``BENCH_counting.json`` for the trend diff):
   ``required_iterations`` bound the stopper replaces (the paper's
   practical fixed default of ~100 iterations for <1% error is the other
   yardstick).
+* ``service/<graph>/<template>/frontend_loadN`` — N queries submitted
+  concurrently by ``FRONTEND_TENANTS`` tenant threads through the async
+  ``ServiceFrontend`` (warm engine): p50 per-query latency, with p99,
+  aggregate queries/sec, and the cross-tenant fairness ratio (max/min of
+  the per-tenant mean latencies — ~1.0 when the round-robin admission is
+  fair) in ``derived``.  Also runnable alone via ``--frontend-only`` (the
+  check.sh load smoke).
 """
 
 from __future__ import annotations
 
 import argparse
 import sys
+import threading
 import time
 
 import numpy as np
 
 from repro.core import CountingEngine, get_template, rmat_graph
 from repro.core.estimator import required_iterations
-from repro.serve import CountingService
+from repro.serve import CountingService, ServiceFrontend
 
 from .common import emit_header, record
 
 WARM_QUERIES = 12
 BATCHED_QUERIES = 8
+COLD_SAMPLES = 3
 FIXED_ITERATIONS = 16
 ADAPTIVE_EPSILON = 0.01
 ADAPTIVE_DELTA = 0.05
 ADAPTIVE_BUDGET = 512
 REFERENCE_ITERATIONS = 512
+FRONTEND_QUERIES = 32
+FRONTEND_TENANTS = 2
 
 
-def _bench_one(dname: str, g, tname: str, quick: bool) -> None:
-    svc = CountingService()
-    svc.register_graph(dname, g)
-
-    t0 = time.perf_counter()
-    svc.query(dname, tname, iterations=FIXED_ITERATIONS, seed=0)
-    cold_s = time.perf_counter() - t0
+def _bench_one(dname: str, g, tname: str, quick: bool, warmed: bool) -> None:
+    # cold: min over fresh services — every sample pays its own engine
+    # build + trace + compile, the min only strips host scheduler noise
+    samples = 1 if quick else COLD_SAMPLES
+    cold_times = []
+    svc = None
+    for _ in range(samples):
+        svc = CountingService()
+        svc.register_graph(dname, g)
+        t0 = time.perf_counter()
+        svc.query(dname, tname, iterations=FIXED_ITERATIONS, seed=0)
+        cold_times.append(time.perf_counter() - t0)
     record(
         f"service/{dname}/{tname}/cold_query",
-        cold_s * 1e6,
-        f"iters={FIXED_ITERATIONS};includes_compile=1",
+        min(cold_times) * 1e6,
+        f"iters={FIXED_ITERATIONS};includes_compile=1;samples={samples};"
+        f"agg=min;warmup={int(warmed)}",
     )
 
     n_warm = WARM_QUERIES // 2 if quick else WARM_QUERIES
@@ -121,19 +144,123 @@ def _bench_one(dname: str, g, tname: str, quick: bool) -> None:
     )
 
 
-def run(quick: bool = False) -> None:
+def frontend_load(
+    dname: str = "rmat2k",
+    tname: str = "u5-1",
+    *,
+    graph=None,
+    queries: int = FRONTEND_QUERIES,
+    record_row: bool = True,
+) -> dict:
+    """Drive ``queries`` concurrent queries through the async front-end.
+
+    ``FRONTEND_TENANTS`` tenant threads submit an equal share each through
+    a started (threaded) :class:`ServiceFrontend` over a pre-warmed engine,
+    then block on their futures.  Returns p50/p99 per-query latency (the
+    front-end's own clock stamps, submit -> resolve), aggregate throughput,
+    and the cross-tenant fairness ratio; records the
+    ``frontend_load<N>`` row unless ``record_row=False``.  This doubles as
+    the scripts/check.sh load smoke.
+    """
+    g = graph if graph is not None else rmat_graph(2048, 20_000, seed=1)
+    svc = CountingService()
+    svc.register_graph(dname, g)
+    svc.prewarm(dname, tname)  # compile off the measured path
+    fe = ServiceFrontend(svc)
+    per_tenant = queries // FRONTEND_TENANTS
+    futs = {f"tenant{k}": [] for k in range(FRONTEND_TENANTS)}
+
+    def submitter(tenant: str, base_seed: int) -> None:
+        for i in range(per_tenant):
+            futs[tenant].append(
+                fe.submit(
+                    tenant, dname, tname, iterations=FIXED_ITERATIONS,
+                    seed=base_seed + i,
+                )
+            )
+
+    t0 = time.perf_counter()
+    with fe:
+        threads = [
+            threading.Thread(target=submitter, args=(tenant, 1000 * k))
+            for k, tenant in enumerate(futs)
+        ]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        for fs in futs.values():
+            for f in fs:
+                f.result(timeout=600)
+    wall = time.perf_counter() - t0
+
+    lat_us = {
+        tenant: np.asarray([f.resolved_at - f.submitted_at for f in fs]) * 1e6
+        for tenant, fs in futs.items()
+    }
+    all_us = np.concatenate(list(lat_us.values()))
+    tenant_means = [float(l.mean()) for l in lat_us.values()]
+    fairness = max(tenant_means) / max(min(tenant_means), 1e-9)
+    out = {
+        "p50_us": float(np.percentile(all_us, 50)),
+        "p99_us": float(np.percentile(all_us, 99)),
+        "qps": per_tenant * FRONTEND_TENANTS / wall,
+        "fairness": fairness,
+        "wall_s": wall,
+        "queries": per_tenant * FRONTEND_TENANTS,
+    }
+    if record_row:
+        record(
+            f"service/{dname}/{tname}/frontend_load{out['queries']}",
+            out["p50_us"],
+            f"p99_us={out['p99_us']:.0f};qps={out['qps']:.1f};"
+            f"fairness={fairness:.2f};tenants={FRONTEND_TENANTS};"
+            f"iters={FIXED_ITERATIONS}",
+        )
+    print(
+        f"# frontend load {dname}/{tname}: {out['queries']} queries / "
+        f"{FRONTEND_TENANTS} tenants, p50 {out['p50_us']:.0f}us, "
+        f"p99 {out['p99_us']:.0f}us, {out['qps']:.1f} q/s, "
+        f"fairness {fairness:.2f}",
+        file=sys.stderr,
+    )
+    return out
+
+
+def run(quick: bool = False, warmup: bool = False) -> None:
     g = rmat_graph(2048, 20_000, seed=1)
+    if warmup:
+        # one untimed throwaway cold query: process-level one-time costs
+        # (backend init, dispatch caches) land here, not in the samples
+        scratch = CountingService()
+        scratch.register_graph("warmup", g)
+        scratch.query("warmup", "u5-1", iterations=2, seed=0)
     templates = ["u5-1"] if quick else ["u5-1", "u5-2"]
     for tname in templates:
-        _bench_one("rmat2k", g, tname, quick)
+        _bench_one("rmat2k", g, tname, quick, warmup)
+    frontend_load(graph=g)
 
 
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true", help="smoke subset")
+    ap.add_argument(
+        "--warmup",
+        action="store_true",
+        help="run one untimed cold query first (keeps process-level "
+        "one-time costs out of the cold samples)",
+    )
+    ap.add_argument(
+        "--frontend-only",
+        action="store_true",
+        help="only the async front-end load row (the check.sh load smoke)",
+    )
     args = ap.parse_args()
     emit_header()
-    run(quick=args.quick)
+    if args.frontend_only:
+        frontend_load()
+    else:
+        run(quick=args.quick, warmup=args.warmup)
     return 0
 
 

@@ -1,14 +1,17 @@
 #!/usr/bin/env bash
 # CI / local gate: lint, the tier-1 test suite split into a fast lane
-# (-m "not slow") and a slow lane (the multi-process mesh subprocess
-# tests, -m slow), a ~30s benchmark smoke, the plan-inspector smoke, and
-# a multi-device smoke of the engine's mesh backend (4 virtual devices).
+# (-m "not slow and not concurrency"), a concurrency lane (the async
+# front-end scheduler tests, -m concurrency, under a per-test timeout so
+# a deadlock fails fast instead of hanging CI), and a slow lane (the
+# multi-process mesh subprocess tests, -m slow), a ~30s benchmark smoke,
+# the plan-inspector smoke, an async front-end load smoke, and a
+# multi-device smoke of the engine's mesh backend (4 virtual devices).
 #
 #   bash scripts/check.sh
 #
-# Works without optional dev deps (hypothesis, pyflakes): the suite
-# installs a fixed-seed hypothesis fallback and the lint stage degrades
-# to stdlib compileall.
+# Works without optional dev deps (hypothesis, pytest-timeout, pyflakes):
+# the suite installs a fixed-seed hypothesis fallback plus a SIGALRM
+# timeout fallback, and the lint stage degrades to stdlib compileall.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -21,8 +24,13 @@ else
   python -m compileall -q src/repro tests benchmarks
 fi
 
-echo "== tier-1 (fast lane): pytest -m 'not slow' =="
-python -m pytest -x -q -m "not slow"
+echo "== tier-1 (fast lane): pytest -m 'not slow and not concurrency' =="
+python -m pytest -x -q -m "not slow and not concurrency"
+
+echo "== tier-1 (concurrency lane): front-end scheduler tests under a per-test timeout =="
+# --timeout is honored by pytest-timeout when installed, else by the
+# conftest SIGALRM fallback — either way a scheduler deadlock dies loudly
+python -m pytest -x -q -m concurrency --timeout=300
 
 echo "== tier-1 (slow lane): mesh/subprocess tests, pytest -m slow =="
 python -m pytest -x -q -m slow
@@ -140,6 +148,22 @@ assert qd.done and qd.iterations < 512 and qd.result()[0].converged
 print(
     f"service smoke: 2 graphs, warm re-query 0 new traces, adaptive stopped "
     f"at {qd.iterations}/512 -> OK"
+)
+PY
+
+echo "== smoke: async front-end under load (32 queries, 2 tenants) =="
+python - <<'PY'
+from benchmarks.bench_service import frontend_load
+
+stats = frontend_load(record_row=False)
+# symmetric tenants through the round-robin admission ring: per-tenant
+# mean latencies must stay within a small factor of each other
+assert stats["fairness"] < 4.0, f"tenant fairness ratio {stats['fairness']:.2f}"
+assert stats["queries"] >= 32, stats
+print(
+    f"frontend load smoke: {stats['queries']} queries / 2 tenants, "
+    f"p50 {stats['p50_us']:.0f}us p99 {stats['p99_us']:.0f}us, "
+    f"{stats['qps']:.1f} q/s, fairness {stats['fairness']:.2f} -> OK"
 )
 PY
 

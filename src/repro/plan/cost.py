@@ -29,12 +29,15 @@ import json
 import logging
 import math
 import os
+from dataclasses import dataclass
 from typing import Dict, Optional
 
 import jax.numpy as jnp
 
 __all__ = [
     "CostModel",
+    "AdmissionEstimate",
+    "admission_estimate",
     "load_fusion_slack",
     "fusion_slack_factor",
     "pick_chunk_size",
@@ -170,6 +173,68 @@ def pick_chunk_size(
     if bytes_per_coloring <= 0:
         return max_chunk
     return max(1, min(max_chunk, int(memory_budget_bytes // bytes_per_coloring)))
+
+
+@dataclass(frozen=True)
+class AdmissionEstimate:
+    """Predicted footprint of one query, for serving-layer load shedding.
+
+    Computed from the plan alone (no engine, no device operands, no
+    compile), so the front-end can price a query at submit time in
+    microseconds.  ``resident_bytes`` is the calibrated per-coloring
+    live-DP-state figure; ``chunk_bytes`` is what one launch of the
+    engine that would serve this query keeps live
+    (``chunk_size * resident_bytes`` — the admission currency the
+    front-end budgets against).  The backend gather transient is excluded
+    on purpose: it is backend-geometry-specific and only known once an
+    engine binds, so admission prices the dominant, backend-independent
+    term and stays conservative-but-cheap.
+    """
+
+    resident_elements: int
+    resident_bytes: int  # calibrated, per coloring
+    chunk_size: int
+    chunk_bytes: int  # resident_bytes * chunk_size — one launch's residency
+    peak_columns: int
+
+
+def admission_estimate(
+    graph,
+    templates,
+    *,
+    store_dtype=jnp.float32,
+    chunk_size: Optional[int] = None,
+    memory_budget_bytes: int = DEFAULT_MEMORY_BUDGET_BYTES,
+    fusion_slack: Optional[float] = None,
+) -> AdmissionEstimate:
+    """Price a ``(graph, templates)`` query without building an engine.
+
+    Plans the template set (:func:`repro.plan.ir.build_template_plan` is
+    pure and host-side), then reads the :class:`CostModel` resident
+    formula — the same one the engine's chunk picker uses, including the
+    empirical fusion-slack calibration — so the admission figure and the
+    engine's own ``predicted_peak_bytes()`` agree on the resident term.
+    With no explicit ``chunk_size`` the chunk is picked against
+    ``memory_budget_bytes`` exactly as an engine construction would.
+    """
+    from .ir import build_template_plan  # local: keeps import cycles out
+
+    plan = build_template_plan(list(templates))
+    cm = CostModel(plan, graph, store_dtype, fusion_slack=fusion_slack)
+    resident = cm.resident_elements()
+    per_coloring = cm.bytes_per_coloring(0, resident)
+    chunk = (
+        int(chunk_size)
+        if chunk_size
+        else cm.pick_chunk_size(per_coloring, memory_budget_bytes)
+    )
+    return AdmissionEstimate(
+        resident_elements=resident,
+        resident_bytes=per_coloring,
+        chunk_size=chunk,
+        chunk_bytes=per_coloring * chunk,
+        peak_columns=plan.peak_columns,
+    )
 
 
 class CostModel:

@@ -1,13 +1,25 @@
 """Serving layer: multi-tenant counting queries over cached engines.
 
-``repro.serve.counting`` is the subgraph-counting service (engine cache +
-cross-query batching + adaptive stopping); ``repro.serve.engine`` is the
-unrelated LM continuous-batching demo and is NOT imported here (it pulls in
-the transformer stack — import it explicitly if you want it).
+``repro.serve.counting`` is the synchronous subgraph-counting service
+(engine cache + cross-query batching + adaptive stopping);
+``repro.serve.frontend`` is the async production front door above it
+(futures, per-tenant QoS tiers and rate limits, cost-model backpressure,
+streaming progress, background engine warming) with its QoS primitives in
+``repro.serve.qos``.  ``repro.serve.engine`` is the unrelated LM
+continuous-batching demo and is NOT imported here (it pulls in the
+transformer stack — import it explicitly if you want it).
 """
 
 from .cache import EngineCache
 from .counting import CountingService, Query, QueryEstimate
+from .frontend import (
+    QoSRejected,
+    QueryFuture,
+    ServiceFrontend,
+    TemplateProgress,
+    make_frontend,
+)
+from .qos import ManualClock, SystemClock, TenantPolicy, TokenBucket
 from .stopping import AdaptiveStopper, TemplateCI, adaptive_estimate, normal_quantile
 
 __all__ = [
@@ -15,6 +27,15 @@ __all__ = [
     "CountingService",
     "Query",
     "QueryEstimate",
+    "ServiceFrontend",
+    "QueryFuture",
+    "TemplateProgress",
+    "QoSRejected",
+    "make_frontend",
+    "ManualClock",
+    "SystemClock",
+    "TenantPolicy",
+    "TokenBucket",
     "AdaptiveStopper",
     "TemplateCI",
     "adaptive_estimate",

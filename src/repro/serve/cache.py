@@ -10,12 +10,20 @@ targets / epsilon) must never pay them again.  The cache holds the warm
 engines behind that key with LRU eviction and hit/miss/evict counters for
 observability.
 
-Thread-unsafe by design (the service's admission loop is single-threaded);
-wrap access in a lock if you drive one cache from several threads.
+Thread safety: every operation (get/peek/keys/counters/clear) runs under
+one internal re-entrant lock, so the cache can be shared between the
+front-end scheduler thread, background pre-warming, and ad-hoc inspection
+without torn LRU order or drifting counters.  The lock is held *across the
+miss-path* ``factory()`` call on purpose: two threads racing on the same
+cold key must build the engine once, not twice — the second thread blocks
+and then hits.  (Engine builds for *different* keys therefore serialize
+too; the front-end routes all builds through its single scheduler thread,
+so this costs nothing there.)
 """
 
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from typing import Callable, Dict, Hashable, Optional, Tuple
 
@@ -37,46 +45,58 @@ class EngineCache:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = int(capacity)
         self._store: "OrderedDict[Hashable, object]" = OrderedDict()
+        self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
 
     def __len__(self) -> int:
-        return len(self._store)
+        with self._lock:
+            return len(self._store)
 
     def __contains__(self, key: Hashable) -> bool:
-        return key in self._store
+        with self._lock:
+            return key in self._store
 
     def get(self, key: Hashable, factory: Callable[[], object]):
-        """Cached engine for ``key``, building (and possibly evicting) on miss."""
-        if key in self._store:
-            self.hits += 1
-            self._store.move_to_end(key)
-            return self._store[key]
-        self.misses += 1
-        engine = factory()
-        self._store[key] = engine
-        while len(self._store) > self.capacity:
-            self._store.popitem(last=False)
-            self.evictions += 1
-        return engine
+        """Cached engine for ``key``, building (and possibly evicting) on miss.
+
+        Atomic under the cache lock — concurrent gets for one cold key
+        build exactly once (the losers of the race block, then hit).
+        """
+        with self._lock:
+            if key in self._store:
+                self.hits += 1
+                self._store.move_to_end(key)
+                return self._store[key]
+            self.misses += 1
+            engine = factory()
+            self._store[key] = engine
+            while len(self._store) > self.capacity:
+                self._store.popitem(last=False)
+                self.evictions += 1
+            return engine
 
     def peek(self, key: Hashable) -> Optional[object]:
         """The cached engine without touching counters or LRU order."""
-        return self._store.get(key)
+        with self._lock:
+            return self._store.get(key)
 
     def keys(self) -> Tuple[Hashable, ...]:
         """Cached keys, LRU first."""
-        return tuple(self._store.keys())
+        with self._lock:
+            return tuple(self._store.keys())
 
     def counters(self) -> Dict[str, int]:
-        return {
-            "hits": self.hits,
-            "misses": self.misses,
-            "evictions": self.evictions,
-            "size": len(self._store),
-            "capacity": self.capacity,
-        }
+        with self._lock:
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "size": len(self._store),
+                "capacity": self.capacity,
+            }
 
     def clear(self) -> None:
-        self._store.clear()
+        with self._lock:
+            self._store.clear()

@@ -31,6 +31,13 @@ per eligible key per cycle, so a hot graph with a deep queue cannot starve
 other tenants — every key with pending work gets device time each cycle.
 The loop is single-threaded and deterministic: a fixed submission order and
 fixed seeds reproduce every launch, estimate, and stopping decision exactly.
+
+This module stays synchronous by design; the production concurrency story
+lives one layer up in :mod:`repro.serve.frontend` (``ServiceFrontend``):
+futures, per-tenant priority tiers and token-bucket rate limits, cost-model
+backpressure, streaming progress, and background engine pre-warming — all
+of it driving *this* loop from exactly one scheduler thread, so the
+determinism guarantee above carries over unchanged.
 """
 
 from __future__ import annotations
@@ -81,9 +88,11 @@ class QueryEstimate:
 class Query:
     """One submitted counting question and its lifecycle state.
 
-    ``status`` walks ``pending -> running -> done``; ``iterations`` is the
-    number of colorings actually spent (== the fixed target for fixed-N
-    queries, <= budget for adaptive ones).
+    ``status`` walks ``pending -> running -> done`` (or ``-> cancelled``
+    via :meth:`CountingService.cancel`); ``iterations`` is the number of
+    colorings actually spent (== the fixed target for fixed-N queries,
+    <= budget for adaptive ones).  ``tenant`` is opaque caller metadata
+    (the front-end stamps its tenant name here for observability).
     """
 
     qid: int
@@ -96,6 +105,7 @@ class Query:
     engine_key: Tuple
     stopper: AdaptiveStopper
     status: str = "pending"
+    tenant: Optional[str] = None
     estimates: Optional[List[QueryEstimate]] = None
     record_rows: bool = False
     rows: Optional[List[np.ndarray]] = None  # (m, T) blocks when recording
@@ -115,8 +125,28 @@ class Query:
         return self.status == "done"
 
     @property
+    def cancelled(self) -> bool:
+        return self.status == "cancelled"
+
+    @property
+    def finished(self) -> bool:
+        """Terminal either way — done with a result, or cancelled."""
+        return self.status in ("done", "cancelled")
+
+    @property
     def iterations(self) -> int:
         return self.stopper.iterations
+
+    def progress(self) -> List[TemplateCI]:
+        """Streaming partial results: the stopper's live per-template view.
+
+        Valid at any point in the lifecycle — running mean, sample std,
+        and BOTH CI halfwidths (normal and empirical-Bernstein) plus the
+        ``lower``/``upper`` interval edges under the query's configured
+        bound (see :class:`repro.serve.stopping.TemplateCI`).  Callers can
+        act on a converging estimate before the stopping rule fires.
+        """
+        return self.stopper.estimates()
 
     def result(self) -> List[QueryEstimate]:
         if not self.done:
@@ -160,6 +190,7 @@ class CountingService:
         self._rr: Deque[Tuple] = deque()  # round-robin ring of keys with work
         self.launch_log: List[Tuple] = []  # engine key per launch, in order
         self.queries_completed = 0
+        self.queries_cancelled = 0
 
     # ------------------------------------------------------------------
     # Registration & submission
@@ -199,6 +230,17 @@ class CountingService:
             raise ValueError("query needs at least one template")
         return out
 
+    def engine_key_for(self, graph_ref: str, templates) -> Tuple:
+        """The engine cache key a query of this shape resolves to."""
+        return engine_cache_key(
+            self.graph(graph_ref),
+            self._resolve_templates(templates),
+            backend=self.backend,
+            dtype_policy=self.dtype_policy,
+            chunk_size=self.chunk_size,
+            memory_budget_bytes=self.memory_budget_bytes,
+        )
+
     def submit(
         self,
         graph_ref: str,
@@ -210,6 +252,7 @@ class CountingService:
         seed: int = 0,
         record_rows: bool = False,
         bound: str = "normal",
+        tenant: Optional[str] = None,
     ) -> Query:
         """Queue a query; returns its handle (drive it with :meth:`run`).
 
@@ -239,14 +282,7 @@ class CountingService:
                 budget = min(self.default_budget, blind)
         else:
             budget = int(iterations) if iterations else DEFAULT_FIXED_ITERATIONS
-        key = engine_cache_key(
-            graph,
-            tset,
-            backend=self.backend,
-            dtype_policy=self.dtype_policy,
-            chunk_size=self.chunk_size,
-            memory_budget_bytes=self.memory_budget_bytes,
-        )
+        key = self.engine_key_for(graph_ref, tset)
         stopper = AdaptiveStopper(
             len(tset),
             epsilon=epsilon,
@@ -265,6 +301,7 @@ class CountingService:
             seed=seed,
             engine_key=key,
             stopper=stopper,
+            tenant=tenant,
             record_rows=record_rows,
             rows=[] if record_rows else None,
             _base_key=np.asarray(jax.random.PRNGKey(seed)),
@@ -304,7 +341,7 @@ class CountingService:
         """
         while self._rr:
             key = self._rr.popleft()
-            queries = [q for q in self._active.get(key, []) if not q.done]
+            queries = [q for q in self._active.get(key, []) if not q.finished]
             if queries:
                 break
             self._active.pop(key, None)  # drained key leaves the ring
@@ -352,7 +389,7 @@ class CountingService:
             if q.stopper.done:
                 self._finalize(q)
 
-        still_live = [q for q in self._active.get(key, []) if not q.done]
+        still_live = [q for q in self._active.get(key, []) if not q.finished]
         if still_live:
             self._active[key] = still_live
             self._rr.append(key)
@@ -382,6 +419,91 @@ class CountingService:
             launches += 1
             if max_launches is not None and launches >= max_launches:
                 return
+
+    def has_pending(self) -> bool:
+        """True while any admitted query still needs launches."""
+        return any(
+            not q.finished for qs in self._active.values() for q in qs
+        )
+
+    def cancel(self, query: Query) -> bool:
+        """Cancel a live query; True if it was still cancellable.
+
+        The query flips to ``cancelled`` and is dropped from its engine
+        key's merge list — colorings already spent are simply discarded
+        (its launch slots are re-dealt to surviving queries from the next
+        launch on).  Cancelling a finished query is a no-op returning
+        False.  Other queries are untouched: their colorings are seed-
+        folded per query, so counts never depend on who shared a launch.
+        """
+        if query.finished:
+            return False
+        query.status = "cancelled"
+        live = self._active.get(query.engine_key)
+        if live is not None:
+            remaining = [q for q in live if q.qid != query.qid]
+            if remaining:
+                self._active[query.engine_key] = remaining
+            # an emptied key stays in the ring; step() retires it lazily
+        self.queries_cancelled += 1
+        return True
+
+    def admission_bytes(self, graph_ref: str, templates) -> int:
+        """Predicted live bytes one launch of this query would hold.
+
+        The front-end's load-shedding currency.  A warm cached engine
+        answers exactly (``predicted_peak_bytes()``); otherwise the plan
+        layer prices the query without building anything
+        (:func:`repro.plan.cost.admission_estimate` — same resident
+        formula and fusion-slack calibration the engine's chunk picker
+        uses, microseconds of host work).
+        """
+        from repro.core.engine import DtypePolicy
+        from repro.plan.cost import admission_estimate
+
+        graph = self.graph(graph_ref)
+        tset = self._resolve_templates(templates)
+        engine = self._cache.peek(self.engine_key_for(graph_ref, tset))
+        if engine is not None:
+            return engine.predicted_peak_bytes()
+        est = admission_estimate(
+            graph,
+            tset,
+            store_dtype=DtypePolicy.resolve(self.dtype_policy).store_dtype,
+            chunk_size=self.chunk_size,
+            memory_budget_bytes=self.memory_budget_bytes,
+        )
+        return est.chunk_bytes
+
+    def prewarm(self, graph_ref: str, templates) -> Tuple:
+        """Build AND compile the engine a query shape will need; returns
+        its engine key.
+
+        Constructs the engine into the cache (device operands shipped) and
+        runs one padded dummy launch through the fixed-shape
+        ``count_keys_chunk`` program so the jit trace+compile — the ~50x
+        cold/warm gap in the service bench rows — happens *now*, off the
+        query path.  Subsequent queries behind the same key trace zero new
+        programs.  Idempotent: a warm key costs one cheap compiled launch.
+        """
+        graph = self.graph(graph_ref)
+        tset = self._resolve_templates(templates)
+        key = self.engine_key_for(graph_ref, tset)
+
+        def build():
+            return CountingEngine(
+                graph,
+                list(tset),
+                backend=self.backend,
+                dtype_policy=self.dtype_policy,
+                chunk_size=self.chunk_size,
+                memory_budget_bytes=self.memory_budget_bytes,
+            )
+
+        engine = self._cache.get(key, build)
+        dummy = np.asarray(jax.random.PRNGKey(0), np.uint32)[None]
+        engine.count_keys_chunk(dummy)
+        return key
 
     def query(
         self,
@@ -452,6 +574,7 @@ class CountingService:
             "launches_by_key": by_key,
             "queries_submitted": self._next_qid,
             "queries_completed": self.queries_completed,
+            "queries_cancelled": self.queries_cancelled,
             "engines": [
                 self._cache.peek(k).describe()
                 for k in self._cache.keys()

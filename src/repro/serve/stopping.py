@@ -95,12 +95,27 @@ def normal_quantile(p: float) -> float:
 
 @dataclass
 class TemplateCI:
-    """Per-template running estimate at the moment of inspection."""
+    """Per-template running estimate at the moment of inspection.
+
+    ``halfwidth``/``converged`` are the *stopping rule's* view (inf / False
+    until the CI arms; 0.0 halfwidth for fixed-N queries — unchanged
+    semantics).  The trailing fields are the *streaming-progress* view used
+    by ``ServiceFrontend`` futures: BOTH CI halfwidths — the CLT z-interval
+    (``halfwidth_normal``) and the empirical-Bernstein bound
+    (``halfwidth_bernstein``) — are always computed once two samples exist,
+    whatever bound the stopper tests and even for fixed-N queries, plus the
+    ``lower``/``upper`` interval edges under the stopper's configured
+    bound (``mean ∓ halfwidth``; ±inf before two samples).
+    """
 
     mean: float
     std: float  # sample std (ddof=1); 0.0 before two samples
     halfwidth: float  # z * std / sqrt(n); inf before the CI arms
     converged: bool
+    halfwidth_normal: float = math.inf
+    halfwidth_bernstein: float = math.inf
+    lower: float = -math.inf
+    upper: float = math.inf
 
 
 class AdaptiveStopper:
@@ -149,6 +164,10 @@ class AdaptiveStopper:
         self.min_iterations = max(2, int(min_iterations))
         self.bound = bound
         self.z = normal_quantile(1 - self.delta / 2) if epsilon is not None else None
+        # reporting quantile: progress snapshots carry a CI even for
+        # fixed-N queries (self.z stays None so the STOPPING rule is
+        # untouched — fixed-N queries still never converge early)
+        self._z_report = normal_quantile(1 - self.delta / 2)
         # ln(3/delta) — the empirical-Bernstein confidence term
         self._log3d = math.log(3.0 / self.delta)
         self.count = 0
@@ -182,16 +201,23 @@ class AdaptiveStopper:
     def iterations(self) -> int:
         return self.count
 
+    def _halfwidth_normal(self, std: float) -> float:
+        z = self.z if self.z is not None else self._z_report
+        return z * std / math.sqrt(self.count)
+
+    def _halfwidth_bernstein(self, t: int, std: float) -> float:
+        n = self.count
+        rng = float(self._max[t] - self._min[t]) if n >= 1 else 0.0
+        return (
+            math.sqrt(2.0 * std * std * self._log3d / n)
+            + 3.0 * rng * self._log3d / n
+        )
+
     def _halfwidth(self, t: int, std: float) -> float:
         """CI halfwidth for template ``t`` under the configured bound."""
-        n = self.count
         if self.bound == "bernstein":
-            rng = float(self._max[t] - self._min[t]) if n >= 1 else 0.0
-            return (
-                math.sqrt(2.0 * std * std * self._log3d / n)
-                + 3.0 * rng * self._log3d / n
-            )
-        return self.z * std / math.sqrt(n)
+            return self._halfwidth_bernstein(t, std)
+        return self._halfwidth_normal(std)
 
     def estimates(self) -> List[TemplateCI]:
         """Current per-template mean / std / CI halfwidth."""
@@ -208,9 +234,25 @@ class AdaptiveStopper:
             else:
                 half = math.inf if self.epsilon is not None else 0.0
                 conv = False
+            mean = float(self._mean[t])
+            if self.count >= 2:
+                hw_n = self._halfwidth_normal(std)
+                hw_b = self._halfwidth_bernstein(t, std)
+                hw_used = hw_b if self.bound == "bernstein" else hw_n
+                lower, upper = mean - hw_used, mean + hw_used
+            else:
+                hw_n = hw_b = math.inf
+                lower, upper = -math.inf, math.inf
             out.append(
                 TemplateCI(
-                    mean=float(self._mean[t]), std=std, halfwidth=half, converged=conv
+                    mean=mean,
+                    std=std,
+                    halfwidth=half,
+                    converged=conv,
+                    halfwidth_normal=hw_n,
+                    halfwidth_bernstein=hw_b,
+                    lower=lower,
+                    upper=upper,
                 )
             )
         return out
