@@ -30,6 +30,11 @@ Rows (all merged into ``BENCH_counting.json`` for the trend diff):
   the per-tenant mean latencies — ~1.0 when the round-robin admission is
   fair) in ``derived``.  Also runnable alone via ``--frontend-only`` (the
   check.sh load smoke).
+* ``service/<graph>/<template>/frontend_chaosN`` — the same N-query load
+  under a seeded ``FaultPlan`` injecting transient launch failures at rate
+  1/8 (schedule fixed by ``REPRO_FAULT_SEED``): p50/p99 with the
+  injected-fault / retry / failed counts in ``derived``, asserting zero
+  unresolved futures (the failure-semantics acceptance bar).
 """
 
 from __future__ import annotations
@@ -227,6 +232,108 @@ def frontend_load(
     return out
 
 
+def frontend_chaos(
+    dname: str = "rmat2k",
+    tname: str = "u5-1",
+    *,
+    graph=None,
+    queries: int = FRONTEND_QUERIES,
+    record_row: bool = True,
+) -> dict:
+    """``frontend_load`` under a seeded FaultPlan: 1-in-8 transient launch
+    failures.
+
+    The same ``FRONTEND_TENANTS``-thread load as :func:`frontend_load`, but
+    every 8th launch (in expectation; the schedule is fixed by
+    ``REPRO_FAULT_SEED``) raises a transient fault the retry/backoff path
+    must absorb.  The acceptance bar: **zero unresolved futures** — every
+    query either resolves with a result or fails with a structured
+    ``ServiceError`` — and the row records the latency cost of surviving
+    the chaos (p50/p99) plus the retry/failure counts.
+    """
+    from repro.serve import ServiceError
+    from repro.serve.resilience import RetryPolicy
+    from repro.testing.faults import FaultPlan, FaultSpec
+
+    g = graph if graph is not None else rmat_graph(2048, 20_000, seed=1)
+    svc = CountingService(
+        # short real-time backoff: the bench measures retry cost, not sleep
+        retry_policy=RetryPolicy(max_retries=8, backoff_base=0.002,
+                                 max_backoff=0.05),
+    )
+    svc.register_graph(dname, g)
+    svc.prewarm(dname, tname)
+    fe = ServiceFrontend(svc)
+    per_tenant = queries // FRONTEND_TENANTS
+    futs = {f"tenant{k}": [] for k in range(FRONTEND_TENANTS)}
+
+    def submitter(tenant: str, base_seed: int) -> None:
+        for i in range(per_tenant):
+            futs[tenant].append(
+                fe.submit(
+                    tenant, dname, tname, iterations=FIXED_ITERATIONS,
+                    seed=base_seed + i,
+                )
+            )
+
+    plan = FaultPlan(
+        [FaultSpec(site="launch", kind="transient", rate=1 / 8)], seed=None
+    )
+    failed = 0
+    t0 = time.perf_counter()
+    with plan, fe:
+        threads = [
+            threading.Thread(target=submitter, args=(tenant, 1000 * k))
+            for k, tenant in enumerate(futs)
+        ]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        for fs in futs.values():
+            for f in fs:
+                try:
+                    f.result(timeout=600)
+                except ServiceError:
+                    failed += 1
+    wall = time.perf_counter() - t0
+
+    all_futs = [f for fs in futs.values() for f in fs]
+    unresolved = [f for f in all_futs if not f.done()]
+    assert not unresolved, (
+        f"{len(unresolved)} futures left unresolved under chaos — the "
+        f"failure-semantics acceptance bar is zero"
+    )
+    stats = svc.stats()["faults"]
+    lat_us = np.asarray([f.resolved_at - f.submitted_at for f in all_futs]) * 1e6
+    out = {
+        "p50_us": float(np.percentile(lat_us, 50)),
+        "p99_us": float(np.percentile(lat_us, 99)),
+        "qps": len(all_futs) / wall,
+        "wall_s": wall,
+        "queries": len(all_futs),
+        "faults_injected": plan.fires_by_site().get("launch", 0),
+        "retries": stats["retries"],
+        "failed": failed,
+    }
+    if record_row:
+        record(
+            f"service/{dname}/{tname}/frontend_chaos{out['queries']}",
+            out["p50_us"],
+            f"p99_us={out['p99_us']:.0f};qps={out['qps']:.1f};"
+            f"faults={out['faults_injected']};retries={out['retries']};"
+            f"failed={failed};fault_rate=0.125;tenants={FRONTEND_TENANTS};"
+            f"iters={FIXED_ITERATIONS}",
+        )
+    print(
+        f"# frontend chaos {dname}/{tname}: {out['queries']} queries, "
+        f"{out['faults_injected']} injected faults, {out['retries']} retries, "
+        f"{failed} failed, p50 {out['p50_us']:.0f}us, p99 {out['p99_us']:.0f}us",
+        file=sys.stderr,
+    )
+    return out
+
+
 def run(quick: bool = False, warmup: bool = False) -> None:
     g = rmat_graph(2048, 20_000, seed=1)
     if warmup:
@@ -239,6 +346,7 @@ def run(quick: bool = False, warmup: bool = False) -> None:
     for tname in templates:
         _bench_one("rmat2k", g, tname, quick, warmup)
     frontend_load(graph=g)
+    frontend_chaos(graph=g)
 
 
 def main() -> int:

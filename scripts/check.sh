@@ -1,11 +1,14 @@
 #!/usr/bin/env bash
 # CI / local gate: lint, the tier-1 test suite split into a fast lane
-# (-m "not slow and not concurrency"), a concurrency lane (the async
-# front-end scheduler tests, -m concurrency, under a per-test timeout so
-# a deadlock fails fast instead of hanging CI), and a slow lane (the
-# multi-process mesh subprocess tests, -m slow), a ~30s benchmark smoke,
-# the plan-inspector smoke, an async front-end load smoke, and a
-# multi-device smoke of the engine's mesh backend (4 virtual devices).
+# (-m "not slow and not concurrency and not chaos"), a concurrency lane
+# (the async front-end scheduler tests, -m concurrency, under a per-test
+# timeout so a deadlock fails fast instead of hanging CI), a chaos lane
+# (the seeded fault-injection suite, -m chaos, under a fixed
+# REPRO_FAULT_SEED so the failure schedule replays exactly), and a slow
+# lane (the multi-process mesh subprocess tests, -m slow), a ~30s
+# benchmark smoke, the plan-inspector smoke, an async front-end load
+# smoke, a watchdog kill smoke, and a multi-device smoke of the engine's
+# mesh backend (4 virtual devices).
 #
 #   bash scripts/check.sh
 #
@@ -24,13 +27,19 @@ else
   python -m compileall -q src/repro tests benchmarks
 fi
 
-echo "== tier-1 (fast lane): pytest -m 'not slow and not concurrency' =="
-python -m pytest -x -q -m "not slow and not concurrency"
+echo "== tier-1 (fast lane): pytest -m 'not slow and not concurrency and not chaos' =="
+python -m pytest -x -q -m "not slow and not concurrency and not chaos"
 
 echo "== tier-1 (concurrency lane): front-end scheduler tests under a per-test timeout =="
 # --timeout is honored by pytest-timeout when installed, else by the
 # conftest SIGALRM fallback — either way a scheduler deadlock dies loudly
 python -m pytest -x -q -m concurrency --timeout=300
+
+echo "== tier-1 (chaos lane): seeded fault injection, fixed REPRO_FAULT_SEED =="
+# one pinned seed => one replayable failure schedule for the whole lane
+# (includes the watchdog kill test: a scheduler thread killed by a clock
+# fault must fail every in-flight future within one watchdog interval)
+REPRO_FAULT_SEED=0 python -m pytest -x -q -m chaos --timeout=300
 
 echo "== tier-1 (slow lane): mesh/subprocess tests, pytest -m slow =="
 python -m pytest -x -q -m slow

@@ -59,6 +59,7 @@ from repro.plan.cost import (
     pick_chunk_size,
 )
 from repro.plan.ir import TemplatePlan, build_template_plan, template_set_canons
+from repro.testing import faults as _faults
 
 from .colorsets import colorful_probability
 from .counting import CountingPlan
@@ -248,6 +249,11 @@ class CountingEngine:
             templates = [templates]
         if not templates:
             raise ValueError("CountingEngine needs at least one template")
+
+        # fault-injection seam: construction is the first failure surface a
+        # serving deployment meets (compile errors, operand OOMs) — the
+        # chaos suite breaks it here, before any operand binds
+        _faults.maybe_fail("engine_build", ctx=f"backend={backend}")
 
         # --- layer 1: the backend-agnostic plan (pure, graph-free).
         self.plan_ir: TemplatePlan = build_template_plan(templates, plans=plans)
@@ -550,6 +556,12 @@ class CountingEngine:
         engine never re-traces, whatever increment sizes arrive
         (shape-bucketed padding).  Returns the ``(m, T)`` normalized
         estimates as a float64 host array.
+
+        Fault seams (``repro.testing.faults``) fire HERE, at the Python
+        launch boundary, not inside the backend's jitted body — an in-jit
+        hook would only run at trace time, so a warm engine would never
+        see it.  ``launch`` covers every backend; ``collective`` only the
+        backends that declare it (``EngineBackend.fault_sites``).
         """
         keys = jnp.asarray(keys)
         m = int(keys.shape[0])
@@ -560,11 +572,15 @@ class CountingEngine:
                 f"increment of {m} keys exceeds chunk_size={self.chunk_size}; "
                 "split it (count_keys handles multi-chunk runs)"
             )
+        _faults.maybe_fail("launch", ctx=f"backend={self.backend}")
+        if "collective" in getattr(self.backend_impl, "fault_sites", ()):
+            _faults.maybe_fail("collective", ctx=f"backend={self.backend}")
         pad = self.chunk_size - m
         if pad:
             keys = jnp.concatenate([keys, keys[-1:].repeat(pad, axis=0)], axis=0)
         vals = self._get_chunk_fn()(keys)
-        return np.asarray(vals, dtype=np.float64)[:m]
+        out = np.asarray(vals, dtype=np.float64)[:m]
+        return _faults.corrupt_result("launch", out, ctx=f"backend={self.backend}")
 
     def count_keys(self, keys) -> np.ndarray:
         """Normalized per-iteration estimates for explicit PRNG keys.

@@ -208,6 +208,12 @@ class EngineBackend:
 
     name: str = "abstract"
 
+    #: Which fault-injection sites apply at this backend's launch boundary
+    #: (``repro.testing.faults``; checked by ``CountingEngine.
+    #: count_keys_chunk`` — Python-level, outside the jitted body).  The
+    #: mesh backend adds ``"collective"`` for its all-gather dispatch.
+    fault_sites: Tuple[str, ...] = ("launch",)
+
     def __init__(self, engine):
         self.engine = engine
 

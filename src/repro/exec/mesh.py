@@ -43,6 +43,10 @@ class MeshBackend(EngineBackend):
 
     name = "mesh"
 
+    # every chunk launch dispatches all-gather collectives, so the mesh
+    # backend exposes the extra failure surface to the fault seam
+    fault_sites = ("launch", "collective")
+
     def __init__(
         self,
         engine,

@@ -38,6 +38,8 @@ __all__ = [
     "CostModel",
     "AdmissionEstimate",
     "admission_estimate",
+    "LadderRung",
+    "degradation_ladder",
     "load_fusion_slack",
     "fusion_slack_factor",
     "pick_chunk_size",
@@ -235,6 +237,71 @@ def admission_estimate(
         chunk_bytes=per_coloring * chunk,
         peak_columns=plan.peak_columns,
     )
+
+
+@dataclass(frozen=True)
+class LadderRung:
+    """One step of the memory degradation ladder (see
+    :func:`degradation_ladder`)."""
+
+    chunk_size: int
+    column_batch: Optional[int]  # None = keep the engine's auto-pick
+    backend: Optional[str]  # None = keep the configured backend
+    action: str  # "halve_chunk" | "shrink_columns" | "fallback_backend"
+
+
+def degradation_ladder(
+    chunk_size: int,
+    column_batch: Optional[int],
+    backend: str,
+) -> "list[LadderRung]":
+    """The ordered retreat a memory failure walks before a query is
+    rejected.
+
+    Cheapest-first — each rung trades throughput for footprint along a
+    knob the cost model already prices (so ``admission_estimate`` can
+    re-price every rung without building anything):
+
+    1. **halve ``chunk_size``** down to 1: the chunk is the multiplier on
+       the whole live footprint, so halving it halves the launch residency
+       with zero effect on results (estimates are bit-exact across chunk
+       sizes — the engine invariant the retry path already leans on);
+    2. **shrink ``column_batch``** (halving from its configured width down
+       to 1, chunk pinned at 1): narrows the fused-slice transient;
+    3. **fall back to the ``edges`` backend**: the smallest-transient
+       executor (no padded rows, no SELL slots, no dense adjacency).
+
+    Returns the rungs *below* the given configuration; an exhausted ladder
+    (empty list / no rungs left) means the query genuinely cannot fit and
+    fails with ``memory_exhausted``.
+    """
+    rungs = []
+    chunk = int(chunk_size)
+    while chunk > 1:
+        chunk //= 2
+        rungs.append(
+            LadderRung(
+                chunk_size=chunk, column_batch=None, backend=None,
+                action="halve_chunk",
+            )
+        )
+    cb = int(column_batch) if column_batch else LOCAL_COLUMN_BATCH
+    while cb > 1:
+        cb //= 2
+        rungs.append(
+            LadderRung(
+                chunk_size=1, column_batch=cb, backend=None,
+                action="shrink_columns",
+            )
+        )
+    if backend not in ("edges", "custom", "mesh"):
+        rungs.append(
+            LadderRung(
+                chunk_size=1, column_batch=1, backend="edges",
+                action="fallback_backend",
+            )
+        )
+    return rungs
 
 
 class CostModel:

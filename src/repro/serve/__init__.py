@@ -20,6 +20,12 @@ from .frontend import (
     make_frontend,
 )
 from .qos import ManualClock, SystemClock, TenantPolicy, TokenBucket
+from .resilience import (
+    QuarantinedError,
+    RetryPolicy,
+    ServiceError,
+    classify_failure,
+)
 from .stopping import AdaptiveStopper, TemplateCI, adaptive_estimate, normal_quantile
 
 __all__ = [
@@ -36,6 +42,10 @@ __all__ = [
     "SystemClock",
     "TenantPolicy",
     "TokenBucket",
+    "ServiceError",
+    "QuarantinedError",
+    "RetryPolicy",
+    "classify_failure",
     "AdaptiveStopper",
     "TemplateCI",
     "adaptive_estimate",

@@ -49,6 +49,8 @@ class EngineCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.build_failures = 0
+        self.invalidations = 0
 
     def __len__(self) -> int:
         with self._lock:
@@ -63,6 +65,11 @@ class EngineCache:
 
         Atomic under the cache lock — concurrent gets for one cold key
         build exactly once (the losers of the race block, then hit).
+
+        A ``factory()`` that raises leaves the cache exactly as it was: no
+        entry under ``key`` (the next ``get`` re-runs a fresh factory), no
+        held lock state (the RLock unwinds with the exception), and only
+        the ``build_failures`` counter advanced.
         """
         with self._lock:
             if key in self._store:
@@ -70,7 +77,13 @@ class EngineCache:
                 self._store.move_to_end(key)
                 return self._store[key]
             self.misses += 1
-            engine = factory()
+            try:
+                engine = factory()
+            except BaseException:
+                # miss-path poisoning guard: never insert a placeholder or
+                # partial entry for a build that failed
+                self.build_failures += 1
+                raise
             self._store[key] = engine
             while len(self._store) > self.capacity:
                 self._store.popitem(last=False)
@@ -81,6 +94,19 @@ class EngineCache:
         """The cached engine without touching counters or LRU order."""
         with self._lock:
             return self._store.get(key)
+
+    def invalidate(self, key: Hashable) -> bool:
+        """Drop ``key``'s entry (True if one existed).
+
+        The degradation-ladder path uses this: a memory-failed engine is
+        evicted so the next ``get`` rebuilds it at the new rung's
+        chunk/column-batch/backend configuration.
+        """
+        with self._lock:
+            existed = self._store.pop(key, None) is not None
+            if existed:
+                self.invalidations += 1
+            return existed
 
     def keys(self) -> Tuple[Hashable, ...]:
         """Cached keys, LRU first."""
@@ -93,6 +119,8 @@ class EngineCache:
                 "hits": self.hits,
                 "misses": self.misses,
                 "evictions": self.evictions,
+                "build_failures": self.build_failures,
+                "invalidations": self.invalidations,
                 "size": len(self._store),
                 "capacity": self.capacity,
             }

@@ -42,6 +42,7 @@ determinism guarantee above carries over unchanged.
 
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
@@ -59,8 +60,19 @@ from repro.core.engine import (
 from repro.core.estimator import required_iterations
 from repro.core.graph import Graph
 from repro.core.templates import Template, connected_graphlets, get_template
+from repro.plan.cost import degradation_ladder
 
 from .cache import EngineCache
+from .qos import Clock, SystemClock
+from .resilience import (
+    DEFAULT_QUARANTINE_BASE_S,
+    DEFAULT_RETRY_POLICY,
+    FailState,
+    QuarantinedError,
+    RetryPolicy,
+    ServiceError,
+    classify_failure,
+)
 from .stopping import DEFAULT_MIN_ITERATIONS, AdaptiveStopper, TemplateCI
 
 __all__ = ["CountingService", "Query", "QueryEstimate"]
@@ -75,13 +87,23 @@ DEFAULT_ADAPTIVE_BUDGET = 1024
 
 @dataclass
 class QueryEstimate:
-    """Final per-template answer of a completed query."""
+    """Final per-template answer of a completed query.
+
+    ``degraded=True`` marks a deadline-resolved best-effort estimate: the
+    query's deadline passed with the stopper still running, so the answer
+    is the running mean with BOTH CI halfwidths attached (normal and
+    empirical-Bernstein — always populated once two samples exist, degraded
+    or not) instead of a converged result.
+    """
 
     template: str
     mean: float
     std: float
     halfwidth: float  # CI halfwidth at stop time (0.0 for fixed-N queries)
     converged: bool  # CI target met (False when the budget ran out / fixed-N)
+    halfwidth_normal: float = 0.0  # CLT z-interval at resolve time
+    halfwidth_bernstein: float = 0.0  # empirical-Bernstein at resolve time
+    degraded: bool = False  # resolved at deadline with the running estimate
 
 
 @dataclass
@@ -89,10 +111,14 @@ class Query:
     """One submitted counting question and its lifecycle state.
 
     ``status`` walks ``pending -> running -> done`` (or ``-> cancelled``
-    via :meth:`CountingService.cancel`); ``iterations`` is the number of
-    colorings actually spent (== the fixed target for fixed-N queries,
-    <= budget for adaptive ones).  ``tenant`` is opaque caller metadata
-    (the front-end stamps its tenant name here for observability).
+    via :meth:`CountingService.cancel`, or ``-> failed`` with a structured
+    :class:`~repro.serve.resilience.ServiceError` on ``error``);
+    ``iterations`` is the number of colorings actually spent (== the fixed
+    target for fixed-N queries, <= budget for adaptive ones).  ``tenant``
+    is opaque caller metadata (the front-end stamps its tenant name here
+    for observability).  ``retries`` counts launch attempts this query
+    paid for through transient failures; ``degraded`` marks a
+    deadline-resolved best-effort result (status still ``done``).
     """
 
     qid: int
@@ -109,6 +135,11 @@ class Query:
     estimates: Optional[List[QueryEstimate]] = None
     record_rows: bool = False
     rows: Optional[List[np.ndarray]] = None  # (m, T) blocks when recording
+    deadline_at: Optional[float] = None  # absolute, on the service clock
+    retry_policy: Optional[RetryPolicy] = None  # None = service default
+    retries: int = 0
+    error: Optional[ServiceError] = None
+    degraded: bool = False
     _base_key: np.ndarray = field(default=None, repr=False)
     _drawn: int = 0  # next coloring iteration index to draw
 
@@ -129,9 +160,13 @@ class Query:
         return self.status == "cancelled"
 
     @property
+    def failed(self) -> bool:
+        return self.status == "failed"
+
+    @property
     def finished(self) -> bool:
-        """Terminal either way — done with a result, or cancelled."""
-        return self.status in ("done", "cancelled")
+        """Terminal any way — done with a result, cancelled, or failed."""
+        return self.status in ("done", "cancelled", "failed")
 
     @property
     def iterations(self) -> int:
@@ -149,6 +184,8 @@ class Query:
         return self.stopper.estimates()
 
     def result(self) -> List[QueryEstimate]:
+        if self.failed:
+            raise self.error
         if not self.done:
             raise RuntimeError(f"query {self.qid} is {self.status}, not done")
         return self.estimates
@@ -163,6 +200,16 @@ class CountingService:
         to every engine the service builds (and folded into cache keys).
       default_budget: iteration cap for adaptive queries without their own.
       min_iterations: CI arming threshold (see ``AdaptiveStopper``).
+      clock: time source for deadlines, retry backoff, and quarantine
+        windows (``SystemClock`` by default; a frontend with a manual
+        clock re-points this at its own so the two never disagree).
+      retry_policy: default transient-failure policy for queries that
+        don't pass their own ``retry_policy=`` at submit.
+      quarantine_base_s: first quarantine window for an engine key that
+        keeps failing deterministically (doubles per re-quarantine).
+      engine_kwargs: extra ``CountingEngine`` construction kwargs every
+        build forwards (e.g. ``mesh=`` for a mesh-backed service); NOT
+        part of the cache key — callers own their identity.
     """
 
     def __init__(
@@ -175,6 +222,10 @@ class CountingService:
         memory_budget_bytes: int = DEFAULT_MEMORY_BUDGET_BYTES,
         default_budget: int = DEFAULT_ADAPTIVE_BUDGET,
         min_iterations: int = DEFAULT_MIN_ITERATIONS,
+        clock: Optional[Clock] = None,
+        retry_policy: Optional[RetryPolicy] = None,
+        quarantine_base_s: float = DEFAULT_QUARANTINE_BASE_S,
+        engine_kwargs: Optional[Dict] = None,
     ):
         self.backend = backend
         self.dtype_policy = dtype_policy
@@ -182,6 +233,12 @@ class CountingService:
         self.memory_budget_bytes = int(memory_budget_bytes)
         self.default_budget = int(default_budget)
         self.min_iterations = int(min_iterations)
+        self.clock = clock if clock is not None else SystemClock()
+        self.default_retry_policy = (
+            retry_policy if retry_policy is not None else DEFAULT_RETRY_POLICY
+        )
+        self.quarantine_base_s = float(quarantine_base_s)
+        self.engine_kwargs = dict(engine_kwargs or {})
         self._graphs: Dict[str, Graph] = {}
         self._signatures: Dict[str, str] = {}
         self._cache = EngineCache(capacity=max_engines)
@@ -191,6 +248,19 @@ class CountingService:
         self.launch_log: List[Tuple] = []  # engine key per launch, in order
         self.queries_completed = 0
         self.queries_cancelled = 0
+        self.queries_failed = 0
+        self.queries_degraded = 0
+        # failure semantics (docs/serving.md "Failure semantics"): per-key
+        # retry/quarantine state, ladder config overrides, fault counters
+        self._fail: Dict[Tuple, FailState] = {}
+        self._overrides: Dict[Tuple, Dict] = {}  # ladder-rung engine kwargs
+        self._ladders: Dict[Tuple, List] = {}  # key -> its degradation rungs
+        self.fault_counters: Dict[str, int] = {
+            "transient": 0,
+            "memory": 0,
+            "deterministic": 0,
+            "non_finite": 0,
+        }
 
     # ------------------------------------------------------------------
     # Registration & submission
@@ -253,6 +323,8 @@ class CountingService:
         record_rows: bool = False,
         bound: str = "normal",
         tenant: Optional[str] = None,
+        deadline: Optional[float] = None,
+        retry_policy: Optional[RetryPolicy] = None,
     ) -> Query:
         """Queue a query; returns its handle (drive it with :meth:`run`).
 
@@ -266,6 +338,16 @@ class CountingService:
         ``bound`` picks the CI the stopper tests: ``"normal"`` (default)
         or the more conservative ``"bernstein"`` for heavy-tailed
         per-coloring counts (see :mod:`repro.serve.stopping`).
+
+        ``deadline``: seconds from now (service clock).  When it passes, a
+        query with >= 2 iterations resolves ``done`` with its running
+        estimate, both CI halfwidths, and ``degraded=True``; with fewer it
+        fails with a ``deadline`` :class:`ServiceError`.  ``retry_policy``
+        overrides the service default for transient launch failures.
+
+        Raises :class:`~repro.serve.resilience.QuarantinedError`
+        immediately while the query's engine key is quarantined — no queue
+        slot is taken for work the scheduler would refuse to run.
         """
         graph = self.graph(graph_ref)
         tset = self._resolve_templates(templates)
@@ -283,6 +365,16 @@ class CountingService:
         else:
             budget = int(iterations) if iterations else DEFAULT_FIXED_ITERATIONS
         key = self.engine_key_for(graph_ref, tset)
+        now = self.clock.now()
+        fs = self._fail.get(key)
+        if fs is not None and now < fs.quarantined_until:
+            raise QuarantinedError(
+                f"engine key quarantined for another "
+                f"{fs.quarantined_until - now:.3f}s (quarantine "
+                f"#{fs.quarantines} after repeated deterministic failures)",
+                engine_key=key,
+                retry_at=fs.quarantined_until,
+            )
         stopper = AdaptiveStopper(
             len(tset),
             epsilon=epsilon,
@@ -304,6 +396,8 @@ class CountingService:
             tenant=tenant,
             record_rows=record_rows,
             rows=[] if record_rows else None,
+            deadline_at=None if deadline is None else now + float(deadline),
+            retry_policy=retry_policy,
             _base_key=np.asarray(jax.random.PRNGKey(seed)),
         )
         self._next_qid += 1
@@ -318,37 +412,73 @@ class CountingService:
     # ------------------------------------------------------------------
 
     def _engine_for(self, key: Tuple, query: Query) -> CountingEngine:
+        overrides = self._overrides.get(key, {})
+
         def build():
-            return CountingEngine(
-                self.graph(query.graph_ref),
-                list(query.templates),
-                backend=self.backend,
+            kwargs = dict(
+                backend=overrides.get("backend", self.backend),
                 dtype_policy=self.dtype_policy,
-                chunk_size=self.chunk_size,
+                chunk_size=overrides.get("chunk_size", self.chunk_size),
                 memory_budget_bytes=self.memory_budget_bytes,
+                **self.engine_kwargs,
+            )
+            if "column_batch" in overrides:
+                kwargs["column_batch"] = overrides["column_batch"]
+            return CountingEngine(
+                self.graph(query.graph_ref), list(query.templates), **kwargs
             )
 
         return self._cache.get(key, build)
 
     def step(self) -> Optional[Tuple]:
-        """Serve ONE launch to the next engine key in round-robin order.
+        """Serve ONE launch attempt to the next engine key in round-robin
+        order.
 
         Merges that key's live queries into one chunk: slots are dealt one
         coloring at a time, cycling the queries, so concurrent tenants of a
         hot engine split each launch fairly; unfilled slots are padded
         (same compiled shape either way).  Returns the engine key served,
-        or ``None`` when no query is waiting.
+        or ``None`` when no query is runnable *now* (queue empty, or every
+        key with work is parked behind retry backoff / quarantine —
+        :meth:`run` sleeps or advances the clock to the next timer in that
+        case).
+
+        Failure semantics (docs/serving.md): expired deadlines are swept
+        first (degrading armed queries instead of failing them); a build
+        or launch exception is classified ``transient`` (per-query retry
+        accounting + exponential key backoff), ``memory`` (walk one
+        degradation-ladder rung and rebuild), or ``deterministic`` (fail
+        the attempt's queries; quarantine the key on repeat).  A failed
+        attempt still returns the key — failure bookkeeping is progress.
         """
+        now = self.clock.now()
+        self._sweep_deadlines(now)
+
+        skipped: List[Tuple] = []
+        key: Optional[Tuple] = None
+        queries: List[Query] = []
         while self._rr:
-            key = self._rr.popleft()
-            queries = [q for q in self._active.get(key, []) if not q.finished]
-            if queries:
-                break
-            self._active.pop(key, None)  # drained key leaves the ring
-        else:
+            cand = self._rr.popleft()
+            live = [q for q in self._active.get(cand, []) if not q.finished]
+            if not live:
+                self._active.pop(cand, None)  # drained key leaves the ring
+                continue
+            fs = self._fail.get(cand)
+            if fs is not None and fs.blocked_until(now) is not None:
+                skipped.append(cand)  # parked: backoff or quarantine
+                continue
+            key, queries = cand, live
+            break
+        self._rr.extend(skipped)
+        if key is None:
             return None
 
-        engine = self._engine_for(key, queries[0])
+        try:
+            engine = self._engine_for(key, queries[0])
+        except Exception as exc:
+            self._handle_failure(key, queries, exc, now, phase="build")
+            self._requeue(key)
+            return key
         chunk = engine.chunk_size
 
         # deal slots round-robin across this key's queries (iteration order
@@ -370,8 +500,19 @@ class CountingService:
         bases = jnp.asarray(np.stack([q._base_key for q, _ in alloc]))
         idxs = jnp.asarray(np.asarray([idx for _, idx in alloc], np.uint32))
         keys_np = np.asarray(jax.vmap(jax.random.fold_in)(bases, idxs), np.uint32)
-        rows = engine.count_keys_chunk(keys_np)  # (len(alloc), T) float64
+        try:
+            rows = engine.count_keys_chunk(keys_np)  # (len(alloc), T) float64
+        except Exception as exc:
+            # nothing was scattered and no ``_drawn`` advanced, so a retry
+            # re-draws the exact same fold_in colorings — surviving queries
+            # stay bit-exact vs an unfailed run (the cancel mechanism)
+            self._handle_failure(key, queries, exc, now, phase="launch")
+            self._requeue(key)
+            return key
         self.launch_log.append(key)
+        fs = self._fail.get(key)
+        if fs is not None:
+            fs.note_success()
 
         # scatter results back per query, in iteration order, and advance
         per_query: Dict[int, List[np.ndarray]] = {}
@@ -382,6 +523,22 @@ class CountingService:
             q = by_qid[qid]
             block = np.stack(qrows)
             q._drawn += block.shape[0]
+            if not np.isfinite(block).all():
+                # catch NaN/Inf BEFORE the stopper folds it into Welford
+                # state — only the query whose colorings produced the bad
+                # rows fails; launch-mates keep their (finite) blocks
+                self.fault_counters["non_finite"] += 1
+                self._fail_query(
+                    q,
+                    ServiceError(
+                        "non_finite",
+                        "chunk produced NaN/Inf estimates for this query's "
+                        "colorings",
+                        engine_key=key,
+                        qid=q.qid,
+                    ),
+                )
+                continue
             q.status = "running"
             if q.record_rows:
                 q.rows.append(block)
@@ -389,15 +546,18 @@ class CountingService:
             if q.stopper.done:
                 self._finalize(q)
 
+        self._requeue(key)
+        return key
+
+    def _requeue(self, key: Tuple) -> None:
         still_live = [q for q in self._active.get(key, []) if not q.finished]
         if still_live:
             self._active[key] = still_live
             self._rr.append(key)
         else:
             self._active.pop(key, None)
-        return key
 
-    def _finalize(self, query: Query) -> None:
+    def _finalize(self, query: Query, *, degraded: bool = False) -> None:
         cis: List[TemplateCI] = query.stopper.estimates()
         query.estimates = [
             QueryEstimate(
@@ -406,19 +566,232 @@ class CountingService:
                 std=ci.std,
                 halfwidth=0.0 if query.epsilon is None else ci.halfwidth,
                 converged=ci.converged,
+                halfwidth_normal=ci.halfwidth_normal,
+                halfwidth_bernstein=ci.halfwidth_bernstein,
+                degraded=degraded,
             )
             for t, ci in zip(query.templates, cis)
         ]
+        query.degraded = degraded
         query.status = "done"
         self.queries_completed += 1
+        if degraded:
+            self.queries_degraded += 1
+
+    def _fail_query(self, query: Query, error: ServiceError) -> None:
+        query.error = error
+        query.status = "failed"
+        self.queries_failed += 1
+
+    def _sweep_deadlines(self, now: float) -> None:
+        """Resolve every live query whose deadline has passed.
+
+        Accuracy/latency degradation, not an error: a query with an armed
+        stopper (>= 2 iterations, so both CI halfwidths exist) finalizes
+        ``done`` with its running estimate and ``degraded=True``; one that
+        never accumulated two samples fails with a ``deadline`` error.
+        """
+        for key in list(self._active):
+            for q in self._active.get(key, []):
+                if q.finished or q.deadline_at is None or now < q.deadline_at:
+                    continue
+                if q.stopper.count >= 2:
+                    self._finalize(q, degraded=True)
+                else:
+                    self._fail_query(
+                        q,
+                        ServiceError(
+                            "deadline",
+                            f"deadline passed after {q.stopper.count} "
+                            f"iterations — too few for a running estimate",
+                            engine_key=key,
+                            qid=q.qid,
+                        ),
+                    )
+
+    def _ladder_for(self, key: Tuple, query: Query) -> List:
+        """This key's degradation rungs (memoized; base config from the
+        cache key itself, so it is stable however the engine is rebuilt)."""
+        if key not in self._ladders:
+            backend = key[3]
+            chunk_spec, column_batch = key[6], key[7]
+            if chunk_spec[0] == "chunk":
+                base_chunk = int(chunk_spec[1])
+            else:
+                from repro.core.engine import DtypePolicy
+                from repro.plan.cost import admission_estimate
+
+                base_chunk = admission_estimate(
+                    self.graph(query.graph_ref),
+                    query.templates,
+                    store_dtype=DtypePolicy.resolve(self.dtype_policy).store_dtype,
+                    memory_budget_bytes=self.memory_budget_bytes,
+                ).chunk_size
+            self._ladders[key] = degradation_ladder(
+                base_chunk, column_batch, backend
+            )
+        return self._ladders[key]
+
+    def _handle_failure(
+        self,
+        key: Tuple,
+        queries: List[Query],
+        exc: Exception,
+        now: float,
+        *,
+        phase: str,
+    ) -> None:
+        """Classify one failed build/launch attempt and apply its policy."""
+        kind = classify_failure(exc)
+        self.fault_counters[kind] += 1
+        fs = self._fail.setdefault(key, FailState())
+
+        if kind == "transient":
+            policy = queries[0].retry_policy or self.default_retry_policy
+            fs.note_transient(now, policy)
+            for q in queries:
+                pol = q.retry_policy or self.default_retry_policy
+                q.retries += 1
+                fs.retries_total += 1
+                if q.retries > pol.max_retries:
+                    self._fail_query(
+                        q,
+                        ServiceError(
+                            "retries_exhausted",
+                            f"{pol.max_retries} retries spent at {phase}",
+                            engine_key=key,
+                            qid=q.qid,
+                            cause=exc,
+                        ),
+                    )
+            return
+
+        if kind == "memory":
+            fs.note_memory()
+            rungs = self._ladder_for(key, queries[0])
+            if fs.ladder_rung >= len(rungs):
+                for q in queries:
+                    self._fail_query(
+                        q,
+                        ServiceError(
+                            "memory_exhausted",
+                            f"degradation ladder exhausted after "
+                            f"{len(rungs)} rungs at {phase}",
+                            engine_key=key,
+                            qid=q.qid,
+                            cause=exc,
+                        ),
+                    )
+                return
+            rung = rungs[fs.ladder_rung]
+            fs.ladder_rung += 1
+            overrides = {"chunk_size": rung.chunk_size}
+            if rung.column_batch is not None:
+                overrides["column_batch"] = rung.column_batch
+            if rung.backend is not None:
+                overrides["backend"] = rung.backend
+            self._overrides[key] = overrides
+            self._cache.invalidate(key)  # next step rebuilds at the rung
+            fs.ladder_log.append(
+                {
+                    "rung": fs.ladder_rung,
+                    "action": rung.action,
+                    "phase": phase,
+                    **overrides,
+                    "repriced_chunk_bytes": self._reprice_rung(
+                        key, queries[0], rung
+                    ),
+                }
+            )
+            return
+
+        # deterministic: retries will never clear it — fail the attempt's
+        # queries now, and after repeat strikes quarantine the key so the
+        # poisoned (graph, template) pair stops consuming its ring slot
+        until = fs.note_deterministic(now, self.quarantine_base_s)
+        for q in queries:
+            self._fail_query(
+                q,
+                ServiceError(
+                    "deterministic",
+                    f"{type(exc).__name__} at {phase}: {exc}",
+                    engine_key=key,
+                    qid=q.qid,
+                    cause=exc,
+                ),
+            )
+        if until is not None:
+            self._cache.invalidate(key)  # a fresh build gets a clean slate
+
+    def _reprice_rung(self, key: Tuple, query: Query, rung) -> int:
+        """``admission_estimate`` re-prices the rung's launch residency
+        (recorded in the ladder log and used by ``admission_bytes`` until
+        the rebuilt engine answers exactly)."""
+        from repro.core.engine import DtypePolicy
+        from repro.plan.cost import admission_estimate
+
+        return admission_estimate(
+            self.graph(query.graph_ref),
+            query.templates,
+            store_dtype=DtypePolicy.resolve(self.dtype_policy).store_dtype,
+            chunk_size=rung.chunk_size,
+            memory_budget_bytes=self.memory_budget_bytes,
+        ).chunk_bytes
+
+    def _next_event_at(self) -> Optional[float]:
+        """Earliest instant parked/deadlined work becomes actionable
+        (None when nothing is waiting on a timer)."""
+        now = self.clock.now()
+        times: List[float] = []
+        for key, qs in self._active.items():
+            live = [q for q in qs if not q.finished]
+            if not live:
+                continue
+            fs = self._fail.get(key)
+            until = fs.blocked_until(now) if fs is not None else None
+            if until is None:
+                return now  # a key is schedulable right now
+            times.append(until)
+            times.extend(
+                q.deadline_at for q in live if q.deadline_at is not None
+            )
+        return min(times) if times else None
+
+    def _wait_until(self, target: float) -> None:
+        """Advance a manual clock, or sleep a bounded slice of wall time."""
+        now = self.clock.now()
+        if target <= now:
+            return
+        advance = getattr(self.clock, "advance", None)
+        if advance is not None:
+            advance(target - now)
+        else:
+            time.sleep(min(target - now, 0.05))
 
     def run(self, max_launches: Optional[int] = None) -> None:
-        """Drive the admission loop until every submitted query is done."""
+        """Drive the admission loop until every submitted query resolves.
+
+        When every key with pending work is parked (retry backoff /
+        quarantine), waits for the next timer — advancing a manual clock
+        deterministically, or sleeping in bounded slices on a system clock
+        — instead of spinning or returning early.
+        """
         launches = 0
-        while self.step() is not None:
-            launches += 1
-            if max_launches is not None and launches >= max_launches:
+        while True:
+            served = self.step()
+            if served is not None:
+                launches += 1
+                if max_launches is not None and launches >= max_launches:
+                    return
+                continue
+            if not self.has_pending():
                 return
+            target = self._next_event_at()
+            if target is None:  # pragma: no cover - defensive
+                raise RuntimeError(
+                    "pending work but no schedulable key and no armed timer"
+                )
+            self._wait_until(target)
 
     def has_pending(self) -> bool:
         """True while any admitted query still needs launches."""
@@ -498,6 +871,7 @@ class CountingService:
                 dtype_policy=self.dtype_policy,
                 chunk_size=self.chunk_size,
                 memory_budget_bytes=self.memory_budget_bytes,
+                **self.engine_kwargs,
             )
 
         engine = self._cache.get(key, build)
@@ -564,10 +938,14 @@ class CountingService:
         return self._cache.peek(key)
 
     def stats(self) -> Dict:
-        """Service counters: cache hit/miss/evict, launches, completions."""
+        """Service counters: cache hit/miss/evict, launches, completions,
+        and the failure-semantics block (``faults``: classified failure
+        counts, total retries, currently-quarantined keys, per-key failure
+        state, and each key's degradation-ladder walk)."""
         by_key: Dict[Tuple, int] = {}
         for key in self.launch_log:
             by_key[key] = by_key.get(key, 0) + 1
+        now = self.clock.now()
         return {
             "cache": self._cache.counters(),
             "launches": len(self.launch_log),
@@ -575,6 +953,22 @@ class CountingService:
             "queries_submitted": self._next_qid,
             "queries_completed": self.queries_completed,
             "queries_cancelled": self.queries_cancelled,
+            "queries_failed": self.queries_failed,
+            "queries_degraded": self.queries_degraded,
+            "faults": {
+                **self.fault_counters,
+                "retries": sum(fs.retries_total for fs in self._fail.values()),
+                "quarantined_keys": [
+                    k for k, fs in self._fail.items()
+                    if fs.quarantined_until > now
+                ],
+                "keys": {k: fs.describe(now) for k, fs in self._fail.items()},
+                "ladder": {
+                    k: list(fs.ladder_log)
+                    for k, fs in self._fail.items()
+                    if fs.ladder_log
+                },
+            },
             "engines": [
                 self._cache.peek(k).describe()
                 for k in self._cache.keys()

@@ -52,6 +52,8 @@ from concurrent.futures import CancelledError
 from dataclasses import dataclass
 from typing import Deque, Dict, List, Optional, Set, Tuple
 
+from repro.testing import faults as _faults
+
 from .counting import CountingService, Query
 from .qos import (
     DEFAULT_MAX_PENDING,
@@ -61,6 +63,7 @@ from .qos import (
     TenantPolicy,
     TenantState,
 )
+from .resilience import ServiceError
 
 __all__ = [
     "ServiceFrontend",
@@ -69,7 +72,13 @@ __all__ = [
     "QoSRejected",
     "make_frontend",
     "DEFAULT_ADMISSION_BUDGET_FACTOR",
+    "DEFAULT_WATCHDOG_INTERVAL_S",
 ]
+
+#: Scheduler-staleness threshold for :meth:`ServiceFrontend.health`: a
+#: started frontend whose last round is older than this (with work
+#: pending) is reported unhealthy.
+DEFAULT_WATCHDOG_INTERVAL_S = 1.0
 
 #: Default admission budget = this factor x the service's per-engine memory
 #: budget — i.e. "at most N full-budget launches resident at once".
@@ -125,6 +134,7 @@ class QueryFuture:
         templates,
         submit_kwargs: Dict,
         admission_bytes: int,
+        deadline_at: Optional[float] = None,
     ):
         self._frontend = frontend
         self.tenant = tenant
@@ -132,9 +142,11 @@ class QueryFuture:
         self.templates = templates  # resolved Template tuple
         self.submit_kwargs = submit_kwargs
         self.admission_bytes = int(admission_bytes)
+        self.deadline_at = deadline_at  # frontend-clock absolute deadline
         self._event = threading.Event()
         self._query: Optional[Query] = None
-        self._state = "queued"  # queued -> admitted -> done | cancelled
+        self._error: Optional[ServiceError] = None
+        self._state = "queued"  # queued -> admitted -> done | cancelled | failed
         # clock timestamps + scheduler-round indices (fairness accounting)
         self.submitted_at: float = frontend._clock.now()
         self.admitted_at: Optional[float] = None
@@ -152,6 +164,13 @@ class QueryFuture:
     def cancelled(self) -> bool:
         return self._event.is_set() and self._state == "cancelled"
 
+    def failed(self) -> bool:
+        return self._event.is_set() and self._state == "failed"
+
+    def exception(self) -> Optional[ServiceError]:
+        """The structured failure, or ``None`` (does not block)."""
+        return self._error
+
     @property
     def state(self) -> str:
         return self._state
@@ -168,10 +187,14 @@ class QueryFuture:
     def result(self, timeout: Optional[float] = None):
         """Block until resolved; the per-template ``QueryEstimate`` list.
 
-        Raises ``TimeoutError`` if ``timeout`` elapses first and
+        Raises ``TimeoutError`` if ``timeout`` elapses first,
         :class:`concurrent.futures.CancelledError` if the query was
-        cancelled.  In manual-clock test mode drive the scheduler with
-        ``frontend.step()``/``drain()`` before calling.
+        cancelled, and the structured
+        :class:`~repro.serve.resilience.ServiceError` if it failed
+        (retries exhausted, ladder exhausted, deadline with no samples,
+        quarantined key, or a tripped scheduler).  In manual-clock test
+        mode drive the scheduler with ``frontend.step()``/``drain()``
+        before calling.
         """
         if not self._event.wait(timeout):
             raise TimeoutError(
@@ -179,6 +202,8 @@ class QueryFuture:
             )
         if self._state == "cancelled":
             raise CancelledError(f"query for tenant {self.tenant!r} was cancelled")
+        if self._state == "failed":
+            raise self._error
         return self._query.result()
 
     def cancel(self) -> bool:
@@ -208,6 +233,9 @@ class ServiceFrontend:
         ``DEFAULT_ADMISSION_BUDGET_FACTOR x service.memory_budget_bytes``.
       default_max_pending: queue cap for auto-registered tenants.
       poll_interval: scheduler-thread idle/parked wait (threaded mode only).
+      watchdog_interval: staleness threshold for :meth:`health` — a
+        started frontend with pending work whose last completed round is
+        older than this reports ``healthy=False``.
     """
 
     def __init__(
@@ -218,9 +246,17 @@ class ServiceFrontend:
         admission_budget_bytes: Optional[int] = None,
         default_max_pending: int = DEFAULT_MAX_PENDING,
         poll_interval: float = 0.005,
+        watchdog_interval: float = DEFAULT_WATCHDOG_INTERVAL_S,
     ):
         self._svc = service
         self._clock = clock if clock is not None else SystemClock()
+        # one clock for the whole stack: deadlines stamped here are swept
+        # by the service, so a manual frontend clock must drive the
+        # service's timers too (explicitly configured clocks are kept)
+        if isinstance(service.clock, SystemClock) and not isinstance(
+            self._clock, SystemClock
+        ):
+            service.clock = self._clock
         self._lock = threading.RLock()
         self._work = threading.Condition(self._lock)
         self.admission_budget_bytes = (
@@ -237,9 +273,18 @@ class ServiceFrontend:
         self._rounds = 0
         self._warm_queue: Deque[Tuple[Tuple, str, tuple]] = deque()
         self._warm_done: Set[Tuple] = set()
-        self.rejections: Dict[str, int] = {"queue_full": 0, "over_budget": 0}
+        self.rejections: Dict[str, int] = {
+            "queue_full": 0,
+            "over_budget": 0,
+            "draining": 0,
+        }
         self._thread: Optional[threading.Thread] = None
         self._stop_flag = False
+        self.watchdog_interval = float(watchdog_interval)
+        self._state = "running"  # running -> draining (watchdog tripped)
+        self._last_error: Optional[ServiceError] = None
+        self._last_round_at: Optional[float] = None
+        self.queries_failed = 0
 
     @property
     def service(self) -> CountingService:
@@ -297,17 +342,31 @@ class ServiceFrontend:
         """Enqueue a query for ``tenant``; returns its future immediately.
 
         ``submit_kwargs`` go verbatim to :meth:`CountingService.submit`
-        (epsilon / delta / iterations / seed / bound / record_rows).
-        Raises :class:`QoSRejected` instead of queuing when backpressure
-        applies (see the class docstring); otherwise never blocks on the
-        scheduler.
+        (epsilon / delta / iterations / seed / bound / record_rows /
+        retry_policy) — except ``deadline=`` (seconds from now), which the
+        frontend owns: the clock starts at *this* call, covering queue
+        wait as well as execution, and a future whose deadline expires
+        while still queued fails with a structured ``kind="deadline"``
+        :class:`~repro.serve.resilience.ServiceError` without ever
+        entering the service.  Raises :class:`QoSRejected` instead of
+        queuing when backpressure applies (see the class docstring) or
+        the frontend is draining after a watchdog trip; otherwise never
+        blocks on the scheduler.
         """
         submit_kwargs.pop("tenant", None)  # stamped by the scheduler
+        deadline = submit_kwargs.pop("deadline", None)
         # price the query BEFORE taking the queue slot: resolving templates
         # and planning are pure host work, safe outside the lock
         tset = self._svc._resolve_templates(templates)
         est = self._svc.admission_bytes(graph_ref, tset)
         with self._work:
+            if self._state == "draining":
+                self.rejections["draining"] += 1
+                raise QoSRejected(
+                    "draining",
+                    f"frontend is draining after a scheduler failure: "
+                    f"{self._last_error}",
+                )
             state = self._tenant(tenant)
             if est > self.admission_budget_bytes:
                 self.rejections["over_budget"] += 1
@@ -325,7 +384,17 @@ class ServiceFrontend:
                     f"tenant {tenant!r} at max_pending="
                     f"{state.policy.max_pending}",
                 )
-            fut = QueryFuture(self, tenant, graph_ref, tset, dict(submit_kwargs), est)
+            fut = QueryFuture(
+                self,
+                tenant,
+                graph_ref,
+                tset,
+                dict(submit_kwargs),
+                est,
+                deadline_at=(
+                    None if deadline is None else self._clock.now() + float(deadline)
+                ),
+            )
             state.queue.append(fut)
             state.counters["submitted"] += 1
             self._work.notify_all()
@@ -381,81 +450,199 @@ class ServiceFrontend:
         (``CountingService.step()`` — the engine-key round-robin); (4) a
         completion sweep resolving futures whose queries finished.  The
         returned dict (``warmed`` / ``admitted`` / ``launched`` /
-        ``completed`` / ``progressed``) is the observability record the
-        deterministic tests assert on.
+        ``completed`` / ``failed`` / ``progressed``) is the observability
+        record the deterministic tests assert on.
+
+        **Supervision.**  Per-query failures (retries exhausted, ladder
+        exhausted, quarantined key, deadline) resolve just that future
+        with its structured error — the round continues.  An exception
+        that escapes the round itself is a scheduler fault: the watchdog
+        fails *every* queued and in-flight future with a
+        ``kind="scheduler"`` :class:`ServiceError` (cause + round index),
+        transitions the frontend to ``draining`` (submits rejected), and
+        re-raises the structured error to the caller / scheduler thread.
         """
         with self._lock:
+            if self._state == "draining":
+                raise ServiceError(
+                    "scheduler",
+                    "frontend is draining after a scheduler failure",
+                    round_index=self._rounds,
+                    cause=self._last_error,
+                )
             self._rounds += 1
-            info = {
-                "round": self._rounds,
-                "warmed": None,
-                "admitted": [],
-                "launched": None,
-                "completed": [],
-                "progressed": False,
-            }
+            try:
+                return self._step_round()
+            except ServiceError:
+                raise  # a prior trip re-surfacing; already handled
+            except BaseException as exc:
+                raise self._trip(exc) from exc
 
-            if self._warm_queue:
-                key, graph_ref, tset = self._warm_queue.popleft()
-                if key not in self._warm_done:
-                    self._svc.prewarm(graph_ref, tset)
-                    self._warm_done.add(key)
-                    info["warmed"] = key
+    def _step_round(self) -> Dict:
+        """One round's body; runs under the lock, supervised by step()."""
+        # ONE fault-checkable clock read per round: the injected-fault
+        # harness can skew it (deadline chaos) or raise through it
+        # (watchdog-trip drills).  submit()/cancel() timestamps stay on
+        # the plain clock — only the scheduler is supervised.
+        now = _faults.clock_read(self._clock.now())
+        info = {
+            "round": self._rounds,
+            "warmed": None,
+            "admitted": [],
+            "launched": None,
+            "completed": [],
+            "failed": [],
+            "progressed": False,
+        }
 
-            for tier in sorted(self._tier_rings, reverse=True):
-                ring = self._tier_rings[tier]
-                for _ in range(len(ring)):
-                    name = ring[0]
-                    ring.rotate(-1)
-                    state = self._tenants[name]
-                    if not state.queue:
-                        continue
-                    fut = state.queue[0]
-                    if (
-                        self._inflight_bytes + fut.admission_bytes
-                        > self.admission_budget_bytes
-                    ):
-                        continue  # waits for in-flight bytes to retire
-                    if state.bucket is not None and not state.bucket.try_acquire():
-                        continue  # rate-limited: try again next round
-                    state.queue.popleft()
+        # deadline sweep over *queued* futures: a query whose deadline
+        # passed while waiting for admission fails here, before it can
+        # take a service slot it can no longer use
+        for state in self._tenants.values():
+            expired = [
+                f
+                for f in state.queue
+                if f.deadline_at is not None and now >= f.deadline_at
+            ]
+            for fut in expired:
+                state.queue.remove(fut)
+                self._fail_future(
+                    fut,
+                    ServiceError(
+                        "deadline",
+                        f"deadline expired before admission "
+                        f"(queued {now - fut.submitted_at:.3f}s)",
+                        round_index=self._rounds,
+                    ),
+                )
+                info["failed"].append((fut.tenant, "deadline"))
+
+        if self._warm_queue:
+            key, graph_ref, tset = self._warm_queue.popleft()
+            if key not in self._warm_done:
+                self._svc.prewarm(graph_ref, tset)
+                self._warm_done.add(key)
+                info["warmed"] = key
+
+        for tier in sorted(self._tier_rings, reverse=True):
+            ring = self._tier_rings[tier]
+            for _ in range(len(ring)):
+                name = ring[0]
+                ring.rotate(-1)
+                state = self._tenants[name]
+                if not state.queue:
+                    continue
+                fut = state.queue[0]
+                if (
+                    self._inflight_bytes + fut.admission_bytes
+                    > self.admission_budget_bytes
+                ):
+                    continue  # waits for in-flight bytes to retire
+                if state.bucket is not None and not state.bucket.try_acquire():
+                    continue  # rate-limited: try again next round
+                state.queue.popleft()
+                kwargs = dict(fut.submit_kwargs)
+                if fut.deadline_at is not None:
+                    # clocks are aligned (see __init__), so the remaining
+                    # frontend budget is the service-relative deadline
+                    kwargs["deadline"] = fut.deadline_at - now
+                try:
                     fut._query = self._svc.submit(
                         fut.graph_ref,
                         fut.templates,
                         tenant=name,
-                        **fut.submit_kwargs,
+                        **kwargs,
                     )
-                    fut._state = "admitted"
-                    fut.admitted_at = self._clock.now()
-                    fut.admitted_round = self._rounds
-                    state.inflight += 1
-                    state.counters["admitted"] += 1
-                    self._inflight_bytes += fut.admission_bytes
-                    self._admitted.append(fut)
-                    info["admitted"].append((name, fut._query.qid))
+                except ServiceError as exc:
+                    # per-query rejection (e.g. a quarantined engine key):
+                    # fail THIS future; the scheduler itself is healthy
+                    self._fail_future(fut, exc)
+                    info["failed"].append((name, exc.kind))
+                    continue
+                fut._state = "admitted"
+                fut.admitted_at = self._clock.now()
+                fut.admitted_round = self._rounds
+                state.inflight += 1
+                state.counters["admitted"] += 1
+                self._inflight_bytes += fut.admission_bytes
+                self._admitted.append(fut)
+                info["admitted"].append((name, fut._query.qid))
 
-            info["launched"] = self._svc.step()
+        info["launched"] = self._svc.step()
 
-            still = []
-            for fut in self._admitted:
-                if fut._query.finished:
-                    state = self._tenants[fut.tenant]
-                    state.inflight -= 1
+        still = []
+        for fut in self._admitted:
+            if fut._query.finished:
+                state = self._tenants[fut.tenant]
+                state.inflight -= 1
+                self._inflight_bytes -= fut.admission_bytes
+                if fut._query.failed:
+                    state.counters["failed"] += 1
+                    fut._error = fut._query.error
+                    self.queries_failed += 1
+                    self._resolve(fut, "failed")
+                    info["failed"].append((fut.tenant, fut._query.error.kind))
+                else:
                     state.counters["completed"] += 1
-                    self._inflight_bytes -= fut.admission_bytes
                     self._resolve(fut, "done")
                     info["completed"].append((fut.tenant, fut._query.qid))
-                else:
-                    still.append(fut)
-            self._admitted = still
+            else:
+                still.append(fut)
+        self._admitted = still
 
-            info["progressed"] = bool(
-                info["warmed"] is not None
-                or info["admitted"]
-                or info["launched"] is not None
-                or info["completed"]
-            )
-            return info
+        self._last_round_at = self._clock.now()
+        info["progressed"] = bool(
+            info["warmed"] is not None
+            or info["admitted"]
+            or info["launched"] is not None
+            or info["completed"]
+            or info["failed"]
+        )
+        return info
+
+    def _fail_future(self, fut: QueryFuture, error: ServiceError) -> None:
+        """Resolve one future as failed (caller holds the lock)."""
+        fut._error = error
+        self.queries_failed += 1
+        state = self._tenants.get(fut.tenant)
+        if state is not None:
+            state.counters["failed"] += 1
+        self._resolve(fut, "failed")
+
+    def _trip(self, exc: BaseException) -> ServiceError:
+        """Watchdog: a scheduler-fatal exception escaped a round.
+
+        Every queued and in-flight future is failed with a structured
+        ``kind="scheduler"`` error carrying the cause, the engine key (if
+        the failure identified one), and the round index; the frontend
+        transitions to ``draining`` (submits rejected, rounds refused)
+        and the scheduler thread — if any — exits its loop.  Returns the
+        error for step() to raise.
+        """
+        engine_key = getattr(exc, "engine_key", None)
+        err = ServiceError(
+            "scheduler",
+            f"scheduler round {self._rounds} failed: {exc}",
+            engine_key=engine_key,
+            round_index=self._rounds,
+            cause=exc,
+        )
+        self._last_error = err
+        self._state = "draining"
+        self._stop_flag = True  # a threaded scheduler exits its loop
+        for state in self._tenants.values():
+            while state.queue:
+                self._fail_future(state.queue.popleft(), err)
+        for fut in self._admitted:
+            if fut._query is not None and not fut._query.finished:
+                self._svc.cancel(fut._query)
+            state = self._tenants[fut.tenant]
+            state.inflight -= 1
+            self._fail_future(fut, err)
+        self._admitted = []
+        self._inflight_bytes = 0
+        self._work.notify_all()
+        return err
 
     def _resolve(self, fut: QueryFuture, state: str) -> None:
         fut._state = state
@@ -536,7 +723,13 @@ class ServiceFrontend:
                 if not self._has_work_locked():
                     self._work.wait(self.poll_interval)
                     continue
-            info = self.step()
+            try:
+                info = self.step()
+            except ServiceError:
+                # the watchdog already failed every future and moved the
+                # frontend to draining — the thread's job is done; exit
+                # cleanly so health() can report thread_alive=False
+                return
             if not info["progressed"]:
                 # only rate-/budget-parked work: let buckets refill
                 with self._work:
@@ -587,13 +780,61 @@ class ServiceFrontend:
                 for t, ci in zip(q.templates, q.progress())
             ]
 
+    def health(self) -> Dict:
+        """Liveness + failure snapshot for external supervision.
+
+        ``healthy`` means: not draining, and — when started with pending
+        work — the scheduler thread is alive and its last completed round
+        is no staler than ``watchdog_interval``.  The rest is the failure
+        surface: the last scheduler error, the service's quarantined
+        engine keys, and cumulative retry / fault counters.
+        """
+        with self._lock:
+            thread_alive = self._thread is not None and self._thread.is_alive()
+            pending = self._unresolved()
+            now = self._clock.now()
+            stale = bool(
+                self._thread is not None
+                and pending
+                and (
+                    self._last_round_at is None
+                    or now - self._last_round_at > self.watchdog_interval
+                )
+            )
+            svc_faults = self._svc.stats()["faults"]
+            return {
+                "state": self._state,
+                "healthy": (
+                    self._state == "running"
+                    and not stale
+                    and (self._thread is None or thread_alive)
+                ),
+                "thread_alive": thread_alive,
+                "scheduler_stale": stale,
+                "rounds": self._rounds,
+                "last_round_at": self._last_round_at,
+                "unresolved": pending,
+                "queries_failed": self.queries_failed,
+                "last_error": (
+                    None if self._last_error is None else self._last_error.describe()
+                ),
+                "quarantined_keys": svc_faults["quarantined_keys"],
+                "retries": svc_faults["retries"],
+                "fault_counters": {
+                    k: svc_faults[k]
+                    for k in ("transient", "memory", "deterministic", "non_finite")
+                },
+            }
+
     def stats(self) -> Dict:
         """Scheduler + per-tenant + service counters, one snapshot."""
         with self._lock:
             return {
                 "rounds": self._rounds,
+                "state": self._state,
                 "inflight_bytes": self._inflight_bytes,
                 "admission_budget_bytes": self.admission_budget_bytes,
+                "queries_failed": self.queries_failed,
                 "rejections": dict(self.rejections),
                 "warm": {
                     "queued": len(self._warm_queue),

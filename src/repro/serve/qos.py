@@ -19,8 +19,8 @@ Three layers:
   (queue cap — submissions beyond it are rejected with backpressure).
 * :class:`TenantState` — the scheduler's live bookkeeping for one tenant:
   the FIFO of not-yet-admitted submissions, the bucket, and counters
-  (submitted / admitted / completed / cancelled / rejected) surfaced by
-  ``frontend.stats()``.
+  (submitted / admitted / completed / cancelled / failed / rejected)
+  surfaced by ``frontend.stats()``.
 """
 
 from __future__ import annotations
@@ -159,6 +159,7 @@ class TenantState:
             "admitted": 0,
             "completed": 0,
             "cancelled": 0,
+            "failed": 0,
             "rejected": 0,
         }
     )

@@ -182,10 +182,25 @@ class AdaptiveStopper:
     # -- accumulation --------------------------------------------------------
 
     def update(self, rows: np.ndarray) -> None:
-        """Fold ``(m, T)`` per-coloring estimates into the running moments."""
+        """Fold ``(m, T)`` per-coloring estimates into the running moments.
+
+        Rejects any block containing a non-finite value (NaN/Inf) *before*
+        touching the Welford state: one NaN would silently poison the
+        running mean AND the variance — and a NaN variance makes the CI
+        halfwidth NaN, whose ``<=`` comparison is False-but-plausible, so
+        a corrupted stream could fake convergence or never stop.  The
+        whole block is refused atomically (state unchanged), so the
+        serving layer can fail just the affected query and keep going.
+        """
         rows = np.asarray(rows, np.float64)
         if rows.ndim != 2 or rows.shape[1] != self.num_templates:
             raise ValueError(f"expected (m, {self.num_templates}) rows, got {rows.shape}")
+        if not np.isfinite(rows).all():
+            bad = [tuple(map(int, cell)) for cell in np.argwhere(~np.isfinite(rows))[:4]]
+            raise ValueError(
+                f"non-finite per-coloring estimate at (row, template) "
+                f"{bad} — rejecting the block; Welford state is unchanged"
+            )
         for row in rows:
             self.count += 1
             delta = row - self._mean

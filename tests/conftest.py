@@ -82,6 +82,12 @@ def pytest_configure(config):
         "(tests/test_frontend.py); check.sh runs them as their own lane "
         "under a per-test timeout so a deadlock fails fast",
     )
+    config.addinivalue_line(
+        "markers",
+        "chaos: seeded fault-injection tests (tests/test_faults.py); "
+        "check.sh runs them as their own lane with a fixed "
+        "REPRO_FAULT_SEED under a per-test timeout",
+    )
     if not _HAVE_PYTEST_TIMEOUT:
         config.addinivalue_line(
             "markers",

@@ -1,0 +1,613 @@
+"""Chaos lane: seeded fault injection through the serving stack.
+
+Everything here runs under a :class:`repro.testing.faults.FaultPlan` — the
+deterministic fault seam — and asserts the failure semantics documented in
+docs/serving.md: transient launch failures retry with backoff and keep
+survivors bit-exact, memory failures walk the degradation ladder, repeated
+deterministic failures quarantine the engine key, deadlines degrade armed
+queries instead of dropping them, NaN chunk results fail only the poisoned
+query, and a scheduler-fatal exception trips the frontend watchdog instead
+of wedging futures.
+
+Determinism bar (ISSUE 8 acceptance): the whole module is seeded — every
+FaultPlan either passes an explicit seed or inherits ``REPRO_FAULT_SEED``
+(fixed by the check.sh chaos lane) — so three consecutive same-seed runs
+produce identical outcomes, including each plan's per-spec fire log.
+"""
+
+import functools
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import rmat_graph
+from repro.serve import (
+    CountingService,
+    ManualClock,
+    QoSRejected,
+    RetryPolicy,
+    ServiceError,
+    ServiceFrontend,
+)
+from repro.serve.resilience import (
+    QUARANTINE_STRIKES,
+    FailState,
+    QuarantinedError,
+    classify_failure,
+)
+from repro.testing import faults
+from repro.testing.faults import (
+    DeterministicFault,
+    FaultPlan,
+    FaultSpec,
+    MemoryFault,
+    TransientFault,
+)
+
+pytestmark = [pytest.mark.chaos, pytest.mark.timeout(300)]
+
+CHUNK = 8
+GRAPHS = {"a": (160, 700, 2), "b": (140, 520, 3)}
+
+#: Zero-backoff policy: chaos tests drive ManualClocks, and a real-time
+#: park would require advancing the clock between every retry round.
+FAST_RETRY = RetryPolicy(max_retries=3, backoff_base=0.0)
+
+
+@functools.lru_cache(maxsize=None)
+def _graph(name):
+    n, e, s = GRAPHS[name]
+    return rmat_graph(n, e, seed=s)
+
+
+def _service(**kw):
+    kw.setdefault("chunk_size", CHUNK)
+    kw.setdefault("retry_policy", FAST_RETRY)
+    kw.setdefault("clock", ManualClock())
+    svc = CountingService(**kw)
+    for name in GRAPHS:
+        svc.register_graph(name, _graph(name))
+    return svc
+
+
+# the no-fault ground truth every faulted run's survivors must equal
+_ORACLE_CACHE = {}
+
+
+def _oracle(gname, tname, seed, iterations):
+    key = (gname, tname, seed, iterations)
+    if key not in _ORACLE_CACHE:
+        assert faults.active_plan() is None, "oracle must run unfaulted"
+        svc = _service()
+        ests = svc.query(gname, tname, iterations=iterations, seed=seed)
+        _ORACLE_CACHE[key] = tuple(e.mean for e in ests)
+    return _ORACLE_CACHE[key]
+
+
+# ---------------------------------------------------------------------------
+# The FaultPlan seam itself
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_fires_are_a_pure_function_of_seed_and_visit_order():
+    def drive(seed):
+        plan = FaultPlan(
+            [FaultSpec(site="launch", kind="transient", rate=0.3)], seed=seed
+        )
+        with plan:
+            outcomes = []
+            for _ in range(50):
+                try:
+                    faults.maybe_fail("launch")
+                    outcomes.append(0)
+                except TransientFault:
+                    outcomes.append(1)
+        return outcomes, plan.describe()[0]["fire_log"]
+
+    a_out, a_log = drive(7)
+    b_out, b_log = drive(7)
+    c_out, _ = drive(8)
+    assert a_out == b_out and a_log == b_log  # same seed => same schedule
+    assert sum(a_out) > 0 and a_out != c_out  # different seed => different
+    # positional: the fire log records visit indices, replayable exactly
+    assert [i for i, fired in enumerate(a_out) if fired] == a_log
+
+
+def test_hooks_are_noops_without_an_installed_plan():
+    faults.maybe_fail("launch")  # must not raise
+    vals = np.ones((4, 2))
+    assert faults.corrupt_result("launch", vals) is vals
+    assert faults.clock_read(12.5) == 12.5
+
+
+def test_plan_scope_is_context_managed_and_does_not_nest():
+    plan = FaultPlan([FaultSpec(site="launch", kind="deterministic")], seed=0)
+    with plan:
+        assert faults.active_plan() is plan
+        with pytest.raises(RuntimeError, match="do not nest"):
+            FaultPlan([], seed=1).install()
+        with pytest.raises(DeterministicFault):
+            faults.maybe_fail("launch")
+    assert faults.active_plan() is None
+    faults.maybe_fail("launch")  # scope ended: seam is cold again
+
+
+def test_spec_after_max_fires_and_ctx_filter():
+    plan = FaultPlan(
+        [
+            FaultSpec(
+                site="launch",
+                kind="memory",
+                after=2,
+                max_fires=1,
+                ctx_filter="backend=dense",
+            )
+        ],
+        seed=0,
+    )
+    with plan:
+        for _ in range(5):
+            faults.maybe_fail("launch", ctx="backend=ell")  # filtered out
+        faults.maybe_fail("launch", ctx="backend=dense")  # visit 0 < after
+        faults.maybe_fail("launch", ctx="backend=dense")  # visit 1 < after
+        with pytest.raises(MemoryFault):
+            faults.maybe_fail("launch", ctx="backend=dense")  # fires
+        faults.maybe_fail("launch", ctx="backend=dense")  # max_fires spent
+    assert plan.fires_by_site() == {"launch": 1}
+
+
+def test_corrupt_result_poisons_one_seeded_row_in_a_copy():
+    plan = FaultPlan([FaultSpec(site="launch", kind="nan")], seed=3)
+    original = np.arange(12, dtype=np.float64).reshape(6, 2)
+    with plan:
+        out1 = faults.corrupt_result("launch", original)
+    with FaultPlan([FaultSpec(site="launch", kind="nan")], seed=3):
+        out2 = faults.corrupt_result("launch", original)
+    assert np.isfinite(original).all()  # never mutated
+    bad1 = np.flatnonzero(~np.isfinite(out1).all(axis=1))
+    assert bad1.size == 1  # exactly one poisoned row
+    assert np.array_equal(out1, out2, equal_nan=True)  # seeded row choice
+
+
+def test_clock_skew_is_cumulative_and_raising_kinds_raise():
+    plan = FaultPlan(
+        [FaultSpec(site="clock", kind="skew", magnitude=2.0, max_fires=2)],
+        seed=0,
+    )
+    with plan:
+        assert faults.clock_read(10.0) == 12.0
+        assert faults.clock_read(10.0) == 14.0
+        assert faults.clock_read(10.0) == 14.0  # max_fires: skew holds
+    with FaultPlan([FaultSpec(site="clock", kind="deterministic")], seed=0):
+        with pytest.raises(DeterministicFault):
+            faults.clock_read(0.0)
+
+
+def test_classify_failure_families():
+    assert classify_failure(TransientFault("launch")) == "transient"
+    assert classify_failure(MemoryFault("launch")) == "memory"
+    assert classify_failure(DeterministicFault("launch")) == "deterministic"
+    assert classify_failure(MemoryError("boom")) == "memory"
+    assert classify_failure(RuntimeError("RESOURCE_EXHAUSTED: oom")) == "memory"
+    assert classify_failure(RuntimeError("UNAVAILABLE: try again")) == "transient"
+    assert classify_failure(ValueError("some compiler bug")) == "deterministic"
+
+
+def test_fail_state_backoff_and_quarantine_windows():
+    pol = RetryPolicy(max_retries=5, backoff_base=0.1, backoff_factor=2.0,
+                      max_backoff=1.0)
+    fs = FailState()
+    assert fs.note_transient(0.0, pol) == pytest.approx(0.1)
+    assert fs.note_transient(0.0, pol) == pytest.approx(0.2)
+    assert fs.note_transient(0.0, pol) == pytest.approx(0.4)
+    for _ in range(5):
+        fs.note_transient(0.0, pol)
+    assert fs.parked_until == pytest.approx(1.0)  # capped
+    fs.note_success()
+    assert fs.consecutive_transient == 0 and fs.blocked_until(0.0) is None
+
+    # quarantine: QUARANTINE_STRIKES deterministic failures arm it, and the
+    # window doubles per re-quarantine
+    for i in range(QUARANTINE_STRIKES - 1):
+        assert fs.note_deterministic(0.0, 1.0) is None
+    assert fs.note_deterministic(0.0, 1.0) == pytest.approx(1.0)
+    for i in range(QUARANTINE_STRIKES):
+        second = fs.note_deterministic(10.0, 1.0)
+    assert second == pytest.approx(12.0)  # 10 + 1.0 * 2**1
+    assert fs.blocked_until(11.0) == pytest.approx(12.0)
+    fs.note_success()
+    assert fs.quarantines == 0 and fs.blocked_until(11.0) is None
+
+
+# ---------------------------------------------------------------------------
+# Service: transient retry keeps results bit-exact
+# ---------------------------------------------------------------------------
+
+
+def test_transient_launch_failures_retry_to_a_bit_exact_result():
+    base = _oracle("a", "u3", 7, 24)
+    svc = _service()
+    plan = FaultPlan(
+        [FaultSpec(site="launch", kind="transient", max_fires=2)], seed=11
+    )
+    with plan:
+        q = svc.submit("a", "u3", iterations=24, seed=7)
+        svc.run()
+    assert q.done and not q.degraded
+    assert tuple(e.mean for e in q.result()) == base  # bit-exact, not close
+    assert q.retries == 2
+    f = svc.stats()["faults"]
+    assert f["transient"] == 2 and f["retries"] == 2
+    assert plan.fires_by_site()["launch"] == 2
+
+
+def test_retries_exhausted_is_a_structured_failure():
+    svc = _service()
+    with FaultPlan([FaultSpec(site="launch", kind="transient")], seed=0):
+        q = svc.submit("a", "u3", iterations=8, seed=1,
+                       retry_policy=RetryPolicy(max_retries=2, backoff_base=0.0))
+        svc.run()
+    assert q.failed
+    err = q.error
+    assert isinstance(err, ServiceError) and err.kind == "retries_exhausted"
+    assert err.engine_key == q.engine_key and err.qid == q.qid
+    assert isinstance(err.cause, TransientFault)
+    with pytest.raises(ServiceError, match="retries_exhausted"):
+        q.result()
+    assert svc.stats()["queries_failed"] == 1
+
+
+def test_launch_mates_survive_one_querys_retry_exhaustion():
+    base = _oracle("a", "u3", 3, 16)
+    svc = _service()
+    # first 3 visits fail: the 0-retry query dies on the first, the default
+    # policy query rides out the rest and must still be bit-exact
+    with FaultPlan(
+        [FaultSpec(site="launch", kind="transient", max_fires=3)], seed=0
+    ):
+        doomed = svc.submit("a", "u3", iterations=16, seed=9,
+                            retry_policy=RetryPolicy(max_retries=0))
+        survivor = svc.submit("a", "u3", iterations=16, seed=3)
+        svc.run()
+    assert doomed.failed and doomed.error.kind == "retries_exhausted"
+    assert survivor.done
+    assert tuple(e.mean for e in survivor.result()) == base
+
+
+# ---------------------------------------------------------------------------
+# Service: memory failures walk the degradation ladder
+# ---------------------------------------------------------------------------
+
+
+def test_memory_failure_walks_one_ladder_rung_bit_exact():
+    base = _oracle("a", "u3", 7, 24)
+    svc = _service()
+    with FaultPlan([FaultSpec(site="launch", kind="memory", max_fires=1)], seed=5):
+        q = svc.submit("a", "u3", iterations=24, seed=7)
+        svc.run()
+    assert q.done
+    # estimates are bit-exact across chunk sizes (engine invariant), so the
+    # halved-chunk rung changes latency, never the answer
+    assert tuple(e.mean for e in q.result()) == base
+    stats = svc.stats()["faults"]
+    assert stats["memory"] == 1
+    (ladder,) = stats["ladder"].values()
+    assert ladder[0]["action"] == "halve_chunk"
+    assert ladder[0]["chunk_size"] == CHUNK // 2
+    assert ladder[0]["repriced_chunk_bytes"] > 0
+    assert svc._cache.counters()["invalidations"] == 1  # rung forced rebuild
+
+
+def test_ladder_exhaustion_fails_with_memory_exhausted():
+    svc = _service(chunk_size=2)
+    # every BUILD fails RESOURCE_EXHAUSTED-style: the service re-prices and
+    # retries down every rung, then gives up with the structured error
+    with FaultPlan([FaultSpec(site="engine_build", kind="memory")], seed=0):
+        q = svc.submit("a", "u3", iterations=8, seed=1)
+        svc.run()
+    assert q.failed and q.error.kind == "memory_exhausted"
+    stats = svc.stats()["faults"]
+    (ladder,) = stats["ladder"].values()
+    assert len(ladder) >= 2  # walked multiple rungs before giving up
+    assert ladder[-1]["chunk_size"] == 1
+    assert stats["memory"] == len(ladder) + 1  # each rung + the final straw
+
+
+# ---------------------------------------------------------------------------
+# Service: deterministic failures quarantine the engine key
+# ---------------------------------------------------------------------------
+
+
+def test_repeat_deterministic_failures_quarantine_then_recover():
+    svc = _service()
+    clk = svc.clock
+    plan = FaultPlan(
+        [FaultSpec(site="launch", kind="deterministic",
+                   max_fires=QUARANTINE_STRIKES)],
+        seed=0,
+    )
+    with plan:
+        q1 = svc.submit("a", "u3", iterations=8, seed=1)
+        svc.run()
+        assert q1.failed and q1.error.kind == "deterministic"
+        q2 = svc.submit("a", "u3", iterations=8, seed=2)
+        svc.run()
+        assert q2.failed
+        # strike QUARANTINE_STRIKES: the key is now quarantined and submit
+        # fast-fails without taking a queue slot
+        assert svc.stats()["faults"]["quarantined_keys"] == [q1.engine_key]
+        with pytest.raises(QuarantinedError) as exc:
+            svc.submit("a", "u3", iterations=8, seed=3)
+        assert exc.value.kind == "quarantined"
+        assert exc.value.retry_at > clk.now()
+        # an unrelated graph's key is untouched by the quarantine
+        ok = svc.submit("b", "u3", iterations=8, seed=1)
+        svc.run()
+        assert ok.done
+    # window passes + the fault is gone: the key recovers bit-exactly
+    clk.advance(svc.quarantine_base_s + 1.0)
+    q4 = svc.submit("a", "u3", iterations=8, seed=1)
+    svc.run()
+    assert q4.done
+    assert tuple(e.mean for e in q4.result()) == _oracle("a", "u3", 1, 8)
+    assert svc.stats()["faults"]["quarantined_keys"] == []
+
+
+# ---------------------------------------------------------------------------
+# Service: deadlines degrade armed queries, fail unarmed ones
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_resolves_armed_query_degraded_with_both_cis():
+    svc = _service()
+    clk = svc.clock
+    # unreachable epsilon: without the deadline this would run all 64
+    q = svc.submit("a", "u3", epsilon=1e-9, iterations=64, seed=5,
+                   deadline=100.0)
+    for _ in range(2):  # 2 launches * CHUNK colorings: the stopper is armed
+        svc.step()
+    assert not q.finished
+    clk.advance(101.0)
+    svc.step()
+    assert q.done and q.degraded
+    (est,) = q.result()
+    assert est.degraded and not est.converged
+    assert est.halfwidth_normal > 0 and est.halfwidth_bernstein > 0
+    assert est.halfwidth_bernstein >= est.halfwidth_normal
+    assert svc.stats()["queries_degraded"] == 1
+
+
+def test_deadline_with_no_samples_fails_structured():
+    svc = _service()
+    q = svc.submit("a", "u3", iterations=8, seed=1, deadline=5.0)
+    svc.clock.advance(6.0)  # expires before any launch
+    svc.step()
+    assert q.failed and q.error.kind == "deadline"
+    assert svc.stats()["queries_degraded"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Service: NaN chunk results fail only the poisoned query
+# ---------------------------------------------------------------------------
+
+
+def test_nan_chunk_result_is_isolated_to_the_poisoned_query():
+    svc = _service()
+    with FaultPlan([FaultSpec(site="launch", kind="nan", max_fires=1)], seed=2):
+        qs = [svc.submit("a", "u3", iterations=16, seed=s) for s in (4, 5)]
+        svc.run()
+    failed = [q for q in qs if q.failed]
+    survived = [q for q in qs if q.done]
+    assert len(failed) == 1 and len(survived) == 1  # co-batched, one poisoned
+    assert failed[0].error.kind == "non_finite"
+    assert svc.fault_counters["non_finite"] == 1
+    s = survived[0]
+    assert tuple(e.mean for e in s.result()) == _oracle("a", "u3", s.seed, 16)
+    # the failed query's Welford state was never corrupted: its running
+    # moments are still finite (the bad block was rejected atomically)
+    assert all(np.isfinite(ci.mean) for ci in failed[0].progress())
+
+
+# ---------------------------------------------------------------------------
+# Frontend: deadlines, quarantine pass-through, and the watchdog
+# ---------------------------------------------------------------------------
+
+
+def _frontend(**svc_kw):
+    svc = _service(clock=None, **svc_kw)  # frontend re-points the clock
+    clk = ManualClock()
+    fe = ServiceFrontend(svc, clock=clk)
+    return svc, fe, clk
+
+
+def test_frontend_deadline_expires_in_queue_before_admission():
+    _, fe, clk = _frontend()
+    fe.register_tenant("slow", rate_qps=0.001, burst=1.0)
+    f1 = fe.submit("slow", "a", "u3", iterations=8, seed=1)
+    fe.step()  # consumes the only burst token on f1
+    f2 = fe.submit("slow", "a", "u3", iterations=8, seed=2, deadline=2.0)
+    clk.advance(5.0)
+    fe.step()
+    assert f2.failed() and f2.exception().kind == "deadline"
+    with pytest.raises(ServiceError, match="deadline"):
+        f2.result(timeout=0)
+    fe.drain()
+    assert tuple(e.mean for e in f1.result(0)) == _oracle("a", "u3", 1, 8)
+    assert fe.stats()["tenants"]["slow"]["failed"] == 1
+
+
+def test_quarantined_submit_fails_one_future_not_the_scheduler():
+    expected = _oracle("b", "u3", 1, 8)
+    _, fe, _ = _frontend()
+    with FaultPlan(
+        [FaultSpec(site="launch", kind="deterministic",
+                   max_fires=QUARANTINE_STRIKES)],
+        seed=1,
+    ):
+        # strike the key QUARANTINE_STRIKES times with separate launch
+        # attempts (co-batched queries would share one strike)
+        for s in range(QUARANTINE_STRIKES):
+            doomed = fe.submit("t", "a", "u3", iterations=8, seed=s)
+            fe.drain()
+            assert doomed.failed() and doomed.exception().kind == "deterministic"
+        late = fe.submit("t", "a", "u3", iterations=8, seed=9)
+        fe.step()
+        # the quarantine rejection resolves ONE future; the frontend stays
+        # healthy and keeps scheduling
+        assert late.failed() and late.exception().kind == "quarantined"
+        h = fe.health()
+        assert h["state"] == "running" and h["healthy"]
+        assert h["quarantined_keys"] != []
+        ok = fe.submit("t", "b", "u3", iterations=8, seed=1)
+        fe.drain()
+        assert tuple(e.mean for e in ok.result(0)) == expected
+
+
+def test_watchdog_trips_on_scheduler_fatal_fault_manual():
+    _, fe, _ = _frontend()
+    f1 = fe.submit("t0", "a", "u3", iterations=8, seed=1)
+    f2 = fe.submit("t1", "b", "u3", iterations=8, seed=2)
+    with FaultPlan([FaultSpec(site="clock", kind="deterministic",
+                              max_fires=1)], seed=0):
+        with pytest.raises(ServiceError) as exc:
+            fe.step()
+    err = exc.value
+    assert err.kind == "scheduler" and err.round_index == 1
+    assert isinstance(err.cause, DeterministicFault)
+    # EVERY future failed with the structured error — none left hanging
+    for f in (f1, f2):
+        assert f.failed() and f.exception().kind == "scheduler"
+        with pytest.raises(ServiceError, match="scheduler"):
+            f.result(timeout=0)
+    h = fe.health()
+    assert h["state"] == "draining" and not h["healthy"]
+    assert h["last_error"]["kind"] == "scheduler"
+    assert h["unresolved"] == 0
+    # draining: new submits are shed, further rounds refused
+    with pytest.raises(QoSRejected, match="draining"):
+        fe.submit("t0", "a", "u3", iterations=4)
+    with pytest.raises(ServiceError, match="scheduler"):
+        fe.step()
+
+
+@pytest.mark.timeout(60)
+def test_watchdog_fails_futures_when_scheduler_thread_dies():
+    """The check.sh chaos smoke: kill the live scheduler thread via a
+    clock fault and assert every in-flight future fails within one
+    watchdog interval instead of hanging."""
+    svc = _service(clock=None)
+    fe = ServiceFrontend(svc, watchdog_interval=1.0, poll_interval=0.002)
+    with FaultPlan(
+        [FaultSpec(site="clock", kind="deterministic", max_fires=1)], seed=0
+    ):
+        with fe:
+            fut = fe.submit("t0", "a", "u3", iterations=8, seed=1)
+            with pytest.raises(ServiceError, match="scheduler"):
+                fut.result(timeout=fe.watchdog_interval)
+            assert fut.failed()
+            deadline = 50
+            while fe._thread is not None and fe._thread.is_alive() and deadline:
+                threading.Event().wait(0.01)
+                deadline -= 1
+            h = fe.health()
+            assert h["state"] == "draining" and not h["thread_alive"]
+
+
+# ---------------------------------------------------------------------------
+# Mesh backend failure surface
+# ---------------------------------------------------------------------------
+
+
+def _mesh():
+    import jax
+
+    return jax.make_mesh((1,), ("dev",))
+
+
+def test_mesh_rejects_bag_plans_as_a_structured_query_failure():
+    svc = _service(backend="mesh", engine_kwargs={"mesh": _mesh()})
+    q = svc.submit("a", "triangle", iterations=8, seed=1)  # non-tree: bag plan
+    svc.run()
+    assert q.failed and q.error.kind == "deterministic"
+    assert isinstance(q.error.cause, NotImplementedError)
+    # the scheduler is not wedged: a tree query on the same service works
+    ok = svc.submit("a", "u3", iterations=8, seed=1)
+    svc.run()
+    assert ok.done
+
+
+def test_mesh_collective_fault_fails_query_not_scheduler():
+    svc = _service(backend="mesh", engine_kwargs={"mesh": _mesh()})
+    base = svc.query("a", "u3", iterations=8, seed=1)
+    with FaultPlan(
+        [FaultSpec(site="collective", kind="deterministic",
+                   max_fires=QUARANTINE_STRIKES - 1)],
+        seed=0,
+    ):
+        q = svc.submit("a", "u3", iterations=8, seed=2)
+        svc.run()
+        assert q.failed and q.error.kind == "deterministic"
+        assert q.error.engine_key == q.engine_key
+        # one strike < QUARANTINE_STRIKES: the key still schedules, and the
+        # next query is served bit-exactly
+        again = svc.submit("a", "u3", iterations=8, seed=1)
+        svc.run()
+        assert again.done
+        assert [e.mean for e in again.result()] == [e.mean for e in base]
+
+
+def test_local_backends_do_not_expose_the_collective_site():
+    svc = _service()  # backend="auto" resolves to a local backend here
+    with FaultPlan([FaultSpec(site="collective", kind="deterministic")], seed=0):
+        q = svc.submit("a", "u3", iterations=8, seed=1)
+        svc.run()
+    assert q.done  # the collective spec never matched a local launch
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: PR 7's 16-thread oracle equality holds WITH a FaultPlan active
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.timeout(600)
+def test_concurrent_submission_bit_exact_under_transient_chaos():
+    jobs = [("a" if i % 2 else "b", "u3", i % 4, 5) for i in range(32)]
+    expected = {j: _oracle(*jobs[j]) for j in range(len(jobs))}
+
+    svc = _service(clock=None)
+    fe = ServiceFrontend(svc, poll_interval=0.002)
+    results, errors = {}, {}
+    lock = threading.Lock()
+
+    def worker(wid):
+        for j in range(wid, len(jobs), 16):
+            gname, tname, seed, iters = jobs[j]
+            fut = fe.submit(f"tenant{wid % 4}", gname, tname,
+                            iterations=iters, seed=seed)
+            try:
+                means = tuple(e.mean for e in fut.result(timeout=300))
+                with lock:
+                    results[j] = means
+            except ServiceError as exc:
+                with lock:
+                    errors[j] = exc
+
+    plan = FaultPlan(
+        [FaultSpec(site="launch", kind="transient", rate=1 / 8)], seed=None
+    )  # seed=None: REPRO_FAULT_SEED, the check.sh-pinned schedule
+    with plan, fe:
+        threads = [threading.Thread(target=worker, args=(w,)) for w in range(16)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+
+    # zero unresolved futures: every job either produced a result or a
+    # structured error — and every survivor is bit-exact vs the oracle
+    assert len(results) + len(errors) == len(jobs)
+    for j, means in results.items():
+        assert means == expected[j], f"job {j} diverged under transient chaos"
+    for j, exc in errors.items():
+        assert exc.kind == "retries_exhausted"
+    assert len(results) > len(jobs) // 2  # chaos at 1/8 is survivable

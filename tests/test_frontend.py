@@ -466,6 +466,63 @@ def test_engine_cache_hammered_from_threads_keeps_counters_consistent():
     assert c["evictions"] == len(builds) - c["size"]
 
 
+def test_engine_cache_raising_factory_never_poisons_the_miss_path():
+    """A factory that raises must leave NO entry behind: a poisoned
+    placeholder would be served to every later hit of that key forever.
+    Hammered from threads with factories that fail ~half the time, every
+    failure propagates, every eventual success is the real object, and the
+    counters reconcile exactly."""
+    cache = EngineCache(capacity=4)
+    keys = [f"k{i}" for i in range(5)]
+    outcomes = []  # ("built" | "raised", key) in build order, lock-held
+    state_lock = threading.Lock()
+
+    def factory(key, should_fail):
+        def build():
+            with state_lock:
+                if should_fail():
+                    outcomes.append(("raised", key))
+                    raise RuntimeError(f"flaky build of {key}")
+                outcomes.append(("built", key))
+            return ("engine", key)
+
+        return build
+
+    n_threads, ops = 8, 300
+
+    def hammer(tid):
+        rng = random.Random(1000 + tid)
+        for _ in range(ops):
+            key = rng.choice(keys)
+            fails_now = rng.random() < 0.5
+            try:
+                got = cache.get(key, factory(key, lambda: fails_now))
+            except RuntimeError:
+                assert cache.peek(key) is None or cache.peek(key) == (
+                    "engine",
+                    key,
+                ), "a failed build left a poisoned entry behind"
+            else:
+                assert got == ("engine", key)
+
+    threads = [threading.Thread(target=hammer, args=(t,)) for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    c = cache.counters()
+    raised = sum(1 for kind, _ in outcomes if kind == "raised")
+    built = sum(1 for kind, _ in outcomes if kind == "built")
+    assert raised > 0 and built > 0  # both paths actually exercised
+    assert c["build_failures"] == raised
+    assert c["misses"] == raised + built  # every miss either built or raised
+    assert c["hits"] + c["misses"] == n_threads * ops
+    # after the dust settles, a clean rebuild works for every key
+    for key in keys:
+        assert cache.get(key, factory(key, lambda: False)) == ("engine", key)
+
+
 # ---------------------------------------------------------------------------
 # Property/stress: random interleavings of submit/cancel/step (satellite)
 # ---------------------------------------------------------------------------

@@ -49,6 +49,8 @@ def test_cache_hit_miss_evict_counters():
         "hits": 1,
         "misses": 4,
         "evictions": 2,
+        "build_failures": 0,
+        "invalidations": 0,
         "size": 2,
         "capacity": 2,
     }

@@ -126,3 +126,44 @@ def test_service_accepts_bernstein_bound():
     assert qn.done and qb.done
     assert qb.iterations >= qn.iterations
     assert qb.iterations < 512 and qb.result()[0].converged
+
+
+def test_update_rejects_non_finite_block_atomically():
+    """A NaN/Inf row must never reach the Welford state: NaN variance makes
+    every CI comparison silently False, so the stopper would run its whole
+    budget and report garbage.  The update is rejected atomically — state
+    identical to before the call — and the error names the bad cell."""
+    st = AdaptiveStopper(2, epsilon=0.1, budget=1024)
+    clean = _heavy_tailed_stream(16, templates=2, seed=7)
+    st.update(clean)
+    before = [(ci.mean, ci.std, ci.halfwidth) for ci in st.estimates()]
+    count_before = st.count
+
+    bad = _heavy_tailed_stream(8, templates=2, seed=8)
+    bad[3, 1] = np.nan
+    with pytest.raises(ValueError, match=r"non-finite.*\(3, 1\)"):
+        st.update(bad)
+    bad[3, 1] = np.inf
+    with pytest.raises(ValueError, match="non-finite"):
+        st.update(bad)
+
+    assert st.count == count_before  # nothing folded in
+    assert [(ci.mean, ci.std, ci.halfwidth) for ci in st.estimates()] == before
+    # and the stopper still works: the clean continuation is accepted
+    st.update(_heavy_tailed_stream(8, templates=2, seed=9))
+    assert st.count == count_before + 8
+    assert all(np.isfinite(ci.mean) for ci in st.estimates())
+
+
+def test_non_finite_guard_on_heavy_tailed_stream_with_spikes():
+    """Heavy-tailed but FINITE spikes must pass the guard (they are exactly
+    what the Bernstein bound exists for); only true NaN/Inf is rejected."""
+    rows = _heavy_tailed_stream(128, seed=10, sigma=2.0)  # extreme spikes
+    st = AdaptiveStopper(1, epsilon=0.05, budget=10**6, bound="bernstein")
+    st.update(rows)  # finite, however spiky: accepted
+    assert st.count == 128
+    poisoned = rows.copy()
+    poisoned[0, 0] = -np.inf
+    with pytest.raises(ValueError, match="non-finite"):
+        st.update(poisoned)
+    assert st.count == 128
