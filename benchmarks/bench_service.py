@@ -30,6 +30,11 @@ Rows (all merged into ``BENCH_counting.json`` for the trend diff):
   the per-tenant mean latencies — ~1.0 when the round-robin admission is
   fair) in ``derived``.  Also runnable alone via ``--frontend-only`` (the
   check.sh load smoke).
+* ``service/frontend_scale/q<N>/tenants<T>`` — the scale sweep: N total
+  queries from T tenant threads, round-robined across 6 pre-warmed
+  engine keys (2 graphs x 3 templates); p50 per-query latency with
+  p99/qps/fairness per tenant count — how admission latency grows as the
+  tenant ring widens over a busy multi-key service.
 * ``service/<graph>/<template>/frontend_chaosN`` — the same N-query load
   under a seeded ``FaultPlan`` injecting transient launch failures at rate
   1/8 (schedule fixed by ``REPRO_FAULT_SEED``): p50/p99 with the
@@ -232,6 +237,105 @@ def frontend_load(
     return out
 
 
+def frontend_scale(
+    *,
+    queries: int = 240,
+    tenant_counts=(2, 4, 8),
+    record_rows: bool = True,
+) -> dict:
+    """Scale the async front-end: hundreds of queries, many engine keys.
+
+    For each tenant count ``T`` a fresh threaded frontend takes ``queries``
+    total queries from ``T`` tenant threads; each tenant round-robins its
+    submissions across every (graph, template) pair — 2 graphs x 3
+    templates = 6 distinct engine keys live in the service's round-robin
+    launch ring at once (all pre-warmed, so the rows measure scheduling,
+    not compilation).  One row per tenant count:
+    ``service/frontend_scale/q<N>/tenants<T>`` — p50 per-query latency
+    with p99, aggregate qps, fairness (max/min of per-tenant mean
+    latency), and the engine-key count in ``derived``.  The p50/p99-vs-
+    tenant-count series is the scheduling-fairness trend the check
+    harness watches.
+    """
+    workloads = [
+        ("rmat2k", rmat_graph(2048, 20_000, seed=1), "u5-1"),
+        ("rmat2k", None, "u5-2"),  # None: reuse the graph registered above
+        ("rmat2k", None, "u6"),
+        ("rmat1k", rmat_graph(1024, 10_000, seed=2), "u5-1"),
+        ("rmat1k", None, "u5-2"),
+        ("rmat1k", None, "u6"),
+    ]
+    out = {}
+    for tenants in tenant_counts:
+        svc = CountingService()
+        for dname, g, tname in workloads:
+            if g is not None:
+                svc.register_graph(dname, g)
+            svc.prewarm(dname, tname)  # all keys warm: measure scheduling
+        fe = ServiceFrontend(svc)
+        per_tenant = queries // tenants
+        futs = {f"tenant{k}": [] for k in range(tenants)}
+
+        def submitter(tenant: str, base_seed: int) -> None:
+            for i in range(per_tenant):
+                dname, _, tname = workloads[(base_seed + i) % len(workloads)]
+                futs[tenant].append(
+                    fe.submit(
+                        tenant, dname, tname, iterations=FIXED_ITERATIONS,
+                        seed=base_seed + i,
+                    )
+                )
+
+        t0 = time.perf_counter()
+        with fe:
+            threads = [
+                threading.Thread(target=submitter, args=(tenant, 1000 * k))
+                for k, tenant in enumerate(futs)
+            ]
+            for th in threads:
+                th.start()
+            for th in threads:
+                th.join()
+            for fs in futs.values():
+                for f in fs:
+                    f.result(timeout=600)
+        wall = time.perf_counter() - t0
+
+        lat_us = {
+            t: np.asarray([f.resolved_at - f.submitted_at for f in fs]) * 1e6
+            for t, fs in futs.items()
+        }
+        all_us = np.concatenate(list(lat_us.values()))
+        tenant_means = [float(l.mean()) for l in lat_us.values()]
+        fairness = max(tenant_means) / max(min(tenant_means), 1e-9)
+        total = per_tenant * tenants
+        row = {
+            "p50_us": float(np.percentile(all_us, 50)),
+            "p99_us": float(np.percentile(all_us, 99)),
+            "qps": total / wall,
+            "fairness": fairness,
+            "queries": total,
+            "engine_keys": len(workloads),
+        }
+        out[tenants] = row
+        if record_rows:
+            record(
+                f"service/frontend_scale/q{queries}/tenants{tenants}",
+                row["p50_us"],
+                f"p99_us={row['p99_us']:.0f};qps={row['qps']:.1f};"
+                f"fairness={fairness:.2f};keys={len(workloads)};"
+                f"queries={total};iters={FIXED_ITERATIONS}",
+            )
+        print(
+            f"# frontend scale: {total} queries / {tenants} tenants over "
+            f"{len(workloads)} engine keys, p50 {row['p50_us']:.0f}us, "
+            f"p99 {row['p99_us']:.0f}us, {row['qps']:.1f} q/s, "
+            f"fairness {fairness:.2f}",
+            file=sys.stderr,
+        )
+    return out
+
+
 def frontend_chaos(
     dname: str = "rmat2k",
     tname: str = "u5-1",
@@ -347,6 +451,10 @@ def run(quick: bool = False, warmup: bool = False) -> None:
         _bench_one("rmat2k", g, tname, quick, warmup)
     frontend_load(graph=g)
     frontend_chaos(graph=g)
+    if quick:
+        frontend_scale(queries=60, tenant_counts=(2, 4))
+    else:
+        frontend_scale()
 
 
 def main() -> int:
@@ -361,12 +469,28 @@ def main() -> int:
     ap.add_argument(
         "--frontend-only",
         action="store_true",
-        help="only the async front-end load row (the check.sh load smoke)",
+        help="only the async front-end rows: the 2-tenant load smoke plus "
+        "the multi-engine-key scale sweep (p50/p99 vs tenant count)",
+    )
+    ap.add_argument(
+        "--queries",
+        type=int,
+        default=240,
+        help="total concurrent queries per scale point (default 240)",
+    )
+    ap.add_argument(
+        "--tenants",
+        default="2,4,8",
+        help="comma-separated tenant counts for the scale sweep",
     )
     args = ap.parse_args()
     emit_header()
     if args.frontend_only:
         frontend_load()
+        frontend_scale(
+            queries=args.queries,
+            tenant_counts=tuple(int(t) for t in args.tenants.split(",")),
+        )
     else:
         run(quick=args.quick, warmup=args.warmup)
     return 0

@@ -1,0 +1,160 @@
+"""Autotuner benchmark: measured tuned config vs the analytic heuristic.
+
+Rows (merged into ``BENCH_counting.json`` for the trend diff):
+
+* ``tune/<graph>/<template>/tuned_vs_heuristic`` — warm per-coloring
+  latency of the tuner's winning config, measured against the analytic
+  heuristic's pick on the same graph with **interleaved** timed launches
+  (heuristic, tuned, heuristic, tuned, ... — so host-load drift hits both
+  sides equally).  ``us_per_call`` is the tuned median; ``derived``
+  carries ``ratio=heuristic_us/tuned_us`` (>= 1.0 means the tuned config
+  is at least as fast — the acceptance bar; the trend diff flags
+  ratio < ``TUNING_RATIO_FLOOR``), the heuristic median, and both
+  backend names.
+* ``tune/<graph>/<template>/search`` — wall time of the full ``tune()``
+  call itself (lattice ranking + top-N compile/measure + cache write):
+  the cost a ``CountingService`` pays per background tune.
+
+The tuner writes to a throwaway cache file — benchmark runs never touch
+the repo-root ``TUNED_counting.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import CountingEngine, get_template, rmat_graph
+from repro.exec.select import heuristic_backend
+from repro.tune import tune
+
+from .common import emit_header, record
+
+TUNE_TOP_N = 4
+TUNE_PROBES = 3
+COMPARE_PROBES = 7
+
+
+def _per_coloring_us(engine, keys) -> float:
+    t0 = time.perf_counter()
+    engine.count_keys_chunk(keys)  # returns a host array: synchronous
+    return (time.perf_counter() - t0) * 1e6 / max(1, engine.chunk_size)
+
+
+def tuned_vs_heuristic(
+    dname: str = "rmat2k",
+    tname: str = "u5-1",
+    *,
+    graph=None,
+    top_n: int = TUNE_TOP_N,
+    probes: int = TUNE_PROBES,
+    compare_probes: int = COMPARE_PROBES,
+    record_row: bool = True,
+) -> dict:
+    """Tune one (graph, template) pair, then race winner vs heuristic.
+
+    Returns the medians, the ratio, and the search wall time; records the
+    ``tuned_vs_heuristic`` and ``search`` rows unless ``record_row=False``.
+    """
+    import jax
+
+    g = graph if graph is not None else rmat_graph(2048, 20_000, seed=1)
+    template = get_template(tname)
+
+    fd, cache_path = tempfile.mkstemp(prefix="repro_tune_bench_", suffix=".json")
+    os.close(fd)
+    os.unlink(cache_path)  # the tuner writes it fresh (empty file = corrupt)
+    try:
+        t0 = time.perf_counter()
+        result = tune(
+            g, [template], top_n=top_n, probes=probes, cache_path=cache_path
+        )
+        search_s = time.perf_counter() - t0
+    finally:
+        if os.path.exists(cache_path):
+            os.unlink(cache_path)
+
+    cfg = result.config
+    tuned_eng = CountingEngine(
+        g,
+        [template],
+        backend=cfg.backend_name,
+        tuning=cfg if cfg.backend_name == "mixed" else None,
+        chunk_size=cfg.chunk_size,
+        column_batch=cfg.column_batch,
+    )
+    heur_name, _ = heuristic_backend(g)
+    # explicit backend= so neither env nor tuned cache touches the baseline
+    heur_eng = CountingEngine(g, [template], backend=heur_name)
+
+    tuned_keys = jax.random.split(jax.random.PRNGKey(0), tuned_eng.chunk_size)
+    heur_keys = jax.random.split(jax.random.PRNGKey(0), heur_eng.chunk_size)
+    tuned_eng.count_keys_chunk(tuned_keys)  # warmup: compile
+    heur_eng.count_keys_chunk(heur_keys)
+    tuned_us, heur_us = [], []
+    for _ in range(max(1, compare_probes)):  # interleaved: drift hits both
+        heur_us.append(_per_coloring_us(heur_eng, heur_keys))
+        tuned_us.append(_per_coloring_us(tuned_eng, tuned_keys))
+    tuned_med = float(np.median(tuned_us))
+    heur_med = float(np.median(heur_us))
+    ratio = heur_med / max(tuned_med, 1e-9)
+
+    out = {
+        "tuned_us": tuned_med,
+        "heuristic_us": heur_med,
+        "ratio": ratio,
+        "tuned_backend": cfg.backend_name,
+        "heuristic_backend": heur_name,
+        "search_s": search_s,
+        "lattice_size": result.lattice_size,
+    }
+    if record_row:
+        record(
+            f"tune/{dname}/{tname}/tuned_vs_heuristic",
+            tuned_med,
+            f"ratio={ratio:.3f};heuristic_us={heur_med:.1f};"
+            f"backend={cfg.backend_name};heuristic_backend={heur_name};"
+            f"chunk={tuned_eng.chunk_size};cb={tuned_eng.column_batch};"
+            f"probes={compare_probes}",
+        )
+        record(
+            f"tune/{dname}/{tname}/search",
+            search_s * 1e6,
+            f"lattice={result.lattice_size};top_n={len(result.measured)};"
+            f"probes={probes};winner={cfg.backend_name}",
+        )
+    print(
+        f"# tune {dname}/{tname}: tuned {cfg.backend_name} "
+        f"{tuned_med:.1f}us/coloring vs heuristic {heur_name} "
+        f"{heur_med:.1f}us (ratio {ratio:.3f}), search took {search_s:.1f}s "
+        f"over {result.lattice_size}-candidate lattice",
+        file=sys.stderr,
+    )
+    return out
+
+
+def run(quick: bool = False) -> None:
+    g = rmat_graph(2048, 20_000, seed=1)
+    tuned_vs_heuristic(
+        graph=g,
+        top_n=3 if quick else TUNE_TOP_N,
+        probes=3 if quick else TUNE_PROBES,
+    )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="smaller search")
+    args = ap.parse_args()
+    emit_header()
+    run(quick=args.quick)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,6 +24,7 @@ from . import (
     bench_scaling,
     bench_service,
     bench_template_scaling,
+    bench_tuning,
 )
 from .common import ROWS, emit_header
 
@@ -35,10 +36,16 @@ BENCHES = {
     "fig14": bench_error.run,              # relative error
     "kernels": bench_kernels.run,          # Table IV analogue (SpMM/eMA)
     "service": bench_service.run,          # CountingService qps/latency/adaptive
+    "tuning": bench_tuning.run,            # autotuner winner vs heuristic
 }
 
 #: Rows slower than the previous run by more than this fraction are flagged.
 REGRESSION_THRESHOLD = 0.10
+
+#: ``tuned_vs_heuristic`` rows whose measured heuristic/tuned ratio falls
+#: below this are flagged: the tuner picked a config >5% SLOWER than the
+#: analytic heuristic it was supposed to beat (or at least match).
+TUNING_RATIO_FLOOR = 0.95
 
 
 def print_trend(prev_rows: dict, threshold: float = REGRESSION_THRESHOLD) -> int:
@@ -49,11 +56,11 @@ def print_trend(prev_rows: dict, threshold: float = REGRESSION_THRESHOLD) -> int
     number of flagged regressions.  Micro-benchmarks on shared CI hosts are
     noisy — the flag is a prompt to re-run, not a hard failure.
     """
+    regressions = flag_tuning_ratios()
     if not prev_rows:
         print("trend: no previous BENCH_counting.json — baseline run", file=sys.stderr)
-        return 0
+        return regressions
     width = max((len(name) for name, _, _ in ROWS), default=20)
-    regressions = 0
     fresh = 0
     print(f"\n== trend vs previous run ({len(ROWS)} rows) ==", file=sys.stderr)
     print(f"{'name':<{width}}  {'prev_us':>12}  {'now_us':>12}  {'delta':>8}", file=sys.stderr)
@@ -93,6 +100,29 @@ def print_trend(prev_rows: dict, threshold: float = REGRESSION_THRESHOLD) -> int
             file=sys.stderr,
         )
     return regressions
+
+
+def flag_tuning_ratios(floor: float = TUNING_RATIO_FLOOR) -> int:
+    """Flag ``tuned_vs_heuristic`` rows whose ratio fell below ``floor``.
+
+    The ratio is measured *within* this run (interleaved launches), so
+    unlike the cross-run trend diff it needs no previous file — a tuner
+    that loses to the heuristic by >5% is flagged on every run.
+    """
+    flagged = 0
+    for name, _, derived in ROWS:
+        if not name.endswith("/tuned_vs_heuristic"):
+            continue
+        m = re.search(r"ratio=([0-9.]+)", derived)
+        if m and float(m.group(1)) < floor:
+            flagged += 1
+            print(
+                f"trend: {name} ratio {float(m.group(1)):.3f} < {floor} — "
+                f"the tuned config is slower than the heuristic "
+                f"<-- REGRESSION",
+                file=sys.stderr,
+            )
+    return flagged
 
 
 def emit_json(path: str = "BENCH_counting.json") -> None:
@@ -145,12 +175,14 @@ def main() -> int:
         try:
             bench_counting.run(quick=True)
             bench_service.run(quick=True)
+            bench_tuning.run(quick=True)
         except Exception:
             traceback.print_exc()
             failed.append("quick")
     else:
         keys = list(dict.fromkeys(args.only.split(","))) if args.only else [
-            "tableIII", "fig12", "fig13", "fig14", "kernels", "service"
+            "tableIII", "fig12", "fig13", "fig14", "kernels", "service",
+            "tuning",
         ]
         for key in keys:
             try:

@@ -7,8 +7,9 @@
 # REPRO_FAULT_SEED so the failure schedule replays exactly), and a slow
 # lane (the multi-process mesh subprocess tests, -m slow), a ~30s
 # benchmark smoke, the plan-inspector smoke, an async front-end load
-# smoke, a watchdog kill smoke, and a multi-device smoke of the engine's
-# mesh backend (4 virtual devices).
+# smoke, a watchdog kill smoke, an autotuner smoke (tune rmat2k u5-1,
+# cached pickup, bit-exact vs heuristic, <=5% slower bar), and a
+# multi-device smoke of the engine's mesh backend (4 virtual devices).
 #
 #   bash scripts/check.sh
 #
@@ -175,6 +176,73 @@ print(
     f"{stats['qps']:.1f} q/s, fairness {stats['fairness']:.2f} -> OK"
 )
 PY
+
+echo "== smoke: autotuner (tune rmat2k u5-1 -> cached pickup, bit-exact, not slower) =="
+TUNE_CACHE="/tmp/repro_tune_smoke_$$.json"
+rm -f "$TUNE_CACHE"
+REPRO_TUNE_CACHE="$TUNE_CACHE" python -m repro.tune u5-1 \
+  --graph rmat:2048:20000:1 --top-n 3 --probes 3
+REPRO_TUNE_CACHE="$TUNE_CACHE" python - <<'PY'
+import os, time
+import jax
+import numpy as np
+from repro.core import CountingEngine, rmat_graph
+from repro.core.templates import get_template
+from repro.serve import CountingService
+
+g = rmat_graph(2048, 20_000, seed=1)
+
+# a fresh service under the default REPRO_TUNE=cached picks the tuned
+# config up from the cache the CLI just wrote
+svc = CountingService()
+svc.register_graph("rmat2k", g)
+q = svc.submit("rmat2k", "u5-1", iterations=6, seed=7)
+svc.run()
+tuned = svc.engine(q.engine_key)
+d = tuned.describe()["backend"]
+assert d["source"] == "tuned", d
+print(f"tuner smoke: fresh service resolved backend={d['name']} source=tuned")
+
+# cached re-query: same engine object, zero new jit programs
+traces = tuned.trace_count
+q2 = svc.submit("rmat2k", "u5-1", iterations=4, seed=8)
+svc.run()
+assert svc.engine(q2.engine_key) is tuned and tuned.trace_count == traces
+print("tuner smoke: warm re-query reused the tuned engine, 0 new traces")
+
+# REPRO_TUNE=off: the untuned heuristic engine — counts must agree exactly
+os.environ["REPRO_TUNE"] = "off"
+heur = CountingEngine(g, [get_template("u5-1")])
+assert heur.describe()["backend"]["source"] == "heuristic", heur.describe()
+for cseed in range(3):
+    colors = np.random.default_rng(cseed).integers(0, 5, size=g.n)
+    rt = np.asarray(tuned.raw_counts(colors))
+    rh = np.asarray(heur.raw_counts(colors))
+    assert np.array_equal(rt, rh), (cseed, rt, rh)
+et = tuned.estimate(iterations=4, seed=11)[0].mean
+eh = heur.estimate(iterations=4, seed=11)[0].mean
+assert et == eh, (et, eh)
+print("tuner smoke: tuned counts == heuristic counts (bit-exact)")
+
+# the acceptance bar: tuned must not run >5% slower than the heuristic
+# (interleaved timed launches so host-load drift hits both sides)
+kt = jax.random.split(jax.random.PRNGKey(0), tuned.chunk_size)
+kh = jax.random.split(jax.random.PRNGKey(0), heur.chunk_size)
+tuned.count_keys_chunk(kt)
+heur.count_keys_chunk(kh)
+t_us, h_us = [], []
+for _ in range(9):
+    t0 = time.perf_counter()
+    heur.count_keys_chunk(kh)
+    h_us.append((time.perf_counter() - t0) / heur.chunk_size)
+    t0 = time.perf_counter()
+    tuned.count_keys_chunk(kt)
+    t_us.append((time.perf_counter() - t0) / tuned.chunk_size)
+ratio = float(np.median(h_us) / np.median(t_us))
+assert ratio >= 0.95, f"tuned config {1/ratio:.2f}x SLOWER than heuristic"
+print(f"tuner smoke: heuristic/tuned per-coloring ratio {ratio:.2f} -> OK")
+PY
+rm -f "$TUNE_CACHE"
 
 echo "== smoke: mesh backend on 4 virtual devices =="
 XLA_FLAGS="--xla_force_host_platform_device_count=4" python - <<'PY'

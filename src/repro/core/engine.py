@@ -27,7 +27,6 @@ estimates are bit-exact across chunk sizes."""
 from __future__ import annotations
 
 import logging
-import os
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -49,6 +48,7 @@ from repro.exec.select import (
     ELL_PAD_FACTOR,
     ENGINE_BACKENDS,
     SELL_MIN_SCATTER_WORK,
+    resolve_backend_config,
     select_backend,
 )
 from repro.plan.cost import (
@@ -140,11 +140,15 @@ def _assemble_cache_key(
     policy: "DtypePolicy",
     chunk_spec: Tuple,
     column_batch: Optional[int],
+    tuning_fragment: Optional[Tuple] = None,
 ) -> Tuple:
     """The one place the cache-key tuple is laid out — shared by
     :func:`engine_cache_key` (pre-construction) and
     :meth:`CountingEngine.cache_key` (resolved values) so the two
-    identities cannot drift."""
+    identities cannot drift.  The tuning fragment rides at the END so the
+    positional consumers of the earlier elements (the serving layer's
+    degradation ladder reads backend/chunk/column_batch at [3]/[6]/[7])
+    keep their offsets."""
     return (
         "counting-engine",
         signature,
@@ -154,6 +158,7 @@ def _assemble_cache_key(
         str(jnp.dtype(policy.accum_dtype)),
         chunk_spec,
         None if column_batch is None else int(column_batch),
+        tuning_fragment,
     )
 
 
@@ -166,6 +171,7 @@ def engine_cache_key(
     chunk_size: Optional[int] = None,
     memory_budget_bytes: int = DEFAULT_MEMORY_BUDGET_BYTES,
     column_batch: Optional[int] = None,
+    tuning=None,
 ) -> Tuple:
     """Hashable identity of a compiled :class:`CountingEngine`.
 
@@ -176,23 +182,42 @@ def engine_cache_key(
         ("counting-engine",
          graph signature,           # content hash of (n, src, dst)
          template-set canons,       # DP-schedule identity, label-free
-         resolved backend name,     # auto-resolution folded in
+         resolved backend name,     # full resolution ladder folded in
          store dtype, accum dtype,  # dtype policy
          chunk spec,                # explicit chunk, or the budget that
                                     # deterministically picks one
-         column_batch)              # fused-slice width override (or None)
+         column_batch,              # fused-slice width override (or None)
+         tuning fragment)           # TuningConfig.key_fragment(), or None
+
+    Backend resolution runs the same ladder the constructor does
+    (explicit > ``REPRO_ENGINE_BACKEND`` > tuned cache entry > analytic
+    heuristic — :func:`repro.exec.select.resolve_backend_config`), and a
+    tuned config's chunk/column-batch overrides are folded in exactly as
+    construction would apply them, so the pre-construction key always
+    matches the built engine's :meth:`CountingEngine.cache_key`.
 
     The template-set canons are exactly a ``TemplatePlan``'s schedule
     identity, so **plan equality implies cache-key equality** (pinned in
     ``tests/test_plan.py``).  The key is computable without constructing
     the engine (operands are only built on a cache miss)."""
+    signature = graph.signature()
+    canons = template_set_canons(templates)
+    name, _source, _reason, cfg = resolve_backend_config(
+        graph, backend=backend, canons=canons, tuning=tuning, signature=signature
+    )
+    if cfg is not None:
+        if chunk_size is None and cfg.chunk_size is not None:
+            chunk_size = cfg.chunk_size
+        if column_batch is None and cfg.column_batch is not None:
+            column_batch = cfg.column_batch
     return _assemble_cache_key(
-        graph.signature(),
-        template_set_canons(templates),
-        select_backend(graph) if backend == "auto" else backend,
+        signature,
+        canons,
+        name,
         DtypePolicy.resolve(dtype_policy),
         ("chunk", int(chunk_size)) if chunk_size else ("budget", int(memory_budget_bytes)),
         column_batch,
+        None if cfg is None else cfg.key_fragment(),
     )
 
 
@@ -204,10 +229,13 @@ class CountingEngine:
       templates: one :class:`Template` or a sequence of same-``k`` templates
         counted together per coloring (shared leaf one-hot / DP states).
       backend: ``auto`` | ``edges`` | ``ell`` | ``sell`` | ``dense`` |
-        ``blocked`` | ``mesh``.  ``auto`` resolves from graph statistics
-        (:func:`select_backend`, overridable via ``REPRO_ENGINE_BACKEND``),
-        or to ``mesh`` when ``mesh=`` is given.  Ignored when ``spmm_fn``
-        is given.
+        ``blocked`` | ``mixed`` | ``mesh``.  ``auto`` runs the resolution
+        ladder (:func:`repro.exec.select.resolve_backend_config`):
+        ``REPRO_ENGINE_BACKEND`` env override, then a tuned config (passed
+        as ``tuning=`` or found in the tuning cache under ``REPRO_TUNE``),
+        then graph-statistics heuristics — or resolves to ``mesh`` when
+        ``mesh=`` is given.  ``mixed`` requires ``tuning=``.  Ignored when
+        ``spmm_fn`` is given.
       spmm_fn: optional custom ``(n, C) -> (n, C)`` neighbor-sum kernel.
       dtype_policy: ``fp32`` | ``bf16`` | a :class:`DtypePolicy` | a dtype.
       memory_budget_bytes: live-footprint budget steering the chunk picker
@@ -221,6 +249,12 @@ class CountingEngine:
         (where a batch is also one all-gather collective).
       mesh / ema_mode / gather_dtype / balance_degrees: mesh-backend knobs
         — see :class:`repro.exec.mesh.MeshBackend`.
+      tuning: optional :class:`repro.tune.config.TuningConfig` (what
+        ``python -m repro.tune`` / ``svc.tune`` produce) — binds per-group
+        backends and overrides ``column_batch``/``chunk_size`` wherever the
+        caller left them ``None``.  Beaten by an explicit ``backend=`` or
+        the env override; ``describe()["backend"]["source"]`` records who
+        won.
 
     The bound plan is ``engine.plan_ir``, the resource model is
     ``engine.cost``, the execution strategy is ``engine.backend_impl``.
@@ -244,6 +278,7 @@ class CountingEngine:
         ema_mode: str = "streamed",
         gather_dtype=None,
         balance_degrees: bool = False,
+        tuning=None,
     ):
         if isinstance(templates, Template):
             templates = [templates]
@@ -269,6 +304,48 @@ class CountingEngine:
         # --- layer 2: the calibrated cost model.
         self.cost = CostModel(self.plan_ir, graph, self.policy.store_dtype)
 
+        # --- backend resolution (operands bound once, below).  Runs before
+        # the column-batch/chunk knobs are consumed: a tuned config may
+        # override both, and only un-overridden (None) caller args yield.
+        self._tuning = None
+        if spmm_fn is not None:
+            self.backend = "custom"
+            self.backend_source = "custom"
+            self.backend_reason = "caller-supplied spmm_fn"
+        elif backend == "auto" and mesh is not None:
+            self.backend = "mesh"
+            self.backend_source = "mesh"
+            self.backend_reason = "mesh= given"
+        else:
+            if backend != "auto" and backend not in ENGINE_BACKENDS:
+                raise ValueError(
+                    f"unknown backend {backend!r} (one of {ENGINE_BACKENDS})"
+                )
+            name, source, reason, cfg = resolve_backend_config(
+                graph,
+                backend=backend,
+                canons=self.plan_ir.canons,
+                tuning=tuning,
+            )
+            self.backend = name
+            self.backend_source = source
+            self.backend_reason = reason
+            self._tuning = cfg
+            if cfg is None and tuning is not None:
+                # a config was offered but env/explicit resolution beat it —
+                # surface that, an operator override silently eating a tuned
+                # config is exactly the ambiguity the source field exists for
+                logger.info(
+                    "tuned config ignored: backend resolved by %s (%s)",
+                    source,
+                    reason,
+                )
+            if cfg is not None:
+                if column_batch is None and cfg.column_batch is not None:
+                    column_batch = cfg.column_batch
+                if chunk_size is None and cfg.chunk_size is not None:
+                    chunk_size = cfg.chunk_size
+
         # Fused-slice width: local default keeps the per-batch edge gather
         # cache-sized; the mesh backend auto-sizes its own (one batch there
         # is also one all-gather collective).
@@ -281,32 +358,6 @@ class CountingEngine:
         self._norm_factors = jnp.asarray(
             [1.0 / (norm * plan.automorphisms) for plan in self.plans], jnp.float32
         )
-
-        # --- backend resolution (operands bound once, below).
-        if spmm_fn is not None:
-            self.backend = "custom"
-            self.backend_source = "custom"
-            self.backend_reason = "caller-supplied spmm_fn"
-        elif backend == "auto":
-            if mesh is not None:
-                self.backend = "mesh"
-                self.backend_source = "mesh"
-                self.backend_reason = "mesh= given"
-            else:
-                self.backend, self.backend_reason = select_backend(graph, explain=True)
-                self.backend_source = (
-                    "env"
-                    if os.environ.get(BACKEND_ENV_VAR, "").strip()
-                    else "auto"
-                )
-        else:
-            if backend not in ENGINE_BACKENDS:
-                raise ValueError(
-                    f"unknown backend {backend!r} (one of {ENGINE_BACKENDS})"
-                )
-            self.backend = backend
-            self.backend_source = "explicit"
-            self.backend_reason = "backend= given"
 
         # Observability counters, Python-level: ``trace_count`` bumps once
         # per jit trace (== compilation), ``passive_aggregations`` once per
@@ -325,6 +376,7 @@ class CountingEngine:
             ema_mode=ema_mode,
             gather_dtype=gather_dtype,
             balance_degrees=balance_degrees,
+            tuning=self._tuning if self._tuning is not None else tuning,
         )
 
         # remembered for the cache key: a None chunk means "picked from the
@@ -345,9 +397,9 @@ class CountingEngine:
                 "CountingEngine backend=%s (%s: %s) n=%d edges=%d k=%d templates=%d "
                 "column_batch=%d chunk=%d predicted transient=%.2f MiB "
                 "resident=%.2f MiB per coloring",
-                d["backend"],
-                d["backend_source"],
-                d["backend_reason"],
+                d["backend"]["name"],
+                d["backend"]["source"],
+                d["backend"]["reason"],
                 d["n"],
                 d["num_directed"],
                 d["k"],
@@ -429,6 +481,7 @@ class CountingEngine:
             if self._chunk_explicit
             else ("budget", self.memory_budget_bytes),
             self._column_batch_arg,
+            None if self._tuning is None else self._tuning.key_fragment(),
         )
 
     def describe(self) -> Dict:
@@ -438,9 +491,15 @@ class CountingEngine:
         says, machine-readable (services attach it to cache entries)."""
         itemsize = jnp.dtype(self.policy.store_dtype).itemsize
         return {
-            "backend": self.backend,
-            "backend_source": self.backend_source,
-            "backend_reason": self.backend_reason,
+            # nested: which rung of the resolution ladder decided (explicit /
+            # env / tuned / heuristic — plus custom / mesh), with the bound
+            # TuningConfig's summary when one is live
+            "backend": {
+                "name": self.backend,
+                "source": self.backend_source,
+                "reason": self.backend_reason,
+                "tuning": None if self._tuning is None else self._tuning.describe(),
+            },
             "n": self.graph.n,
             "num_directed": self.graph.num_directed,
             "k": self.k,

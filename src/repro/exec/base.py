@@ -53,6 +53,7 @@ def make_backend(engine, **kwargs) -> "EngineBackend":
         DenseBackend,
         EdgesBackend,
         EllBackend,
+        MixedBackend,
         SellBackend,
     )
     from .mesh import MeshBackend
@@ -60,6 +61,8 @@ def make_backend(engine, **kwargs) -> "EngineBackend":
     name = engine.backend
     if name == "custom":
         return CustomBackend(engine, kwargs["spmm_fn"])
+    if name == "mixed":
+        return MixedBackend(engine, kwargs.get("tuning"))
     if name == "edges":
         return EdgesBackend(engine)
     if name == "ell":

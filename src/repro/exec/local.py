@@ -35,6 +35,8 @@ __all__ = [
     "DenseBackend",
     "BlockedEllBackend",
     "CustomBackend",
+    "MixedBackend",
+    "LOCAL_BACKEND_CLASSES",
     "SELL_GROUP_SIZE",
 ]
 
@@ -53,15 +55,20 @@ class LocalBackend(EngineBackend):
     read — the aggregate product ``A_G @ M_p`` never exists.
     """
 
-    def __init__(self, engine):
+    def __init__(self, engine, shared: "LocalBackend" = None):
         super().__init__(engine)
         # Bucketed per-batch tables feed the local fused executor and the
         # Pallas kernel (the mesh backend builds its own streamed tables
-        # at its own all-gather column batch).
-        self.stage_tables: Dict = build_stage_tables(
-            engine.plan_ir, engine.column_batch
-        )
-        self.bag_tables: Dict = build_bag_tables(engine.plan_ir)
+        # at its own all-gather column batch).  A MixedBackend's sub-impls
+        # pass ``shared=`` to alias the owner's tables instead of shipping
+        # a second copy of every split table to the device.
+        if shared is not None:
+            self.stage_tables: Dict = shared.stage_tables
+            self.bag_tables: Dict = shared.bag_tables
+            self._bag_adj = shared._bag_adj
+            return
+        self.stage_tables = build_stage_tables(engine.plan_ir, engine.column_batch)
+        self.bag_tables = build_bag_tables(engine.plan_ir)
         self._bag_adj = None
         if engine.plan_ir.has_bag_stages:
             # Edge masks of bag-extend steps multiply by A[u_w, u_x]; the
@@ -90,6 +97,12 @@ class LocalBackend(EngineBackend):
             self._spmm_counted,
             pol.accum_dtype,
         )
+
+    def _group_aggregate(self, leader, m_p, stage_inputs):
+        """Per-exec-group dispatch seam: ``leader`` is the group's
+        ``(plan_idx, sub_idx)`` address.  Uniform backends ignore it;
+        :class:`MixedBackend` routes each group to its bound sub-impl."""
+        return self.aggregate_ema_grouped(m_p, stage_inputs)
 
     def counts_for_colors(self, colors: jnp.ndarray) -> jnp.ndarray:
         """(B, n) colorings -> (B, T) un-normalized colorful totals.
@@ -159,8 +172,8 @@ class LocalBackend(EngineBackend):
                                 self.stage_tables[(q, j)],
                             )
                         )
-                    outs = self.aggregate_ema_grouped(
-                        slots[canons[sub.passive]], stage_inputs
+                    outs = self._group_aggregate(
+                        (p_idx, i), slots[canons[sub.passive]], stage_inputs
                     )
                     for (q, j), m_s in zip(members, outs):
                         slots[ir.canons[q][j]] = m_s.astype(pol.store_dtype)
@@ -291,8 +304,8 @@ class EdgesBackend(LocalBackend):
 
     name = "edges"
 
-    def __init__(self, engine):
-        super().__init__(engine)
+    def __init__(self, engine, shared=None):
+        super().__init__(engine, shared=shared)
         g = engine.graph
         self._src = jnp.asarray(g.src)
         self._dst = jnp.asarray(g.dst)
@@ -311,8 +324,8 @@ class EllBackend(LocalBackend):
 
     name = "ell"
 
-    def __init__(self, engine):
-        super().__init__(engine)
+    def __init__(self, engine, shared=None):
+        super().__init__(engine, shared=shared)
         nbr, mask = engine.graph.ell()
         self._nbr = jnp.asarray(nbr)
         self._ell_mask = jnp.asarray(mask)
@@ -338,8 +351,8 @@ class SellBackend(LocalBackend):
 
     name = "sell"
 
-    def __init__(self, engine, group_size: int = SELL_GROUP_SIZE):
-        super().__init__(engine)
+    def __init__(self, engine, group_size: int = SELL_GROUP_SIZE, shared=None):
+        super().__init__(engine, shared=shared)
         sell = build_sell(engine.graph, group_size=group_size)
         self._sell_padded_slots = sell.padded_slots
         self._groups = tuple(
@@ -372,8 +385,8 @@ class DenseBackend(LocalBackend):
 
     name = "dense"
 
-    def __init__(self, engine):
-        super().__init__(engine)
+    def __init__(self, engine, shared=None):
+        super().__init__(engine, shared=shared)
         self._adj = jnp.asarray(engine.graph.dense_adjacency())
 
     def spmm(self, m):
@@ -399,8 +412,8 @@ class BlockedEllBackend(LocalBackend):
 
     name = "blocked"
 
-    def __init__(self, engine, block_size: int = 256):
-        super().__init__(engine)
+    def __init__(self, engine, block_size: int = 256, shared=None):
+        super().__init__(engine, shared=shared)
         from repro.kernels.spmm_ema.ops import prepare_fused_operand
 
         self._fused_op = prepare_fused_operand(engine.graph, block_size=block_size)
@@ -450,3 +463,63 @@ class CustomBackend(LocalBackend):
         n, b, c = m.shape
         out = self._spmm_fn(m.reshape(n, b * c))
         return out.reshape(n, b, c).astype(self.engine.policy.accum_dtype)
+
+
+#: name -> class for the uniform single-device strategies (what a
+#: TuningConfig's per-group bindings may name).
+LOCAL_BACKEND_CLASSES = {
+    "edges": EdgesBackend,
+    "ell": EllBackend,
+    "sell": SellBackend,
+    "dense": DenseBackend,
+    "blocked": BlockedEllBackend,
+}
+
+
+class MixedBackend(LocalBackend):
+    """Per-exec-group backend dispatch from a tuned configuration.
+
+    One sub-implementation per distinct backend the
+    :class:`~repro.tune.config.TuningConfig` names, all sharing this
+    owner's stage/bag tables (``shared=`` — split tables ship to the
+    device once).  The DP walk stays the inherited one; only the
+    :meth:`_group_aggregate` seam routes each shared-passive exec group to
+    its bound sub-impl's column-batch sweep.  Bag ops and ungrouped
+    ``spmm`` calls run on the config's ``default_backend``.
+
+    Measurement-driven existence proof: on skewed graphs the hub-touching
+    wide-passive groups want SELL's scatter-free gathers while narrow
+    early stages amortize better on the edge list — a single engine-wide
+    backend leaves one of the two on the wrong cost curve.
+    """
+
+    name = "mixed"
+
+    def __init__(self, engine, tuning):
+        super().__init__(engine)
+        if tuning is None:
+            raise ValueError("MixedBackend needs a TuningConfig (tuning=...)")
+        self._tuning = tuning
+        self._bindings = tuning.bindings()
+        names = {tuning.default_backend, *self._bindings.values()}
+        unknown = names - set(LOCAL_BACKEND_CLASSES)
+        if unknown:
+            raise ValueError(
+                f"mixed backend binds unknown local backends {sorted(unknown)}"
+            )
+        self._impls = {
+            name: LOCAL_BACKEND_CLASSES[name](engine, shared=self)
+            for name in sorted(names)
+        }
+        self._default = self._impls[tuning.default_backend]
+
+    def spmm(self, m):
+        return self._default.spmm(m)
+
+    def _group_aggregate(self, leader, m_p, stage_inputs):
+        name = self._bindings.get(leader, self._tuning.default_backend)
+        return self._impls[name].aggregate_ema_grouped(m_p, stage_inputs)
+
+    def transient_elements(self) -> int:
+        # one chunk's scratch peaks at the widest sub-impl's slice
+        return max(impl.transient_elements() for impl in self._impls.values())

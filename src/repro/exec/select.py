@@ -16,8 +16,14 @@ import jax
 
 __all__ = [
     "select_backend",
+    "heuristic_backend",
+    "resolve_backend_config",
+    "consult_tuning",
+    "tune_mode",
     "ENGINE_BACKENDS",
     "BACKEND_ENV_VAR",
+    "TUNE_MODE_ENV_VAR",
+    "TUNE_MODES",
     "DENSE_MAX_VERTICES",
     "ELL_PAD_FACTOR",
     "BLOCKED_MIN_VERTICES",
@@ -52,7 +58,20 @@ SELL_MIN_SCATTER_WORK = 5 * 10**8
 #: gathers.  (The column count cancels: both paths scale linearly in it.)
 DENSE_WORK_ADVANTAGE = 16
 
-ENGINE_BACKENDS = ("edges", "ell", "sell", "dense", "blocked", "mesh", "custom")
+#: How engine builds use the tuning cache: ``off`` never consults it,
+#: ``cached`` (default) applies persisted winners, ``full`` additionally
+#: lets the serving layer schedule background tunes for un-tuned keys.
+TUNE_MODE_ENV_VAR = "REPRO_TUNE"
+
+TUNE_MODES = ("off", "cached", "full")
+
+ENGINE_BACKENDS = (
+    "edges", "ell", "sell", "dense", "blocked", "mixed", "mesh", "custom"
+)
+
+#: Local backend names an env override / explicit ``backend=`` may name
+#: without extra context (``mixed`` additionally needs a TuningConfig).
+_LOCAL_BACKENDS = ("edges", "ell", "sell", "dense", "blocked")
 
 
 def select_backend(graph, platform: Optional[str] = None, explain: bool = False):
@@ -93,15 +112,126 @@ def select_backend(graph, platform: Optional[str] = None, explain: bool = False)
     return (name, reason) if explain else name
 
 
-def _select_backend_reason(graph, platform: Optional[str]) -> Tuple[str, str]:
+def _env_backend() -> Optional[str]:
+    """The validated ``REPRO_ENGINE_BACKEND`` override, or ``None``."""
     env = os.environ.get(BACKEND_ENV_VAR, "").strip()
-    if env:
-        if env not in ("edges", "ell", "sell", "dense", "blocked"):
+    if not env:
+        return None
+    if env not in _LOCAL_BACKENDS:
+        raise ValueError(
+            f"{BACKEND_ENV_VAR}={env!r} is not a local backend "
+            "(edges | ell | sell | dense | blocked)"
+        )
+    return env
+
+
+def heuristic_backend(graph, platform: Optional[str] = None) -> Tuple[str, str]:
+    """The pure analytic pick — ``(name, reason)`` from graph statistics
+    alone, ignoring both the env override and the tuning cache.  This is
+    the bottom of the resolution ladder (and what the tuner benches its
+    winners against)."""
+    return _heuristic_reason(graph, platform)
+
+
+def tune_mode() -> str:
+    """The ``REPRO_TUNE`` mode (``off`` | ``cached`` | ``full``).
+
+    An unrecognized value warns once and behaves as ``cached`` — engine
+    builds and service stats must never crash on a typo'd env var."""
+    raw = os.environ.get(TUNE_MODE_ENV_VAR, "").strip().lower()
+    if not raw:
+        return "cached"
+    if raw in TUNE_MODES:
+        return raw
+    if raw not in _BAD_TUNE_MODES_WARNED:
+        _BAD_TUNE_MODES_WARNED.add(raw)
+        logger.warning(
+            "%s=%r is not one of %s — defaulting to 'cached'",
+            TUNE_MODE_ENV_VAR, raw, "|".join(TUNE_MODES),
+        )
+    return "cached"
+
+
+_BAD_TUNE_MODES_WARNED: set = set()
+
+
+def consult_tuning(graph, canons, *, signature=None, path=None):
+    """Tuned config for ``(graph, canons)`` on this device, or ``None``.
+
+    Honors ``REPRO_TUNE=off``; any cache trouble (missing, corrupt, wrong
+    version, unreadable) degrades to ``None`` — the caller then falls
+    through to the heuristic."""
+    if canons is None or tune_mode() == "off":
+        return None
+    try:
+        # local import: repro.tune.cache is downstream of the exec layer
+        from repro.tune.cache import consult
+
+        sig = signature if signature is not None else graph.signature()
+        return consult(sig, canons, path=path)
+    except Exception as exc:  # pragma: no cover - defensive
+        logger.debug("tuning consult failed (%s) — using heuristic", exc)
+        return None
+
+
+def resolve_backend_config(
+    graph,
+    *,
+    backend: str = "auto",
+    canons=None,
+    tuning=None,
+    platform: Optional[str] = None,
+    signature=None,
+):
+    """The full backend resolution ladder: ``(name, source, reason, config)``.
+
+    Precedence (strongest first):
+
+    1. **explicit** — a concrete ``backend=`` argument (engine callers and
+       the degradation ladder's rung overrides must always win).
+       ``backend="mixed"`` requires ``tuning`` (the per-group bindings).
+    2. **env** — ``REPRO_ENGINE_BACKEND`` beats tuned configs too: the
+       operator's escape hatch must not be overridable by a cache file.
+    3. **tuned** — a :class:`~repro.tune.config.TuningConfig` passed as
+       ``tuning`` or found in the tuning cache for ``(graph, canons)``.
+    4. **heuristic** — the analytic pick from graph statistics.
+
+    ``config`` is the :class:`TuningConfig` to bind (``None`` for
+    env/heuristic/plain-explicit resolutions).
+    """
+    if backend != "auto":
+        if backend == "mixed" and tuning is None:
             raise ValueError(
-                f"{BACKEND_ENV_VAR}={env!r} is not a local backend "
-                "(edges | ell | sell | dense | blocked)"
+                "backend='mixed' needs a TuningConfig (tuning=...) for its "
+                "per-group bindings"
             )
+        cfg = tuning if backend == "mixed" else None
+        return backend, "explicit", "backend= given by caller", cfg
+    env = _env_backend()
+    if env is not None:
+        return env, "env", f"{BACKEND_ENV_VAR} env override", None
+    cfg = tuning
+    if cfg is None:
+        cfg = consult_tuning(graph, canons, signature=signature)
+    if cfg is not None:
+        reason = (
+            f"tuned config (default={cfg.default_backend}, "
+            f"{len(cfg.group_backends)} group bindings, "
+            f"column_batch={cfg.column_batch}, chunk_size={cfg.chunk_size})"
+        )
+        return cfg.backend_name, "tuned", reason, cfg
+    name, reason = heuristic_backend(graph, platform)
+    return name, "heuristic", reason, None
+
+
+def _select_backend_reason(graph, platform: Optional[str]) -> Tuple[str, str]:
+    env = _env_backend()
+    if env is not None:
         return env, f"{BACKEND_ENV_VAR} env override"
+    return _heuristic_reason(graph, platform)
+
+
+def _heuristic_reason(graph, platform: Optional[str]) -> Tuple[str, str]:
     platform = platform or jax.default_backend()
     if graph.n <= DENSE_MAX_VERTICES:
         return "dense", f"n={graph.n} <= {DENSE_MAX_VERTICES} (tiny graph)"

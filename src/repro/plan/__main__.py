@@ -241,8 +241,8 @@ def main(argv=None) -> int:
             mem = d["memory"]
             print(f"\nCost model on {gdesc}:")
             print(
-                f"  backend: {d['backend']} ({d['backend_source']}: "
-                f"{d['backend_reason']})"
+                f"  backend: {d['backend']['name']} "
+                f"({d['backend']['source']}: {d['backend']['reason']})"
             )
             print(
                 f"  dtype: store={d['dtype_policy']['store']} "

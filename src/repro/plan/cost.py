@@ -40,7 +40,9 @@ __all__ = [
     "admission_estimate",
     "LadderRung",
     "degradation_ladder",
+    "RankedCandidate",
     "load_fusion_slack",
+    "load_backend_calibration",
     "fusion_slack_factor",
     "pick_chunk_size",
     "DEFAULT_MEMORY_BUDGET_BYTES",
@@ -49,6 +51,7 @@ __all__ = [
     "MESH_COLUMN_BATCH",
     "SLACK_CLAMP",
     "BENCH_ENV_VAR",
+    "CALIBRATION_CLAMP",
 ]
 
 logger = logging.getLogger("repro.plan")
@@ -77,6 +80,23 @@ SLACK_CLAMP = (0.5, 2.0)
 
 #: Environment override for the bench file the slack factor is read from.
 BENCH_ENV_VAR = "REPRO_FUSION_SLACK_BENCH"
+
+#: Per-backend calibration ratios outside this band are treated as noise —
+#: the lattice is a *ranker*, a 100x ratio would let one bad probe freeze a
+#: backend out of every future candidate set.
+CALIBRATION_CLAMP = (0.1, 10.0)
+
+#: Nominal cost of one gathered/FMA'd element in the per-stage work model
+#: (microseconds; absolute scale is arbitrary — the lattice only ranks).
+WORK_ELEMENT_US = 1e-3
+
+#: Fixed cost per fused column-batch sweep call (dispatch + segment-sum /
+#: einsum setup) — what makes narrow column batches predictedly worse.
+SWEEP_OVERHEAD_US = 12.0
+
+#: Fixed per-chunk-launch cost, amortized over the chunk's colorings —
+#: what makes tiny chunks predictedly worse.
+LAUNCH_OVERHEAD_US = 150.0
 
 #: memoized slack factors, keyed by resolved bench path ('' = missing).
 _SLACK_CACHE: Dict[str, float] = {}
@@ -164,6 +184,50 @@ def fusion_slack_factor() -> float:
     """The memoized default-path slack (what engines constructed without an
     explicit ``fusion_slack`` use)."""
     return load_fusion_slack()
+
+
+def load_backend_calibration(path: Optional[str] = None) -> Dict[str, float]:
+    """Per-backend measured/predicted cost ratios from the tuning cache.
+
+    The generalization of the fusion-slack mechanism to *time*: every
+    tuning run records, for each uniform candidate it measured, the ratio
+    of measured us-per-coloring to the lattice's raw (uncalibrated)
+    prediction; :meth:`CostModel.candidate_lattice` multiplies each
+    backend's predicted cost by its ratio, so rankings improve with every
+    run even for workloads never tuned directly.  Ratios are clamped to
+    :data:`CALIBRATION_CLAMP`; a missing/corrupt cache yields ``{}`` (the
+    uncalibrated analytic ranking) — same safe-default contract as
+    :func:`load_fusion_slack`.
+    """
+    # local import: repro.tune.cache is a leaf over repro.tune.config only
+    from repro.tune.cache import load_calibration
+
+    out = {}
+    for name, ratio in load_calibration(path).items():
+        out[name] = min(max(float(ratio), CALIBRATION_CLAMP[0]), CALIBRATION_CLAMP[1])
+    return out
+
+
+def _dense_work_advantage() -> int:
+    # exec.select owns the constant (it imports nothing from plan)
+    from repro.exec.select import DENSE_WORK_ADVANTAGE
+
+    return DENSE_WORK_ADVANTAGE
+
+
+@dataclass(frozen=True)
+class RankedCandidate:
+    """One point of the tuner's candidate lattice.
+
+    ``predicted_us`` is the calibrated per-coloring cost estimate used for
+    ranking/pruning; ``raw_us`` is the same figure *without* per-backend
+    calibration (what measured ratios are computed against, so calibration
+    reaches a fixed point instead of compounding run over run).
+    """
+
+    config: object  # TuningConfig (typed loosely: repro.tune is downstream)
+    predicted_us: float
+    raw_us: float
 
 
 def pick_chunk_size(
@@ -501,3 +565,220 @@ class CostModel:
             out["peak_elements"] = self.plan.peak_elements(self.graph.n)
             out["max_bag_axes"] = self.plan.max_bag_axes
         return out
+
+    # -- tuning candidate lattice --------------------------------------------
+
+    def feasible_backends(self, platform: Optional[str] = None) -> "list[str]":
+        """Local backends worth *probing* for this (graph, plan).
+
+        Wider than the heuristic's single pick, narrower than "everything":
+        backends whose geometry would be pathological on this graph (ELL
+        padding blown up by a hub row, an ``n x n`` dense adjacency that
+        dwarfs the DP state) are excluded so the tuner never compiles them.
+        ``blocked`` is TPU-only — on CPU the Pallas kernel runs in
+        interpret mode, which is a correctness path, not a candidate.
+        """
+        g = self.graph
+        edges = max(g.num_directed, 1)
+        out = ["edges"]
+        # probe-feasibility bound is deliberately looser than the
+        # heuristic's ELL_PAD_FACTOR pick threshold: measurement decides
+        if g.n * max(g.max_degree(), 1) <= 8 * edges:
+            out.append("ell")
+        out.append("sell")
+        if g.n <= 8192:  # n^2 adjacency: 256 MB fp32 at 8k vertices
+            out.append("dense")
+        if platform == "tpu":
+            out.append("blocked")
+        return out
+
+    def sell_padded_slots(self) -> int:
+        """Host-built SELL geometry (memoized — the lattice prices the
+        ``sell`` target per exec group, the probe engines rebuild it)."""
+        cached = getattr(self, "_sell_padded_slots", None)
+        if cached is None:
+            from repro.core.graph import build_sell  # local: cycle-free
+
+            cached = build_sell(self.graph).padded_slots
+            object.__setattr__(self, "_sell_padded_slots", cached)
+        return cached
+
+    def spmm_work_elements(self, target: str) -> int:
+        """Gathered/reduced elements per passive DP column on ``target``
+        (the backend-dependent half of a stage's work)."""
+        g = self.graph
+        edges = max(g.num_directed, 1)
+        if target in ("edges", "custom"):
+            return edges
+        if target == "ell":
+            return g.n * max(g.max_degree(), 1)
+        if target == "sell":
+            return self.sell_padded_slots()
+        if target == "dense":
+            # n^2 MACs at matmul throughput ~= n^2 / advantage gather-grade
+            # element visits (same constant select_backend compares with)
+            return max(1, g.n**2 // _dense_work_advantage())
+        if target == "blocked":
+            return edges
+        raise ValueError(f"unknown work target {target!r}")
+
+    def group_cost_us(
+        self, leader, backend: str, column_batch: int
+    ) -> float:
+        """Raw (uncalibrated) predicted us for one exec group's sweep.
+
+        One group = one passive column-batch sweep shared by every member
+        stage: the backend's gather over ``C(k, m_p)`` passive columns,
+        each member's eMA contraction (``n * n_out * n_splits`` FMAs,
+        backend-independent), and a fixed dispatch cost per fused slice.
+        """
+        from repro.core.colorsets import binom  # local: cycle-free
+
+        p_idx, i = leader
+        cplan = self.plan.counting_plans[p_idx]
+        sub = cplan.partition.subs[i]
+        passive_cols = binom(cplan.k, cplan.partition.subs[sub.passive].size)
+        gather = self.spmm_work_elements(backend) * passive_cols
+        ema = 0
+        for q, j in self.plan.exec_groups[leader]:
+            mplan = self.plan.counting_plans[q]
+            msub = mplan.partition.subs[j]
+            m = msub.size
+            m_a = mplan.partition.subs[msub.active].size
+            ema += self.graph.n * binom(mplan.k, m) * binom(m, m_a)
+        cb = max(1, min(int(column_batch), passive_cols))
+        sweeps = math.ceil(passive_cols / cb)
+        return (gather + ema) * WORK_ELEMENT_US + sweeps * SWEEP_OVERHEAD_US
+
+    def tree_group_leaders(self) -> "list":
+        """Exec-group leaders of *tree* stages — the addresses a mixed
+        config can bind (bag programs run through the uniform default)."""
+        return [
+            leader
+            for leader in sorted(self.plan.exec_groups)
+            if self.plan.counting_plans[leader[0]].partition is not None
+        ]
+
+    def predict_config_us(
+        self,
+        config,
+        *,
+        chunk_size: int,
+        calibration: Optional[Dict[str, float]] = None,
+    ) -> "Tuple[float, float]":
+        """``(calibrated_us, raw_us)`` per coloring for one
+        :class:`~repro.tune.config.TuningConfig`.
+
+        Calibration multiplies each group's cost by its backend's
+        measured/predicted ratio; ``raw_us`` skips that (it is what new
+        measurements are ratioed against, keeping calibration a fixed
+        point).  Bag-stage plans price their bag ops into the default
+        backend's share implicitly via the launch term only — the lattice
+        still ranks, it just ranks on the tree groups it can rebind.
+        """
+        calibration = calibration or {}
+        bindings = config.bindings()
+        cb = config.column_batch or self.pick_local_column_batch()
+        raw = calibrated = LAUNCH_OVERHEAD_US / max(1, int(chunk_size))
+        for leader in self.tree_group_leaders():
+            backend = bindings.get(leader, config.default_backend)
+            cost = self.group_cost_us(leader, backend, cb)
+            raw += cost
+            calibrated += cost * calibration.get(backend, 1.0)
+        return calibrated, raw
+
+    def candidate_lattice(
+        self,
+        *,
+        platform: Optional[str] = None,
+        calibration: Optional[Dict[str, float]] = None,
+        memory_budget_bytes: int = DEFAULT_MEMORY_BUDGET_BYTES,
+        chunk_size: Optional[int] = None,
+        include_mixed: bool = True,
+    ) -> "list[RankedCandidate]":
+        """Ranked tuning candidates, cheapest-predicted first.
+
+        The cross product of feasible backends x column batches x chunk
+        sizes, plus (``include_mixed``) one greedy mixed candidate per
+        column batch binding each exec group to its per-group-cheapest
+        backend.  The tuner measures the top-N of this list; everything
+        else is pruned unseen — which is the whole point of keeping an
+        analytic model around once measurements exist.
+        """
+        from repro.tune.config import TuningConfig  # local: cycle-free
+
+        if calibration is None:
+            calibration = load_backend_calibration()
+        backends = self.feasible_backends(platform)
+        resident = self.resident_elements()
+        picked_cb = self.pick_local_column_batch()
+        max_cb = max(1, self.plan.max_passive_columns)
+        col_batches = sorted({
+            min(4, max_cb), min(picked_cb, max_cb), min(64, max_cb)
+        })
+        leaders = self.tree_group_leaders()
+        candidates = []
+        seen = set()
+
+        def _add(config):
+            if config.key_fragment() in seen:
+                return
+            seen.add(config.key_fragment())
+            calibrated, raw = self.predict_config_us(
+                config, chunk_size=config.chunk_size, calibration=calibration
+            )
+            candidates.append(
+                RankedCandidate(config=config, predicted_us=calibrated, raw_us=raw)
+            )
+
+        for cb in col_batches:
+            chunks = set()
+            if chunk_size:
+                chunks.add(int(chunk_size))
+            else:
+                for b in backends:
+                    per = self.bytes_per_coloring(
+                        self.transient_elements(
+                            b,
+                            cb,
+                            sell_padded_slots=(
+                                self.sell_padded_slots() if b == "sell" else None
+                            ),
+                        ),
+                        resident,
+                    )
+                    picked = self.pick_chunk_size(per, memory_budget_bytes)
+                    chunks.update({picked, max(1, picked // 2)})
+            for b in backends:
+                for chunk in sorted(chunks):
+                    _add(TuningConfig(
+                        default_backend=b, column_batch=cb, chunk_size=chunk
+                    ))
+            if include_mixed and len(backends) > 1 and leaders:
+                greedy = tuple(
+                    (
+                        leader,
+                        min(
+                            backends,
+                            key=lambda b: self.group_cost_us(leader, b, cb)
+                            * calibration.get(b, 1.0),
+                        ),
+                    )
+                    for leader in leaders
+                )
+                names = {b for _, b in greedy}
+                if len(names) > 1:
+                    # default backend serves bag ops + plain spmm: the
+                    # cheapest gather-per-column backend among the bound
+                    default = min(
+                        names, key=lambda b: self.spmm_work_elements(b)
+                    )
+                    for chunk in sorted(chunks):
+                        _add(TuningConfig(
+                            default_backend=default,
+                            group_backends=greedy,
+                            column_batch=cb,
+                            chunk_size=chunk,
+                        ))
+        candidates.sort(key=lambda c: (c.predicted_us, repr(c.config.key_fragment())))
+        return candidates

@@ -42,6 +42,7 @@ determinism guarantee above carries over unchanged.
 
 from __future__ import annotations
 
+import logging
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -76,6 +77,8 @@ from .resilience import (
 from .stopping import DEFAULT_MIN_ITERATIONS, AdaptiveStopper, TemplateCI
 
 __all__ = ["CountingService", "Query", "QueryEstimate"]
+
+logger = logging.getLogger("repro.serve")
 
 #: Iterations for a query that names neither an (epsilon, delta) target nor
 #: an explicit iteration count (the engine-layer fixed-N default).
@@ -261,6 +264,12 @@ class CountingService:
             "deterministic": 0,
             "non_finite": 0,
         }
+        # autotuning (repro.tune): ``REPRO_TUNE=full`` records un-tuned
+        # workloads at submit; a front-end scheduler drains them one per
+        # round through tune() (prewarm-style background work)
+        self._tune_pending: Deque[Tuple[str, Tuple[Template, ...]]] = deque()
+        self._tune_requested: set = set()  # engine keys ever queued/tuned
+        self.tunes_completed = 0
 
     # ------------------------------------------------------------------
     # Registration & submission
@@ -365,6 +374,7 @@ class CountingService:
         else:
             budget = int(iterations) if iterations else DEFAULT_FIXED_ITERATIONS
         key = self.engine_key_for(graph_ref, tset)
+        self._maybe_queue_tune(key, graph_ref, tset)
         now = self.clock.now()
         fs = self._fail.get(key)
         if fs is not None and now < fs.quarantined_until:
@@ -722,6 +732,10 @@ class CountingService:
             )
         if until is not None:
             self._cache.invalidate(key)  # a fresh build gets a clean slate
+            # the ladder must not fight a poisoned tuned config: quarantine
+            # drops the key's tuned cache entry so the post-quarantine
+            # rebuild re-resolves from the heuristic
+            self._drop_tuned_entry(key)
 
     def _reprice_rung(self, key: Tuple, query: Query, rung) -> int:
         """``admission_estimate`` re-prices the rung's launch residency
@@ -848,6 +862,94 @@ class CountingService:
         )
         return est.chunk_bytes
 
+    def _maybe_queue_tune(self, key: Tuple, graph_ref: str, tset) -> None:
+        """``REPRO_TUNE=full``: record an un-tuned workload for background
+        tuning (drained by a front-end scheduler via :meth:`pop_pending_tune`
+        -> :meth:`tune`, one per round — prewarm-style off-query-path work).
+
+        ``key[-1]`` is the tuning fragment: non-``None`` means a tuned
+        config already resolved, so there is nothing to schedule.  Only
+        auto-resolved services tune — an explicit service ``backend=`` is
+        an operator decision the tuner must not fight.
+        """
+        from repro.exec.select import tune_mode
+
+        if (
+            self.backend != "auto"
+            or key[-1] is not None
+            or key in self._tune_requested
+            or tune_mode() != "full"
+        ):
+            return
+        self._tune_requested.add(key)
+        self._tune_pending.append((graph_ref, tset))
+        logger.debug(
+            "queued background tune for %s (%d templates)",
+            graph_ref,
+            len(tset),
+        )
+
+    def pop_pending_tune(self) -> Optional[Tuple[str, Tuple[Template, ...]]]:
+        """Next ``(graph_ref, templates)`` awaiting a background tune, or
+        ``None`` (``REPRO_TUNE=full`` submissions queue them)."""
+        return self._tune_pending.popleft() if self._tune_pending else None
+
+    def tune(self, graph_ref: str, templates, **tune_kwargs):
+        """Tune ``(graph_ref, templates)`` now; returns the
+        :class:`~repro.tune.search.TuneResult`.
+
+        Runs the measurement-driven search (:func:`repro.tune.search.tune`)
+        with this service's dtype policy and memory budget, persists the
+        winner in the tuning cache, then invalidates every cached engine
+        (and memoized degradation ladder) for that ``(graph, canons)`` pair
+        so the next build re-resolves — with ``REPRO_TUNE`` at its default
+        ``cached``, that build binds the freshly tuned config.
+
+        Probe launches run inline on the calling thread (the front-end
+        schedules this off the query path, like prewarms).
+        """
+        from repro.plan.ir import template_set_canons
+        from repro.tune.search import tune as run_tune
+
+        graph = self.graph(graph_ref)
+        tset = self._resolve_templates(templates)
+        tune_kwargs.setdefault("dtype_policy", self.dtype_policy)
+        tune_kwargs.setdefault("memory_budget_bytes", self.memory_budget_bytes)
+        result = run_tune(graph, list(tset), **tune_kwargs)
+        canons = template_set_canons(tset)
+        dropped = 0
+        for k in list(self._cache.keys()):
+            if k[1] == result.graph_signature and k[2] == canons:
+                self._cache.invalidate(k)
+                self._ladders.pop(k, None)
+                dropped += 1
+        self._tune_requested.add(self.engine_key_for(graph_ref, tset))
+        self.tunes_completed += 1
+        logger.info(
+            "tuned %s: winner=%s (%d stale cached engines dropped)",
+            graph_ref,
+            result.config.describe(),
+            dropped,
+        )
+        return result
+
+    def _drop_tuned_entry(self, key: Tuple) -> None:
+        """Quarantine interop: a deterministically-failing engine key must
+        not be re-picked from the tuning cache, so its tuned entry (the
+        ``key[-1]`` fragment marks one) is removed from the cache file."""
+        if len(key) < 9 or key[-1] is None:
+            return
+        try:
+            from repro.tune.cache import invalidate_entry
+
+            if invalidate_entry(key[1], key[2]):
+                logger.info(
+                    "quarantine invalidated tuned entry for engine key %s",
+                    key[3],
+                )
+        except Exception as exc:  # pragma: no cover - defensive
+            logger.debug("tuned-entry invalidation failed: %s", exc)
+
     def prewarm(self, graph_ref: str, templates) -> Tuple:
         """Build AND compile the engine a query shape will need; returns
         its engine key.
@@ -942,11 +1044,23 @@ class CountingService:
         and the failure-semantics block (``faults``: classified failure
         counts, total retries, currently-quarantined keys, per-key failure
         state, and each key's degradation-ladder walk)."""
+        from repro.exec.select import tune_mode
+
         by_key: Dict[Tuple, int] = {}
         for key in self.launch_log:
             by_key[key] = by_key.get(key, 0) + 1
         now = self.clock.now()
         return {
+            "tuning": {
+                "mode": tune_mode(),
+                "tunes_completed": self.tunes_completed,
+                "pending": len(self._tune_pending),
+                "tuned_cached_engines": sum(
+                    1
+                    for k in self._cache.keys()
+                    if len(k) >= 9 and k[-1] is not None
+                ),
+            },
             "cache": self._cache.counters(),
             "launches": len(self.launch_log),
             "launches_by_key": by_key,

@@ -273,6 +273,9 @@ class ServiceFrontend:
         self._rounds = 0
         self._warm_queue: Deque[Tuple[Tuple, str, tuple]] = deque()
         self._warm_done: Set[Tuple] = set()
+        self._tune_queue: Deque[Tuple[str, tuple]] = deque()
+        self._tune_done: Set[Tuple] = set()
+        self.tunes_run = 0
         self.rejections: Dict[str, int] = {
             "queue_full": 0,
             "over_budget": 0,
@@ -417,6 +420,24 @@ class ServiceFrontend:
                 self._work.notify_all()
         return key
 
+    def tune(self, graph_ref: str, templates) -> Tuple[str, tuple]:
+        """Queue a background autotune for ``(graph_ref, templates)``.
+
+        Like :meth:`prewarm`, the measurement work itself runs inside a
+        scheduler round (at most one warm *or* tune task per round), never
+        on this caller's thread.  De-duplicated against already-queued and
+        already-completed tune tasks.  The service also self-queues tunes
+        for unseen workloads when ``REPRO_TUNE=full`` — those drain
+        through the same per-round slot.
+        """
+        tset = self._svc._resolve_templates(templates)
+        task = (graph_ref, tset)
+        with self._work:
+            if task not in self._tune_done and task not in self._tune_queue:
+                self._tune_queue.append(task)
+                self._work.notify_all()
+        return task
+
     def _cancel(self, fut: QueryFuture) -> bool:
         with self._lock:
             if fut.done():
@@ -444,13 +465,16 @@ class ServiceFrontend:
         """Run ONE scheduler round; returns what it did.
 
         A round, in order: (1) at most one queued warm task (engine
-        build+compile); (2) one admission sweep — priority tiers high to
+        build+compile) OR — when no warm task ran — one queued tune task
+        (a measurement sweep from :meth:`tune` or the service's
+        ``REPRO_TUNE=full`` self-queue); (2) one admission sweep — priority tiers high to
         low, one query per tenant per round, gated by the token bucket and
         the admission-budget headroom; (3) one service launch
         (``CountingService.step()`` — the engine-key round-robin); (4) a
         completion sweep resolving futures whose queries finished.  The
-        returned dict (``warmed`` / ``admitted`` / ``launched`` /
-        ``completed`` / ``failed`` / ``progressed``) is the observability
+        returned dict (``warmed`` / ``tuned`` / ``admitted`` /
+        ``launched`` / ``completed`` / ``failed`` / ``progressed``) is the
+        observability
         record the deterministic tests assert on.
 
         **Supervision.**  Per-query failures (retries exhausted, ladder
@@ -488,6 +512,7 @@ class ServiceFrontend:
         info = {
             "round": self._rounds,
             "warmed": None,
+            "tuned": None,
             "admitted": [],
             "launched": None,
             "completed": [],
@@ -523,6 +548,25 @@ class ServiceFrontend:
                 self._svc.prewarm(graph_ref, tset)
                 self._warm_done.add(key)
                 info["warmed"] = key
+
+        # background autotuning shares the warm slot: at most one heavy
+        # off-path task (engine build OR measurement sweep) per round, so
+        # admission latency stays bounded while tuning drains
+        if info["warmed"] is None:
+            if not self._tune_queue:
+                pending = self._svc.pop_pending_tune()
+                if pending is not None:
+                    self._tune_queue.append(pending)
+            while self._tune_queue:
+                task = self._tune_queue.popleft()
+                if task in self._tune_done:
+                    continue
+                graph_ref, tset = task
+                self._svc.tune(graph_ref, tset)
+                self._tune_done.add(task)
+                self.tunes_run += 1
+                info["tuned"] = (graph_ref, tuple(t.name for t in tset))
+                break
 
         for tier in sorted(self._tier_rings, reverse=True):
             ring = self._tier_rings[tier]
@@ -593,6 +637,7 @@ class ServiceFrontend:
         self._last_round_at = self._clock.now()
         info["progressed"] = bool(
             info["warmed"] is not None
+            or info["tuned"] is not None
             or info["admitted"]
             or info["launched"] is not None
             or info["completed"]
@@ -711,6 +756,8 @@ class ServiceFrontend:
     def _has_work_locked(self) -> bool:
         return bool(
             self._warm_queue
+            or self._tune_queue
+            or self._svc._tune_pending
             or self._admitted
             or any(s.queue for s in self._tenants.values())
         )
@@ -839,6 +886,10 @@ class ServiceFrontend:
                 "warm": {
                     "queued": len(self._warm_queue),
                     "completed": len(self._warm_done),
+                },
+                "tune": {
+                    "queued": len(self._tune_queue),
+                    "completed": self.tunes_run,
                 },
                 "tenants": {
                     name: state.describe() for name, state in self._tenants.items()

@@ -54,3 +54,26 @@ def test_trend_zero_baseline_is_not_a_regression(monkeypatch, capsys):
     prev = {"derived/row": {"name": "derived/row", "us_per_call": 0.0}}
     assert bench_run.print_trend(prev) == 0
     assert "n/a" in capsys.readouterr().err
+
+
+def test_trend_flags_tuner_losing_to_heuristic(monkeypatch, capsys):
+    # a tuned config >5% slower than the heuristic (ratio < 0.95) is a
+    # tuner regression — flagged even on a baseline run with no history
+    _with_rows(
+        monkeypatch,
+        [("tune/g/t/tuned_vs_heuristic", 10.0, "ratio=0.800;heuristic_us=8.0")],
+    )
+    assert bench_run.print_trend({}) == 1
+    assert "REGRESSION" in capsys.readouterr().err
+
+
+def test_trend_accepts_tuner_matching_heuristic(monkeypatch, capsys):
+    _with_rows(
+        monkeypatch,
+        [
+            ("tune/g/t/tuned_vs_heuristic", 10.0, "ratio=1.080;heuristic_us=10.8"),
+            ("tune/g/t/search", 5e6, "lattice=30"),
+        ],
+    )
+    assert bench_run.print_trend({}) == 0
+    assert "REGRESSION" not in capsys.readouterr().err

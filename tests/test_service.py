@@ -311,9 +311,12 @@ def test_engine_describe_structure():
     g = rmat_graph(300, 1500, seed=2)
     eng = CountingEngine(g, [get_template("u5-1")], chunk_size=4)
     d = eng.describe()
-    assert d["backend"] == eng.backend
-    assert d["backend_source"] in ("auto", "env", "explicit", "custom", "mesh")
-    assert d["backend_reason"]
+    assert d["backend"]["name"] == eng.backend
+    assert d["backend"]["source"] in (
+        "heuristic", "env", "explicit", "tuned", "custom", "mesh"
+    )
+    assert d["backend"]["reason"]
+    assert d["backend"]["tuning"] is None  # no tuned config bound here
     assert d["n"] == g.n and d["k"] == 5
     assert d["cache_key"] == eng.cache_key()
     assert d["memory"]["bytes_per_coloring"] == eng.bytes_per_coloring()
@@ -327,4 +330,4 @@ def test_service_stats_exposes_engine_descriptions():
     stats = svc.stats()
     assert stats["queries_completed"] == 1
     assert len(stats["engines"]) == 1
-    assert stats["engines"][0]["backend_reason"]
+    assert stats["engines"][0]["backend"]["reason"]
