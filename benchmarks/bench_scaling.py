@@ -9,6 +9,16 @@ extracted from the compiled artifact at mesh sizes 1/2/4/8:
 * per-shard HLO flops (compute splits linearly),
 * all-gather wire bytes (the communication the column batching bounds).
 
+The ``fig13/ring`` row family is the wall-clock half: an interleaved A/B
+of ``mesh_comm="blocking"`` vs ``"pipelined"`` (same process, same graph,
+alternating arms) through the ``scripts/perf_subgraph_u20.py`` driver, at a
+working-set size where the all-gathered column buffer falls out of cache
+but the ring's two circulating slices do not.  Each row records the
+pipelined us/coloring plus ``ratio=`` (pipelined/blocking, < 1.0 is a ring
+win), ``per_shard_byte_frac`` (transient footprint of the ring arm as a
+fraction of blocking's), and ``overlap_eff`` (measured fraction of the
+modeled wire time hidden).
+
 Runs in a subprocess (needs its own XLA_FLAGS device count).
 """
 
@@ -18,6 +28,7 @@ import json
 import os
 import subprocess
 import sys
+import tempfile
 
 from .common import record
 
@@ -80,4 +91,42 @@ def run() -> None:
             d["wall_s"] * 1e6,
             f"flops_per_shard_frac={d['flops_per_shard'] / max(base['flops_per_shard'], 1):.3f};"
             f"bytes_per_shard_frac={d['bytes_per_shard'] / max(base['bytes_per_shard'], 1):.3f}",
+        )
+    _run_ring()
+
+
+def _run_ring() -> None:
+    """fig13/ring rows: interleaved blocking-vs-pipelined A/B per mesh size.
+
+    Shells out to the perf driver (it owns XLA_FLAGS and the interleaving
+    discipline); the config is sized so the all-gathered buffer
+    (n_padded x B x cb ~ 256 MB) spills cache while a ring slice does not —
+    that locality gap is the honest ring win measurable on a single host,
+    where true comm/compute overlap cannot show.
+    """
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    env.pop("REPRO_MESH_COMM", None)
+    for n_dev in (4, 8):
+        out = os.path.join(tempfile.mkdtemp(prefix="fig13_ring_"), "ab.json")
+        subprocess.run(
+            [
+                sys.executable, "scripts/perf_subgraph_u20.py",
+                "--devices", str(n_dev), "--template", "u7",
+                "--n", "65536", "--edges", "262144",
+                "--column-batch", "256", "--chunk-size", "2",
+                "--iters", "2", "--repeats", "2", "--out", out,
+            ],
+            check=True, capture_output=True, text=True, env=env, timeout=1800,
+        )
+        with open(out) as fh:
+            ab = json.load(fh)
+        assert ab["bit_exact"], f"A/B arms diverged at {n_dev} devices"
+        record(
+            f"fig13/ring/{n_dev}dev",
+            ab["pipelined"]["us_per_coloring"],
+            f"ratio={ab['ratio_pipelined_vs_blocking']:.3f};"
+            f"per_shard_byte_frac={ab['per_shard_byte_fraction']:.3f};"
+            f"overlap_eff={ab['measured_overlap_efficiency']:.2f}",
         )

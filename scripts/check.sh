@@ -262,4 +262,39 @@ assert rel < 1e-5, (dist, local)
 print(f"mesh smoke: {len(jax.devices())} devices, rel err {rel:.2e} -> OK")
 PY
 
+echo "== smoke: pipelined ring collectives (4 virtual devices, bit-exact A/B) =="
+XLA_FLAGS="--xla_force_host_platform_device_count=4" python - <<'PY'
+import os
+os.environ.pop("REPRO_MESH_COMM", None)  # modes are explicit below
+import jax, numpy as np
+from repro.core import CountingEngine, get_template, rmat_graph
+
+g = rmat_graph(400, 2000, seed=5)
+t = get_template("u7")
+mesh = jax.make_mesh((4,), ("dev",))
+colors = np.random.default_rng(1).integers(0, t.k, size=g.n)
+keys = jax.random.split(jax.random.PRNGKey(3), 4)
+kw = dict(backend="mesh", mesh=mesh, column_batch=8, chunk_size=2)
+block = CountingEngine(g, [t], mesh_comm="blocking", **kw)
+ring = CountingEngine(g, [t], mesh_comm="pipelined", **kw)
+# the ring must be BIT-exact against blocking, not merely close: both
+# modes fold the same per-src-shard bucket partial sums in the same order
+assert np.array_equal(
+    np.asarray(block.raw_counts(colors)), np.asarray(ring.raw_counts(colors))
+)
+assert np.array_equal(
+    np.asarray(block.count_keys(keys)), np.asarray(ring.count_keys(keys))
+)
+comm = ring.describe()["comm"]
+assert comm["mode"] == "pipelined" and comm["collective_dispatches"] == 4
+sched = comm["schedule"][0]
+# the modeled overlap is informational at smoke scale (tiny working set,
+# single physical core) — printed, not gated
+print(
+    "ring smoke: pipelined == blocking bit-exact on 4 devices; "
+    f"stage0 wire {sched['wire_bytes']}B, modeled overlap "
+    f"{sched['overlap_efficiency']:.2f} -> OK"
+)
+PY
+
 echo "check.sh: all green"

@@ -37,7 +37,7 @@ records the relabeling so colorings can follow it).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Optional, Sequence
+from typing import Callable, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -72,6 +72,14 @@ class ShardedGraph:
     slots interleaved), so callers that fix per-vertex data (colors,
     features) must scatter it into an ``(n_padded,)`` array:
     ``data_new[perm] = data_old``.
+
+    ``bucket_stride`` is set by ``bucket_by_src=True``: each shard's edge
+    list is then grouped by *source* shard into ``n_shards`` contiguous
+    buckets of exactly ``bucket_stride`` slots (the max (dst, src)-pair
+    edge count; short buckets are mask-padded), so
+    ``edges_per_shard == n_shards * bucket_stride`` and the ring pipeline
+    can address the edges readable from one circulating row slice with a
+    single ``dynamic_slice``.
     """
 
     n: int
@@ -83,14 +91,26 @@ class ShardedGraph:
     dst_local: np.ndarray  # (n_shards * edges_per_shard,) dst - shard offset
     edge_mask: np.ndarray  # (n_shards * edges_per_shard,) float32
     perm: Optional[np.ndarray] = None  # (n,) old -> new id in [0, n_padded)
+    bucket_stride: Optional[int] = None  # slots per src-shard bucket
 
 
-def shard_graph(graph: Graph, n_shards: int, balance_degrees: bool = False) -> ShardedGraph:
+def shard_graph(
+    graph: Graph,
+    n_shards: int,
+    balance_degrees: bool = False,
+    bucket_by_src: bool = False,
+) -> ShardedGraph:
     """1-D row partition of ``graph`` over ``n_shards`` (edges follow dst).
 
     ``balance_degrees=True`` relabels vertices round-robin by degree rank
     before partitioning, so consecutive hubs land on different shards
     (reduces the max per-shard edge padding on skewed graphs).
+
+    ``bucket_by_src=True`` additionally orders every shard's edges into
+    ``n_shards`` uniform-stride buckets by *source* shard (see
+    :class:`ShardedGraph`).  The mesh backend always uses this layout so the
+    blocking and pipelined comm paths run over literally the same edge
+    arrays — the precondition for their bit-exact equivalence.
     """
     src, dst = graph.src, graph.dst
     rows = max(-(-graph.n // n_shards), 1)
@@ -106,14 +126,46 @@ def shard_graph(graph: Graph, n_shards: int, balance_degrees: bool = False) -> S
         perm[order] = (ranks % n_shards) * rows + ranks // n_shards
         src, dst = perm[src].astype(np.int32), perm[dst].astype(np.int32)
     shard_of = dst // rows
+    order = np.argsort(shard_of, kind="stable")
+    src_s, dst_s, shard_s = src[order], dst[order], shard_of[order]
+
+    if bucket_by_src:
+        # sub-bucket each dst shard's edges by src shard with ONE uniform
+        # stride: pair (s, o) lives at rows [o*stride, (o+1)*stride) of
+        # shard s's edge list.  Pad slots keep mask 0 / src 0 / dst 0.
+        pair = shard_s.astype(np.int64) * n_shards + src_s // rows
+        pair_counts = np.bincount(pair, minlength=n_shards * n_shards)
+        stride = int(pair_counts.max(initial=1))
+        order2 = np.argsort(pair, kind="stable")
+        src_p, dst_p, pair_p = src_s[order2], dst_s[order2], pair[order2]
+        src_out = np.zeros((n_shards * n_shards, stride), dtype=np.int32)
+        dst_out = np.zeros((n_shards * n_shards, stride), dtype=np.int32)
+        mask_out = np.zeros((n_shards * n_shards, stride), dtype=np.float32)
+        starts = np.concatenate([[0], np.cumsum(pair_counts)])
+        for p in range(n_shards * n_shards):
+            lo, hi = int(starts[p]), int(starts[p + 1])
+            c = hi - lo
+            src_out[p, :c] = src_p[lo:hi]
+            dst_out[p, :c] = dst_p[lo:hi] - (p // n_shards) * rows
+            mask_out[p, :c] = 1.0
+        return ShardedGraph(
+            n=graph.n,
+            n_padded=n_padded,
+            n_shards=n_shards,
+            rows_per_shard=rows,
+            edges_per_shard=n_shards * stride,
+            src=src_out.reshape(-1),
+            dst_local=dst_out.reshape(-1),
+            edge_mask=mask_out.reshape(-1),
+            perm=perm,
+            bucket_stride=stride,
+        )
+
     counts = np.bincount(shard_of, minlength=n_shards)
     e_max = int(counts.max(initial=1))
-
     src_out = np.zeros((n_shards, e_max), dtype=np.int32)
     dst_out = np.zeros((n_shards, e_max), dtype=np.int32)
     mask_out = np.zeros((n_shards, e_max), dtype=np.float32)
-    order = np.argsort(shard_of, kind="stable")
-    src_s, dst_s, shard_s = src[order], dst[order], shard_of[order]
     starts = np.concatenate([[0], np.cumsum(np.bincount(shard_s, minlength=n_shards))])
     for s in range(n_shards):
         lo, hi = int(starts[s]), int(starts[s + 1])
@@ -235,6 +287,9 @@ def make_batched_count_fn(
     plan_ir=None,
     store_dtype=jnp.float32,
     accum_dtype=jnp.float32,
+    comm_mode: str = "blocking",
+    comm_schedule: Optional[Mapping[Tuple[int, int], str]] = None,
+    bucket_stride: Optional[int] = None,
 ) -> Callable:
     """Build the jit-able mesh count over a batched chunk of colorings.
 
@@ -281,6 +336,22 @@ def make_batched_count_fn(
       store_dtype / accum_dtype: the engine's dtype policy — M matrices are
         kept (and all-gathered) in ``store_dtype``, reductions accumulate in
         ``accum_dtype``.
+      comm_mode: ``"blocking"`` (one ``all_gather`` per column batch — the
+        paper's synchronous scheme) or ``"pipelined"`` (double-buffered ring:
+        each column batch circulates as per-shard row slices via
+        ``lax.ppermute``, the NEXT slice in flight while the current one's
+        edge bucket is consumed as a partial ``segment_sum``).  Pipelined
+        requires the ``bucket_by_src`` edge layout, a single-axis mesh with
+        >= 2 shards, and the streamed eMA mode; on such layouts the
+        *blocking* streamed path runs the SAME per-source-shard bucket fold
+        in the SAME ring order (reading each owner's rows out of its one
+        all-gathered buffer), so counts are **bit-exact** across the two
+        modes by construction.
+      comm_schedule: optional per-stage override map ``(plan_idx, sub_idx)
+        -> mode`` (the plan-time ``CostModel.comm_schedule`` decision);
+        stages not in the map use ``comm_mode``.
+      bucket_stride: the ``ShardedGraph.bucket_stride`` of the
+        ``bucket_by_src`` layout (required whenever any stage is pipelined).
     """
     if not plans:
         raise ValueError("make_batched_count_fn needs at least one plan")
@@ -290,11 +361,40 @@ def make_batched_count_fn(
     k = ks.pop()
     if ema_mode not in ("streamed", "loop", "vectorized"):
         raise ValueError(f"unknown ema_mode {ema_mode!r}")
+    if comm_mode not in ("blocking", "pipelined"):
+        raise ValueError(f"unknown comm_mode {comm_mode!r}")
 
     axes = tuple(mesh.axis_names)
     n_shards = int(np.prod(mesh.devices.shape))
     rows = n_padded // n_shards
     pad_unit = column_batch or 128
+
+    comm_schedule = dict(comm_schedule or {})
+    bad = {m for m in comm_schedule.values() if m not in ("blocking", "pipelined")}
+    if bad:
+        raise ValueError(f"unknown comm_schedule mode(s) {sorted(bad)}")
+    any_pipelined = comm_mode == "pipelined" or "pipelined" in comm_schedule.values()
+    if any_pipelined:
+        if ema_mode != "streamed":
+            raise ValueError(
+                f"comm_mode='pipelined' requires ema_mode='streamed' "
+                f"(got {ema_mode!r}) — the ring consumes each slice inside "
+                "the fused SpMM+eMA sweep"
+            )
+        if column_batch is None:
+            raise ValueError("comm_mode='pipelined' needs a finite column_batch")
+        if len(axes) != 1:
+            raise ValueError(
+                f"comm_mode='pipelined' rings a single mesh axis (got {axes})"
+            )
+        if n_shards < 2:
+            raise ValueError("comm_mode='pipelined' needs >= 2 shards")
+        if bucket_stride is None or n_shards * bucket_stride != edges_per_shard:
+            raise ValueError(
+                "comm_mode='pipelined' needs the bucket_by_src edge layout: "
+                f"bucket_stride={bucket_stride!r} with edges_per_shard="
+                f"{edges_per_shard} and n_shards={n_shards}"
+            )
 
     track_products = ema_mode != "streamed"
     if canons is not None:
@@ -354,7 +454,86 @@ def make_batched_count_fn(
         init = _pvary_missing(jnp.zeros(m_p.shape, accum_dtype), axes)
         return jax.lax.fori_loop(0, n_batches, body, init)
 
-    def spmm_ema_streamed(m_p, m_a, src, dst_local, edge_mask, n_out, stream_tbl):
+    # the bucketed consume is shared by the ring AND the single-axis
+    # blocking path so the two modes fold bit-identically (see below)
+    bucket_fold = bucket_stride is not None and len(axes) == 1 and n_shards >= 2
+
+    def _bucket_partials(get_block, src, dst_local, edge_mask, bsz, cb):
+        """Per-src-shard-bucket partial segment-sums, folded in ring step
+        order (``owner = (my - d) mod D``).
+
+        ``get_block(d, owner) -> (rows, B, cb)`` supplies src-shard
+        ``owner``'s rows of the column batch — from the circulating ring
+        slice (pipelined) or sliced out of the one all-gathered buffer
+        (blocking).  Everything else — the bucket slices, the gather, the
+        mask multiply, the per-bucket ``segment_sum``, and the fold order
+        of the partials — is this one code path, shared by both modes.
+        That sharing is the bit-exactness argument: the block values are
+        elementwise identical (a gather reads the same stored floats
+        whichever buffer holds them; ``ppermute`` moves bits verbatim), so
+        every intermediate rounding happens on identical operands in an
+        identical sequence.
+        """
+        ring = axes[0]
+        my = jax.lax.axis_index(ring)
+        bcol = _pvary_missing(jnp.zeros((rows, bsz, cb), accum_dtype), axes)
+        for d in range(n_shards):
+            owner = jnp.mod(my - d, n_shards)
+            block = get_block(d, owner)
+            b_src = jax.lax.dynamic_slice(
+                src, (owner * bucket_stride,), (bucket_stride,)
+            )
+            b_dst = jax.lax.dynamic_slice(
+                dst_local, (owner * bucket_stride,), (bucket_stride,)
+            )
+            b_mask = jax.lax.dynamic_slice(
+                edge_mask, (owner * bucket_stride,), (bucket_stride,)
+            )
+            # valid slots sit in the owner's row range by the bucket
+            # invariant; pad slots (mask 0) are clipped in-bounds and zeroed
+            local = jnp.clip(b_src - owner * rows, 0, rows - 1)
+            vals = block[local].astype(accum_dtype) * b_mask[:, None, None]
+            bcol = bcol + jax.ops.segment_sum(
+                vals, b_dst, num_segments=rows
+            )
+        return bcol
+
+    def ring_spmm(cols, src, dst_local, edge_mask):
+        """Double-buffered ring SpMM over one column batch.
+
+        ``cols`` is this shard's ``(rows, B, cb)`` slice.  Slices circulate
+        along the single mesh axis: after ``d`` hops device ``i`` holds
+        shard ``(i - d) mod D``'s rows, and the ``ppermute`` for hop
+        ``d + 1`` is issued BEFORE hop ``d``'s bucket is consumed, so the
+        wire transfer hides under the edge gather + partial segment-sum
+        (the expensive half of the SpMM).  Only two row slices are ever
+        live — the full gathered buffer never materializes.
+        """
+        ring = axes[0]
+        perm = [(j, (j + 1) % n_shards) for j in range(n_shards)]
+        bsz, cb = cols.shape[1], cols.shape[2]
+        state = {"cur": cols}
+        if gather_dtype is not None:
+            # cast to the wire dtype ONCE; hops circulate the compressed
+            # payload (bf16 -> f32 -> bf16 would be lossless anyway, but
+            # one cast keeps the barrier structure identical to blocking's)
+            state["cur"] = jax.lax.optimization_barrier(
+                cols.astype(gather_dtype)
+            )
+
+        def block(d, owner):
+            cur = state["cur"]
+            if d + 1 < n_shards:  # prefetch the next slice NOW
+                state["cur"] = jax.lax.ppermute(cur, ring, perm)
+            if gather_dtype is not None:
+                return jax.lax.optimization_barrier(cur).astype(jnp.float32)
+            return cur
+
+        return _bucket_partials(block, src, dst_local, edge_mask, bsz, cb)
+
+    def spmm_ema_streamed(
+        m_p, m_a, src, dst_local, edge_mask, n_out, stream_tbl, mode="blocking"
+    ):
         """Fused per-batch SpMM -> eMA: gather a column batch, reduce it, and
         immediately scatter its contributions into M_s (B never exists)."""
         cb = pad_unit
@@ -364,9 +543,23 @@ def make_batched_count_fn(
 
         def body(b_idx, m_s):
             cols = jax.lax.dynamic_slice(m_p, (0, 0, b_idx * cb), (rows, bsz, cb))
-            full = _compressed_gather(cols, axes, gather_dtype)
-            msgs = full[src].astype(accum_dtype) * edge_mask[:, None, None]
-            bcol = jax.ops.segment_sum(msgs, dst_local, num_segments=rows)
+            if mode == "pipelined":
+                bcol = ring_spmm(cols, src, dst_local, edge_mask)
+            elif bucket_fold:
+                # single-axis bucketed blocking: one all-gather, then the
+                # SAME per-bucket fold the ring runs — this is what makes
+                # blocking and pipelined engines bit-exact A/B arms
+                full = _compressed_gather(cols, axes, gather_dtype)
+                bcol = _bucket_partials(
+                    lambda d, owner: jax.lax.dynamic_slice(
+                        full, (owner * rows, 0, 0), (rows, bsz, cb)
+                    ),
+                    src, dst_local, edge_mask, bsz, cb,
+                )
+            else:
+                full = _compressed_gather(cols, axes, gather_dtype)
+                msgs = full[src].astype(accum_dtype) * edge_mask[:, None, None]
+                bcol = jax.ops.segment_sum(msgs, dst_local, num_segments=rows)
             eo = jax.lax.dynamic_index_in_dim(ent_out, b_idx, keepdims=False)
             ia = jax.lax.dynamic_index_in_dim(ent_ia, b_idx, keepdims=False)
             ip = jax.lax.dynamic_index_in_dim(ent_ip, b_idx, keepdims=False)
@@ -425,6 +618,7 @@ def make_batched_count_fn(
                         m_s = spmm_ema_streamed(
                             m_p, m_a, src, dst_local, edge_mask,
                             plan.tables[i].n_out, tables[tkey],
+                            mode=comm_schedule.get((p_idx, i), comm_mode),
                         )
                     else:
                         p_key = pc[sub.passive]

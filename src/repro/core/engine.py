@@ -169,7 +169,7 @@ def engine_cache_key(
     backend: str = "auto",
     dtype_policy: Union[str, "DtypePolicy", jnp.dtype, None] = "fp32",
     chunk_size: Optional[int] = None,
-    memory_budget_bytes: int = DEFAULT_MEMORY_BUDGET_BYTES,
+    memory_budget_bytes: Optional[int] = None,
     column_batch: Optional[int] = None,
     tuning=None,
 ) -> Tuple:
@@ -210,6 +210,10 @@ def engine_cache_key(
             chunk_size = cfg.chunk_size
         if column_batch is None and cfg.column_batch is not None:
             column_batch = cfg.column_batch
+        if memory_budget_bytes is None and cfg.memory_budget_bytes is not None:
+            memory_budget_bytes = cfg.memory_budget_bytes
+    if memory_budget_bytes is None:
+        memory_budget_bytes = DEFAULT_MEMORY_BUDGET_BYTES
     return _assemble_cache_key(
         signature,
         canons,
@@ -240,6 +244,8 @@ class CountingEngine:
       dtype_policy: ``fp32`` | ``bf16`` | a :class:`DtypePolicy` | a dtype.
       memory_budget_bytes: live-footprint budget steering the chunk picker
         (per device — for the mesh backend the model is per shard).
+        ``None`` resolves to the tuned config's budget (the tuner sweeps
+        it) when one binds, else ``DEFAULT_MEMORY_BUDGET_BYTES``.
       chunk_size: explicit colorings-per-chunk override (skips the picker).
       plans: optional pre-built :class:`CountingPlan` per template.
       block_size / interpret: fused Pallas kernel knobs (``blocked``).
@@ -247,8 +253,11 @@ class CountingEngine:
         ``None`` auto-sizes: ``min(16, max passive columns)`` on the local
         backends, ``min(128, max passive columns)`` on the mesh backend
         (where a batch is also one all-gather collective).
-      mesh / ema_mode / gather_dtype / balance_degrees: mesh-backend knobs
-        — see :class:`repro.exec.mesh.MeshBackend`.
+      mesh / ema_mode / gather_dtype / balance_degrees / mesh_comm:
+        mesh-backend knobs — see :class:`repro.exec.mesh.MeshBackend`
+        (``mesh_comm`` forces ``blocking`` | ``pipelined`` collectives;
+        ``None`` lets ``REPRO_MESH_COMM`` or the cost model's
+        ``comm_schedule`` decide; a tuned config may also carry it).
       tuning: optional :class:`repro.tune.config.TuningConfig` (what
         ``python -m repro.tune`` / ``svc.tune`` produce) — binds per-group
         backends and overrides ``column_batch``/``chunk_size`` wherever the
@@ -268,7 +277,7 @@ class CountingEngine:
         backend: str = "auto",
         spmm_fn: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None,
         dtype_policy: Union[str, DtypePolicy, jnp.dtype, None] = "fp32",
-        memory_budget_bytes: int = DEFAULT_MEMORY_BUDGET_BYTES,
+        memory_budget_bytes: Optional[int] = None,
         chunk_size: Optional[int] = None,
         plans: Optional[Sequence[CountingPlan]] = None,
         block_size: int = 256,
@@ -277,7 +286,8 @@ class CountingEngine:
         column_batch: Optional[int] = None,
         ema_mode: str = "streamed",
         gather_dtype=None,
-        balance_degrees: bool = False,
+        balance_degrees: bool = True,
+        mesh_comm: Optional[str] = None,
         tuning=None,
     ):
         if isinstance(templates, Template):
@@ -297,7 +307,6 @@ class CountingEngine:
         self.plans: Tuple[CountingPlan, ...] = self.plan_ir.counting_plans
         self.k = self.plan_ir.k
         self.policy = DtypePolicy.resolve(dtype_policy)
-        self.memory_budget_bytes = int(memory_budget_bytes)
         self.interpret = interpret
         self.mesh = mesh
 
@@ -345,6 +354,20 @@ class CountingEngine:
                     column_batch = cfg.column_batch
                 if chunk_size is None and cfg.chunk_size is not None:
                     chunk_size = cfg.chunk_size
+                if mesh_comm is None:
+                    mesh_comm = getattr(cfg, "mesh_comm", None)
+
+        # Budget resolution mirrors the other tuned knobs: an explicit
+        # caller budget wins, else the budget the winning config was tuned
+        # under, else the default — and it is part of the cache key, so
+        # differently-budgeted engines never share compiled programs.
+        if memory_budget_bytes is None and self._tuning is not None:
+            memory_budget_bytes = self._tuning.memory_budget_bytes
+        self.memory_budget_bytes = int(
+            DEFAULT_MEMORY_BUDGET_BYTES
+            if memory_budget_bytes is None
+            else memory_budget_bytes
+        )
 
         # Fused-slice width: local default keeps the per-batch edge gather
         # cache-sized; the mesh backend auto-sizes its own (one batch there
@@ -376,6 +399,7 @@ class CountingEngine:
             ema_mode=ema_mode,
             gather_dtype=gather_dtype,
             balance_degrees=balance_degrees,
+            mesh_comm=mesh_comm,
             tuning=self._tuning if self._tuning is not None else tuning,
         )
 
@@ -490,6 +514,7 @@ class CountingEngine:
         and the bound plan's summary — what the construction log line
         says, machine-readable (services attach it to cache entries)."""
         itemsize = jnp.dtype(self.policy.store_dtype).itemsize
+        describe_comm = getattr(self.backend_impl, "describe_comm", None)
         return {
             # nested: which rung of the resolution ladder decided (explicit /
             # env / tuned / heuristic — plus custom / mesh), with the bound
@@ -511,6 +536,9 @@ class CountingEngine:
             # the mesh backend aggregates at its own all-gather batch width
             "column_batch": getattr(self.backend_impl, "column_batch", self.column_batch),
             "chunk_size": self.chunk_size,
+            # mesh backends: the resolved collective scheme + per-stage
+            # comm schedule (None on local backends)
+            "comm": describe_comm() if describe_comm is not None else None,
             "shared_passive_groups": sum(
                 1 for m in self.plan_ir.exec_groups.values() if len(m) > 1
             ),
@@ -633,7 +661,14 @@ class CountingEngine:
             )
         _faults.maybe_fail("launch", ctx=f"backend={self.backend}")
         if "collective" in getattr(self.backend_impl, "fault_sites", ()):
-            _faults.maybe_fail("collective", ctx=f"backend={self.backend}")
+            # the pipelined mesh path crosses the collective seam once per
+            # ring step (blocking: once per launch) — the injection site
+            # fires with matching multiplicity so a seeded fault plan sees
+            # every dispatch
+            for step in range(getattr(self.backend_impl, "collective_dispatches", 1)):
+                _faults.maybe_fail(
+                    "collective", ctx=f"backend={self.backend} step={step}"
+                )
         pad = self.chunk_size - m
         if pad:
             keys = jnp.concatenate([keys, keys[-1:].repeat(pad, axis=0)], axis=0)

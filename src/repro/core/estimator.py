@@ -81,7 +81,7 @@ def estimate_embeddings(
     mesh=None,
     column_batch: Optional[int] = None,
     gather_dtype=None,
-    balance_degrees: bool = False,
+    balance_degrees: bool = True,
     epsilon: Optional[float] = None,
     delta: Optional[float] = None,
     max_iterations: Optional[int] = None,

@@ -80,7 +80,8 @@ def make_backend(engine, **kwargs) -> "EngineBackend":
             column_batch=kwargs.get("column_batch"),
             ema_mode=kwargs.get("ema_mode", "streamed"),
             gather_dtype=kwargs.get("gather_dtype"),
-            balance_degrees=kwargs.get("balance_degrees", False),
+            balance_degrees=kwargs.get("balance_degrees", True),
+            comm=kwargs.get("mesh_comm"),
         )
     raise ValueError(f"unknown backend {name!r}")
 

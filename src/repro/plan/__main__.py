@@ -205,7 +205,18 @@ def main(argv=None) -> int:
     )
     ap.add_argument("--column-batch", type=int, default=None)
     ap.add_argument("--chunk-size", type=int, default=None)
+    ap.add_argument(
+        "--mesh-shards",
+        type=int,
+        default=None,
+        metavar="D",
+        help="print the mesh comm model's per-stage verdict (blocking vs "
+        "pipelined ring, wire bytes, overlap efficiency) for a D-shard "
+        "1-D mesh — needs --graph",
+    )
     args = ap.parse_args(argv)
+    if args.mesh_shards is not None and not args.graph:
+        ap.error("--mesh-shards needs --graph (the comm model prices real edges)")
 
     names = list(args.templates) + list(args.extra_templates)
     if not names:
@@ -261,7 +272,35 @@ def main(argv=None) -> int:
                 f"{_fmt_bytes(mem['budget_bytes'])} budget -> predicted peak "
                 f"{_fmt_bytes(eng.predicted_peak_bytes())}"
             )
+            if args.mesh_shards is not None:
+                _print_comm_schedule(eng.cost, args.mesh_shards, args.column_batch)
     return 0
+
+
+def _print_comm_schedule(cost, n_shards: int, column_batch) -> None:
+    """The comm model's per-stage verdict for a 1-D ``n_shards`` mesh —
+    the same ``CommSchedule`` the MeshBackend resolves (absent an
+    env/explicit override) and ``describe()['comm']`` reports."""
+    from .cost import mesh_link_bytes_per_us
+
+    cb = column_batch or cost.pick_mesh_column_batch()
+    schedules = cost.mesh_comm_schedules(n_shards, column_batch=cb)
+    print(
+        f"\nMesh comm schedule ({n_shards} shards, column_batch={cb}, "
+        f"link {mesh_link_bytes_per_us():.0f} B/us):"
+    )
+    print(
+        "  stage      mode       wire        comm_us  compute_us  overlap  "
+        "reason"
+    )
+    for leader, s in sorted(schedules.items()):
+        d = s.describe()
+        print(
+            f"  {leader[0]}:{leader[1]:<7d} {d['mode']:10s} "
+            f"{_fmt_bytes(d['wire_bytes']):>10s}  {d['comm_us']:7.1f}  "
+            f"{d['compute_us']:10.1f}  {d['overlap_efficiency']:7.2f}  "
+            f"{d['reason']}"
+        )
 
 
 if __name__ == "__main__":

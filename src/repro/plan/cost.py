@@ -38,17 +38,22 @@ __all__ = [
     "CostModel",
     "AdmissionEstimate",
     "admission_estimate",
+    "CommSchedule",
     "LadderRung",
     "degradation_ladder",
     "RankedCandidate",
     "load_fusion_slack",
     "load_backend_calibration",
     "fusion_slack_factor",
+    "mesh_link_bytes_per_us",
     "pick_chunk_size",
     "DEFAULT_MEMORY_BUDGET_BYTES",
     "MAX_CHUNK_SIZE",
     "LOCAL_COLUMN_BATCH",
     "MESH_COLUMN_BATCH",
+    "MESH_LINK_BYTES_PER_US",
+    "MESH_LINK_ENV_VAR",
+    "RING_STEP_OVERHEAD_US",
     "SLACK_CLAMP",
     "BENCH_ENV_VAR",
     "CALIBRATION_CLAMP",
@@ -97,6 +102,47 @@ SWEEP_OVERHEAD_US = 12.0
 #: Fixed per-chunk-launch cost, amortized over the chunk's colorings —
 #: what makes tiny chunks predictedly worse.
 LAUNCH_OVERHEAD_US = 150.0
+
+#: Nominal mesh link bandwidth (bytes per microsecond) for the comm model —
+#: ~4 GB/s, a conservative single-NIC / host-interconnect figure.  On real
+#: ICI calibrate via :data:`MESH_LINK_ENV_VAR`; absolute scale only shifts
+#: the blocking/pipelined crossover, the comm model still ranks.
+MESH_LINK_BYTES_PER_US = 4000.0
+
+#: Environment override (float, bytes/us) for the link-bandwidth constant —
+#: the comm model's calibration knob.
+MESH_LINK_ENV_VAR = "REPRO_MESH_LINK_BYTES_PER_US"
+
+#: Fixed cost per ring step (ppermute dispatch + slice bookkeeping): the
+#: term that keeps narrow stages on the blocking path, where one all-gather
+#: beats ``n_shards`` tiny hops.
+RING_STEP_OVERHEAD_US = 2.0
+
+
+def mesh_link_bytes_per_us() -> float:
+    """The comm model's link bandwidth, env-calibratable (bytes/us > 0).
+
+    Bad values warn once and fall back to the default — cost modeling must
+    never crash on a typo'd env var."""
+    raw = os.environ.get(MESH_LINK_ENV_VAR, "").strip()
+    if not raw:
+        return MESH_LINK_BYTES_PER_US
+    try:
+        val = float(raw)
+        if val > 0:
+            return val
+    except ValueError:
+        pass
+    if raw not in _BAD_LINK_VALUES_WARNED:
+        _BAD_LINK_VALUES_WARNED.add(raw)
+        logger.warning(
+            "%s=%r is not a positive float — using the default %.0f bytes/us",
+            MESH_LINK_ENV_VAR, raw, MESH_LINK_BYTES_PER_US,
+        )
+    return MESH_LINK_BYTES_PER_US
+
+
+_BAD_LINK_VALUES_WARNED: set = set()
 
 #: memoized slack factors, keyed by resolved bench path ('' = missing).
 _SLACK_CACHE: Dict[str, float] = {}
@@ -301,6 +347,48 @@ def admission_estimate(
         chunk_bytes=per_coloring * chunk,
         peak_columns=plan.peak_columns,
     )
+
+
+@dataclass(frozen=True)
+class CommSchedule:
+    """One DP stage's plan-time communication decision on the mesh target.
+
+    ``mode`` is ``"blocking"`` (one all-gather per column batch) or
+    ``"pipelined"`` (the double-buffered ring; ``ring_steps == n_shards``
+    ``ppermute`` hops per batch, the next row slice in flight while the
+    current one's edge messages are computed).  ``wire_bytes`` is the
+    per-shard, per-coloring bytes on the wire for the whole stage;
+    ``comm_us`` / ``compute_us`` are its modeled transfer and per-shard
+    SpMM+eMA times; ``overlap_efficiency`` is the fraction of the wire
+    time the ring hides under compute (``min(1, compute_step /
+    comm_step)``).  ``reason`` records why the mode was picked (or
+    forced).
+    """
+
+    stage: "Tuple[int, int]"  # exec-group leader (plan_idx, sub_idx)
+    mode: str
+    ring_steps: int  # 1 for blocking, n_shards for pipelined
+    slice_rows: int  # rows_per_shard — the circulated slice height
+    slice_cols: int  # column_batch — the circulated slice width
+    wire_bytes: int
+    comm_us: float
+    compute_us: float
+    overlap_efficiency: float
+    reason: str
+
+    def describe(self) -> Dict:
+        return {
+            "stage": list(self.stage),
+            "mode": self.mode,
+            "ring_steps": self.ring_steps,
+            "slice_rows": self.slice_rows,
+            "slice_cols": self.slice_cols,
+            "wire_bytes": self.wire_bytes,
+            "comm_us": round(self.comm_us, 3),
+            "compute_us": round(self.compute_us, 3),
+            "overlap_efficiency": round(self.overlap_efficiency, 4),
+            "reason": self.reason,
+        }
 
 
 @dataclass(frozen=True)
@@ -532,6 +620,124 @@ class CostModel:
         )
         return rows_per_shard * peak
 
+    def comm_schedule(
+        self,
+        leader,
+        n_shards: int,
+        *,
+        column_batch: int,
+        rows_per_shard: Optional[int] = None,
+        edges_per_shard: Optional[int] = None,
+        link_bytes_per_us: Optional[float] = None,
+        forced: Optional[str] = None,
+    ) -> "CommSchedule":
+        """Blocking vs pipelined for one exec group's mesh SpMM sweeps.
+
+        Per stage, per shard, per coloring the collective moves
+        ``(n_shards - 1) * rows * C_p_padded`` store elements regardless of
+        mode; the ring buys back the fraction of that transfer it can hide
+        under the stage's per-shard compute (edge-bucket gather + eMA).
+        The decision rule: pipeline iff the predicted hidden time exceeds
+        the ring's own dispatch overhead
+        (``n_batches * n_shards * RING_STEP_OVERHEAD_US``).  ``forced``
+        (``"blocking"`` | ``"pipelined"``) records an env/caller override
+        verbatim — the model still fills in the diagnostic fields.
+        """
+        from repro.core.colorsets import binom  # local: cycle-free
+
+        p_idx, i = leader
+        cplan = self.plan.counting_plans[p_idx]
+        sub = cplan.partition.subs[i]
+        passive_cols = binom(cplan.k, cplan.partition.subs[sub.passive].size)
+        cb = max(1, int(column_batch))
+        n_batches = max(1, math.ceil(passive_cols / cb))
+        padded_cols = n_batches * cb
+        rows = (
+            int(rows_per_shard)
+            if rows_per_shard
+            else max(1, -(-self.graph.n // max(1, n_shards)))
+        )
+        edges = (
+            int(edges_per_shard)
+            if edges_per_shard
+            else max(1, -(-self.graph.num_directed // max(1, n_shards)))
+        )
+        link = link_bytes_per_us or mesh_link_bytes_per_us()
+        wire_bytes = (n_shards - 1) * rows * padded_cols * self.itemsize
+        comm_us = wire_bytes / link
+        # per-shard compute: the edge-bucket gather over the stage's padded
+        # passive width plus this shard's share of the group's eMA work
+        gather = edges * padded_cols
+        ema = 0
+        for q, j in self.plan.exec_groups[leader]:
+            mplan = self.plan.counting_plans[q]
+            msub = mplan.partition.subs[j]
+            ema += rows * binom(mplan.k, msub.size) * binom(
+                msub.size, mplan.partition.subs[msub.active].size
+            )
+        compute_us = (gather + ema) * WORK_ELEMENT_US
+        if n_shards >= 2:
+            comm_step = comm_us / (n_shards - 1)
+            compute_step = compute_us / n_shards
+            overlap = min(1.0, compute_step / comm_step) if comm_step > 0 else 1.0
+        else:
+            overlap = 0.0
+        hidden_us = overlap * comm_us
+        ring_cost_us = n_batches * n_shards * RING_STEP_OVERHEAD_US
+        if forced in ("blocking", "pipelined"):
+            mode = forced
+            reason = f"forced {forced} (env/caller override)"
+        elif n_shards < 2:
+            mode = "blocking"
+            reason = "single shard — nothing to overlap"
+        elif hidden_us > ring_cost_us:
+            mode = "pipelined"
+            reason = (
+                f"hidden {hidden_us:.1f}us > ring overhead {ring_cost_us:.1f}us"
+            )
+        else:
+            mode = "blocking"
+            reason = (
+                f"hidden {hidden_us:.1f}us <= ring overhead {ring_cost_us:.1f}us"
+            )
+        return CommSchedule(
+            stage=(p_idx, i),
+            mode=mode,
+            ring_steps=n_shards if mode == "pipelined" else 1,
+            slice_rows=rows,
+            slice_cols=cb,
+            wire_bytes=int(wire_bytes),
+            comm_us=comm_us,
+            compute_us=compute_us,
+            overlap_efficiency=overlap,
+            reason=reason,
+        )
+
+    def mesh_comm_schedules(
+        self,
+        n_shards: int,
+        *,
+        column_batch: int,
+        rows_per_shard: Optional[int] = None,
+        edges_per_shard: Optional[int] = None,
+        link_bytes_per_us: Optional[float] = None,
+        forced: Optional[str] = None,
+    ) -> "Dict[Tuple[int, int], CommSchedule]":
+        """The full per-stage comm plan: one :class:`CommSchedule` per tree
+        exec-group leader (the unit one passive sweep serves)."""
+        return {
+            leader: self.comm_schedule(
+                leader,
+                n_shards,
+                column_batch=column_batch,
+                rows_per_shard=rows_per_shard,
+                edges_per_shard=edges_per_shard,
+                link_bytes_per_us=link_bytes_per_us,
+                forced=forced,
+            )
+            for leader in self.tree_group_leaders()
+        }
+
     # -- bytes + chunk -------------------------------------------------------
 
     def bytes_per_coloring(
@@ -665,6 +871,7 @@ class CostModel:
         *,
         chunk_size: int,
         calibration: Optional[Dict[str, float]] = None,
+        mesh_shards: Optional[int] = None,
     ) -> "Tuple[float, float]":
         """``(calibrated_us, raw_us)`` per coloring for one
         :class:`~repro.tune.config.TuningConfig`.
@@ -675,8 +882,19 @@ class CostModel:
         point).  Bag-stage plans price their bag ops into the default
         backend's share implicitly via the launch term only — the lattice
         still ranks, it just ranks on the tree groups it can rebind.
+
+        ``default_backend == "mesh"`` configs route through the comm model
+        (:meth:`predict_mesh_config_us`; ``mesh_shards`` supplies the ring
+        size).
         """
         calibration = calibration or {}
+        if config.default_backend == "mesh":
+            return self.predict_mesh_config_us(
+                config,
+                chunk_size=chunk_size,
+                n_shards=mesh_shards or 1,
+                calibration=calibration,
+            )
         bindings = config.bindings()
         cb = config.column_batch or self.pick_local_column_batch()
         raw = calibrated = LAUNCH_OVERHEAD_US / max(1, int(chunk_size))
@@ -687,6 +905,57 @@ class CostModel:
             calibrated += cost * calibration.get(backend, 1.0)
         return calibrated, raw
 
+    def predict_mesh_config_us(
+        self,
+        config,
+        *,
+        chunk_size: int,
+        n_shards: int,
+        calibration: Optional[Dict[str, float]] = None,
+    ) -> "Tuple[float, float]":
+        """``(calibrated_us, raw_us)`` per coloring for a mesh config.
+
+        Per stage: per-shard compute plus the *visible* (un-hidden) wire
+        time under the config's comm mode, plus the per-sweep dispatch and
+        (pipelined) per-ring-step overheads — the figures the
+        :meth:`comm_schedule` decision rule balances, summed instead of
+        compared.
+        """
+        calibration = calibration or {}
+        cb = config.column_batch or self.pick_mesh_column_batch()
+        raw = LAUNCH_OVERHEAD_US / max(1, int(chunk_size))
+        for leader in self.tree_group_leaders():
+            sched = self.comm_schedule(
+                leader, n_shards, column_batch=cb,
+                forced=getattr(config, "mesh_comm", None),
+            )
+            per_slice = (
+                max(0, n_shards - 1)
+                * sched.slice_rows
+                * sched.slice_cols
+                * self.itemsize
+            )
+            n_batches = (
+                max(1, round(sched.wire_bytes / per_slice)) if per_slice else 1
+            )
+            visible_comm = (
+                sched.comm_us * (1.0 - sched.overlap_efficiency)
+                if sched.ring_steps > 1
+                else sched.comm_us
+            )
+            step_overhead = (
+                n_batches * sched.ring_steps * RING_STEP_OVERHEAD_US
+                if sched.ring_steps > 1
+                else 0.0
+            )
+            raw += (
+                sched.compute_us
+                + visible_comm
+                + n_batches * SWEEP_OVERHEAD_US
+                + step_overhead
+            )
+        return raw * calibration.get("mesh", 1.0), raw
+
     def candidate_lattice(
         self,
         *,
@@ -695,15 +964,24 @@ class CostModel:
         memory_budget_bytes: int = DEFAULT_MEMORY_BUDGET_BYTES,
         chunk_size: Optional[int] = None,
         include_mixed: bool = True,
+        mesh_shards: Optional[int] = None,
     ) -> "list[RankedCandidate]":
         """Ranked tuning candidates, cheapest-predicted first.
 
-        The cross product of feasible backends x column batches x chunk
-        sizes, plus (``include_mixed``) one greedy mixed candidate per
-        column batch binding each exec group to its per-group-cheapest
-        backend.  The tuner measures the top-N of this list; everything
-        else is pruned unseen — which is the whole point of keeping an
-        analytic model around once measurements exist.
+        The cross product of memory budgets x feasible backends x column
+        batches x chunk sizes, plus (``include_mixed``) one greedy mixed
+        candidate per (budget, column batch) binding each exec group to
+        its per-group-cheapest backend.  The budget axis sweeps the given
+        budget and its half (floored at 1 MiB) — each candidate records
+        the budget it was priced under
+        (``TuningConfig.memory_budget_bytes``), so differently-budgeted
+        winners never share an engine cache key.  With ``mesh_shards``
+        (the tuner ran with a ``mesh=``), mesh candidates join the lattice
+        with the comm mode (``blocking`` | ``pipelined``) as an extra
+        axis, priced by the comm model.  The tuner measures the top-N of
+        this list; everything else is pruned unseen — which is the whole
+        point of keeping an analytic model around once measurements
+        exist.
         """
         from repro.tune.config import TuningConfig  # local: cycle-free
 
@@ -716,6 +994,8 @@ class CostModel:
         col_batches = sorted({
             min(4, max_cb), min(picked_cb, max_cb), min(64, max_cb)
         })
+        budget = int(memory_budget_bytes)
+        budgets = sorted({budget, max(budget // 2, 1 << 20)})
         leaders = self.tree_group_leaders()
         candidates = []
         seen = set()
@@ -725,18 +1005,27 @@ class CostModel:
                 return
             seen.add(config.key_fragment())
             calibrated, raw = self.predict_config_us(
-                config, chunk_size=config.chunk_size, calibration=calibration
+                config,
+                chunk_size=config.chunk_size,
+                calibration=calibration,
+                mesh_shards=mesh_shards,
             )
             candidates.append(
                 RankedCandidate(config=config, predicted_us=calibrated, raw_us=raw)
             )
 
-        for cb in col_batches:
-            chunks = set()
-            if chunk_size:
-                chunks.add(int(chunk_size))
-            else:
+        for bud in budgets:
+            for cb in col_batches:
+                # per-BACKEND chunk sets: each backend is probed at the
+                # chunk its own byte model picks under this budget (plus
+                # the half), never at a chunk derived from another
+                # backend's transient — cross-pollinated chunks used to
+                # crowd the analytic pick out of the probed top-N
+                chunks_by_backend = {}
                 for b in backends:
+                    if chunk_size:
+                        chunks_by_backend[b] = {int(chunk_size)}
+                        continue
                     per = self.bytes_per_coloring(
                         self.transient_elements(
                             b,
@@ -747,38 +1036,73 @@ class CostModel:
                         ),
                         resident,
                     )
-                    picked = self.pick_chunk_size(per, memory_budget_bytes)
-                    chunks.update({picked, max(1, picked // 2)})
-            for b in backends:
-                for chunk in sorted(chunks):
-                    _add(TuningConfig(
-                        default_backend=b, column_batch=cb, chunk_size=chunk
-                    ))
-            if include_mixed and len(backends) > 1 and leaders:
-                greedy = tuple(
-                    (
-                        leader,
-                        min(
-                            backends,
-                            key=lambda b: self.group_cost_us(leader, b, cb)
-                            * calibration.get(b, 1.0),
-                        ),
-                    )
-                    for leader in leaders
-                )
-                names = {b for _, b in greedy}
-                if len(names) > 1:
-                    # default backend serves bag ops + plain spmm: the
-                    # cheapest gather-per-column backend among the bound
-                    default = min(
-                        names, key=lambda b: self.spmm_work_elements(b)
-                    )
-                    for chunk in sorted(chunks):
+                    picked = self.pick_chunk_size(per, bud)
+                    chunks_by_backend[b] = {picked, max(1, picked // 2)}
+                for b in backends:
+                    for chunk in sorted(chunks_by_backend[b]):
                         _add(TuningConfig(
-                            default_backend=default,
-                            group_backends=greedy,
-                            column_batch=cb,
-                            chunk_size=chunk,
+                            default_backend=b, column_batch=cb, chunk_size=chunk,
+                            memory_budget_bytes=bud,
                         ))
+                if include_mixed and len(backends) > 1 and leaders:
+                    greedy = tuple(
+                        (
+                            leader,
+                            min(
+                                backends,
+                                key=lambda b: self.group_cost_us(leader, b, cb)
+                                * calibration.get(b, 1.0),
+                            ),
+                        )
+                        for leader in leaders
+                    )
+                    names = {b for _, b in greedy}
+                    if len(names) > 1:
+                        # default backend serves bag ops + plain spmm: the
+                        # cheapest gather-per-column backend among the bound
+                        default = min(
+                            names, key=lambda b: self.spmm_work_elements(b)
+                        )
+                        for chunk in sorted(chunks_by_backend[default]):
+                            _add(TuningConfig(
+                                default_backend=default,
+                                group_backends=greedy,
+                                column_batch=cb,
+                                chunk_size=chunk,
+                                memory_budget_bytes=bud,
+                            ))
+            if mesh_shards:
+                # mesh candidates: the comm mode is the swept axis; chunk
+                # comes from the resident footprint (the dominant per-shard
+                # term the budget bounds)
+                mesh_cb = self.pick_mesh_column_batch()
+                per = self.bytes_per_coloring(0, resident)
+                picked = (
+                    int(chunk_size)
+                    if chunk_size
+                    else self.pick_chunk_size(per, bud)
+                )
+                for comm in ("blocking", "pipelined"):
+                    _add(TuningConfig(
+                        default_backend="mesh",
+                        column_batch=mesh_cb,
+                        chunk_size=picked,
+                        memory_budget_bytes=bud,
+                        mesh_comm=comm,
+                    ))
         candidates.sort(key=lambda c: (c.predicted_us, repr(c.config.key_fragment())))
-        return candidates
+        # two budgets that land on the same (backend, groups, cb, chunk,
+        # comm) build the same engine — measuring both burns a probe slot
+        # for zero information, so keep only the best-ranked of each
+        unique, seen_runtime = [], set()
+        for cand in candidates:
+            cfg = cand.config
+            runtime = (
+                cfg.default_backend, cfg.group_backends, cfg.column_batch,
+                cfg.chunk_size, cfg.mesh_comm,
+            )
+            if runtime in seen_runtime:
+                continue
+            seen_runtime.add(runtime)
+            unique.append(cand)
+        return unique

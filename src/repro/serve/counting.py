@@ -262,6 +262,7 @@ class CountingService:
             "transient": 0,
             "memory": 0,
             "deterministic": 0,
+            "invalid": 0,
             "non_finite": 0,
         }
         # autotuning (repro.tune): ``REPRO_TUNE=full`` records un-tuned
@@ -713,6 +714,25 @@ class CountingService:
                     ),
                 }
             )
+            return
+
+        if kind == "invalid":
+            # the QUERY is malformed (e.g. a bag plan on the mesh backend:
+            # BagPlanUnsupported), not the engine key poisoned — fail the
+            # queries with the structured error and leave the FailState
+            # untouched, so resubmitting the same impossible query never
+            # walks the key into quarantine
+            for q in queries:
+                self._fail_query(
+                    q,
+                    ServiceError(
+                        "invalid",
+                        f"{type(exc).__name__} at {phase}: {exc}",
+                        engine_key=key,
+                        qid=q.qid,
+                        cause=exc,
+                    ),
+                )
             return
 
         # deterministic: retries will never clear it — fail the attempt's

@@ -16,9 +16,10 @@ The pieces (consumed by :mod:`repro.serve.counting` and
   how many retries, and the exponential backoff the key parks under
   between attempts.
 * :func:`classify_failure` — maps an arbitrary exception from the build /
-  launch path onto the three failure families the scheduler distinguishes:
+  launch path onto the four failure families the scheduler distinguishes:
   ``transient`` (retry with backoff), ``memory`` (walk the degradation
-  ladder), ``deterministic`` (fail fast, quarantine on repeat).
+  ladder), ``invalid`` (the *query* is malformed — fail it, never strike
+  the engine key), ``deterministic`` (fail fast, quarantine on repeat).
 * :class:`FailState` — the scheduler's per-engine-key bookkeeping:
   consecutive-transient count (drives the backoff exponent), backoff
   parking, deterministic strike count, and the quarantine window with its
@@ -58,8 +59,8 @@ class ServiceError(RuntimeError):
 
     ``kind`` is machine-readable::
 
-        retries_exhausted | memory_exhausted | deterministic | non_finite
-        | deadline | quarantined | scheduler
+        retries_exhausted | memory_exhausted | deterministic | invalid
+        | non_finite | deadline | quarantined | scheduler
 
     ``engine_key`` / ``qid`` / ``round_index`` locate the failure;
     ``cause`` (also chained as ``__cause__``) is the underlying exception.
@@ -153,14 +154,19 @@ _TRANSIENT_MARKERS = ("unavailable", "deadline_exceeded", "connection reset",
 
 
 def classify_failure(exc: BaseException) -> str:
-    """``transient`` | ``memory`` | ``deterministic`` for a build/launch
-    exception.
+    """``transient`` | ``memory`` | ``invalid`` | ``deterministic`` for a
+    build/launch exception.
 
-    The injected fault types classify by isinstance; foreign exceptions by
-    status-text markers (XLA surfaces RESOURCE_EXHAUSTED / UNAVAILABLE in
-    the message).  Anything unrecognized is ``deterministic`` — the safe
-    default: fail fast and quarantine on repeat rather than retry a
-    failure that will never clear.
+    The injected fault types classify by isinstance; exceptions carrying a
+    truthy ``invalid_request`` attribute (e.g.
+    :class:`repro.exec.mesh.BagPlanUnsupported`) classify as ``invalid`` —
+    the *query* can never run, but the engine key is healthy, so the
+    scheduler fails it without a deterministic strike and quarantine never
+    trips.  Foreign exceptions classify by status-text markers (XLA
+    surfaces RESOURCE_EXHAUSTED / UNAVAILABLE in the message).  Anything
+    unrecognized is ``deterministic`` — the safe default: fail fast and
+    quarantine on repeat rather than retry a failure that will never
+    clear.
     """
     if isinstance(exc, TransientFault):
         return "transient"
@@ -168,6 +174,8 @@ def classify_failure(exc: BaseException) -> str:
         return "memory"
     if isinstance(exc, DeterministicFault):
         return "deterministic"
+    if getattr(exc, "invalid_request", False):
+        return "invalid"
     msg = str(exc).lower()
     if isinstance(exc, MemoryError) or any(m in msg for m in _MEMORY_MARKERS):
         return "memory"

@@ -28,7 +28,9 @@ __all__ = ["TuningConfig", "TUNING_SCHEMA_VERSION"]
 #: Schema version of the persisted cache file AND of serialized configs.
 #: Bump on any incompatible layout change — loaders ignore (with a warning)
 #: files or entries written under a different version.
-TUNING_SCHEMA_VERSION = 1
+#: v2: added ``memory_budget_bytes`` (the tuner sweeps the chunk picker's
+#: budget) and ``mesh_comm`` (blocking | pipelined mesh collectives).
+TUNING_SCHEMA_VERSION = 2
 
 
 @dataclass(frozen=True)
@@ -45,12 +47,21 @@ class TuningConfig:
       column_batch: fused-slice width, or ``None`` to keep the engine's
         auto-pick.
       chunk_size: colorings per launch, or ``None`` to keep the picker's.
+      memory_budget_bytes: the chunk picker's live-footprint budget this
+        config was tuned under, or ``None`` for the caller's/default
+        budget.  Folded into :meth:`key_fragment` so differently-budgeted
+        engines never share compiled programs.
+      mesh_comm: the mesh backend's collective scheme (``"blocking"`` |
+        ``"pipelined"``), or ``None`` to keep the cost model's per-stage
+        decision.  Meaningless (and ignored) on local backends.
     """
 
     default_backend: str
     group_backends: Tuple[Tuple[Tuple[int, int], str], ...] = ()
     column_batch: Optional[int] = None
     chunk_size: Optional[int] = None
+    memory_budget_bytes: Optional[int] = None
+    mesh_comm: Optional[str] = None
     version: int = field(default=TUNING_SCHEMA_VERSION)
 
     def __post_init__(self):
@@ -88,13 +99,18 @@ class TuningConfig:
     def key_fragment(self) -> Tuple:
         """The hashable fragment :func:`repro.core.engine.engine_cache_key`
         appends for a tuned engine — two engines tuned differently must
-        never share compiled programs."""
+        never share compiled programs.  New fields append at the END so
+        positional consumers of earlier elements keep their offsets."""
         return (
             "tuned",
             self.default_backend,
             self.group_backends,
             None if self.column_batch is None else int(self.column_batch),
             None if self.chunk_size is None else int(self.chunk_size),
+            None
+            if self.memory_budget_bytes is None
+            else int(self.memory_budget_bytes),
+            self.mesh_comm,
         )
 
     def describe(self) -> Dict:
@@ -105,6 +121,8 @@ class TuningConfig:
             "groups": {f"{p}:{i}": b for (p, i), b in self.group_backends},
             "column_batch": self.column_batch,
             "chunk_size": self.chunk_size,
+            "memory_budget_bytes": self.memory_budget_bytes,
+            "mesh_comm": self.mesh_comm,
         }
 
     # -- JSON round trip (bit-exact: ints and strings only) ------------------
@@ -118,6 +136,8 @@ class TuningConfig:
             ],
             "column_batch": self.column_batch,
             "chunk_size": self.chunk_size,
+            "memory_budget_bytes": self.memory_budget_bytes,
+            "mesh_comm": self.mesh_comm,
         }
 
     @staticmethod
@@ -142,9 +162,15 @@ class TuningConfig:
             groups.append(((int(p), int(i)), str(b)))
         cb = data.get("column_batch")
         chunk = data.get("chunk_size")
+        budget = data.get("memory_budget_bytes")
+        mesh_comm = data.get("mesh_comm")
+        if mesh_comm is not None and mesh_comm not in ("blocking", "pipelined"):
+            raise ValueError(f"bad mesh_comm {mesh_comm!r}")
         return TuningConfig(
             default_backend=default,
             group_backends=tuple(groups),
             column_batch=None if cb is None else int(cb),
             chunk_size=None if chunk is None else int(chunk),
+            memory_budget_bytes=None if budget is None else int(budget),
+            mesh_comm=mesh_comm,
         )

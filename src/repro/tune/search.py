@@ -123,6 +123,7 @@ def tune(
     save: bool = True,
     measure_fn: Optional[Callable] = None,
     interpret: bool = False,
+    mesh=None,
 ) -> TuneResult:
     """Tune one ``(graph, template set)`` pair on this device.
 
@@ -130,6 +131,13 @@ def tune(
     (``probes`` timed launches each), persists the winner + per-backend
     calibration in the tuning cache (unless ``save=False``), and returns
     the full :class:`TuneResult`.
+
+    The lattice sweeps ``memory_budget_bytes`` (the given budget and its
+    half) as an axis — each candidate's probe engine runs under the
+    budget it was priced at, and the winner carries it in its
+    ``key_fragment()``.  With ``mesh=`` (a ``jax.sharding.Mesh``), mesh
+    candidates join the lattice with the collective mode (blocking |
+    pipelined) as a further axis; their probe engines bind the mesh.
 
     Deterministic by construction: with a fixed ``measure_fn`` (or
     identical measurements) the same inputs produce the identical
@@ -159,10 +167,16 @@ def tune(
     policy = DtypePolicy.resolve(dtype_policy)
     cost = CostModel(plan, graph, policy.store_dtype)
     calibration = load_backend_calibration(cache_path)
+    mesh_shards = None
+    if mesh is not None:
+        import numpy as np
+
+        mesh_shards = int(np.prod(mesh.devices.shape))
     lattice = cost.candidate_lattice(
         platform=platform,
         calibration=calibration,
         memory_budget_bytes=budget,
+        mesh_shards=mesh_shards,
     )
     if not lattice:  # pragma: no cover - lattice always has >= 1 backend
         raise RuntimeError("empty candidate lattice")
@@ -191,8 +205,10 @@ def tune(
             dtype_policy=policy,
             chunk_size=cfg.chunk_size,
             column_batch=cfg.column_batch,
-            memory_budget_bytes=budget,
+            memory_budget_bytes=cfg.memory_budget_bytes or budget,
             interpret=interpret,
+            mesh=mesh if cfg.backend_name == "mesh" else None,
+            mesh_comm=cfg.mesh_comm if cfg.backend_name == "mesh" else None,
         )
         us = float(measure_fn(engine, probes))
         measured.append(

@@ -1,0 +1,188 @@
+"""Fast-lane units for the mesh comm model and its plumbing: the
+plan-time blocking-vs-pipelined decision (``CostModel.comm_schedule``),
+the ``REPRO_MESH_COMM`` env override, the src-bucketed shard layout the
+ring consumes, and the v2 ``TuningConfig`` fields (``memory_budget_bytes``
++ ``mesh_comm``) through key_fragment / JSON round-trip and the candidate
+lattice.  No devices, no subprocesses — the multi-device acceptance lives
+in ``tests/test_mesh_pipeline.py`` (slow lane)."""
+
+import numpy as np
+import pytest
+
+from repro.core import CountingEngine, get_template, rmat_graph
+from repro.core.distributed import shard_graph
+from repro.exec import select
+from repro.plan.cost import (
+    DEFAULT_MEMORY_BUDGET_BYTES,
+    RING_STEP_OVERHEAD_US,
+    mesh_link_bytes_per_us,
+)
+from repro.tune.config import TUNING_SCHEMA_VERSION, TuningConfig
+
+
+@pytest.fixture(scope="module")
+def cost():
+    g = rmat_graph(2048, 20_000, seed=1)
+    return CountingEngine(g, [get_template("u7")], backend="edges").cost
+
+
+# -- the plan-time comm model ------------------------------------------------
+
+
+def test_comm_schedule_covers_every_tree_leader(cost):
+    scheds = cost.mesh_comm_schedules(4, column_batch=16)
+    assert set(scheds) == set(cost.tree_group_leaders())
+    for leader, s in scheds.items():
+        assert s.stage == leader
+        assert s.mode in ("blocking", "pipelined")
+        assert s.ring_steps == (4 if s.mode == "pipelined" else 1)
+        assert 0.0 <= s.overlap_efficiency <= 1.0
+        assert s.comm_us == pytest.approx(
+            s.wire_bytes / mesh_link_bytes_per_us()
+        )
+        d = s.describe()
+        assert d["mode"] == s.mode and d["wire_bytes"] == s.wire_bytes
+
+
+def test_single_shard_is_always_blocking(cost):
+    for s in cost.mesh_comm_schedules(1, column_batch=16).values():
+        assert s.mode == "blocking" and s.ring_steps == 1
+        assert "single shard" in s.reason
+
+
+def test_decision_rule_pipeline_iff_hidden_beats_ring_overhead(cost):
+    # near-free wire: the hidden time cannot beat the per-hop dispatch
+    # tax, so the ring is pure overhead -> blocking
+    for s in cost.mesh_comm_schedules(
+        4, column_batch=16, link_bytes_per_us=1e12
+    ).values():
+        assert s.mode == "blocking", s.reason
+        assert "ring overhead" in s.reason
+    for leader in cost.tree_group_leaders():
+        base = cost.comm_schedule(leader, 4, column_batch=16)
+        padded = base.wire_bytes // (3 * base.slice_rows * cost.itemsize)
+        ring_tax = max(1, padded // 16) * 4 * RING_STEP_OVERHEAD_US
+        # link sized so the wire time is 2x the ring's dispatch tax (and
+        # the gather-bound compute still swallows it) -> pipelined
+        mid = cost.comm_schedule(
+            leader, 4, column_batch=16,
+            link_bytes_per_us=base.wire_bytes / (2 * ring_tax),
+        )
+        assert mid.mode == "pipelined", mid.reason
+        # starved link: per-step wire dwarfs compute, so only a sliver of
+        # the transfer hides -- but a sliver of an enormous comm_us still
+        # beats the fixed tax (hidden == (D-1) * compute_step there)
+        starved = cost.comm_schedule(
+            leader, 4, column_batch=16, link_bytes_per_us=1e-9
+        )
+        assert starved.overlap_efficiency < 0.05
+        assert starved.mode == "pipelined"
+
+
+def test_forced_mode_is_recorded_verbatim(cost):
+    for forced in ("blocking", "pipelined"):
+        for s in cost.mesh_comm_schedules(
+            4, column_batch=16, forced=forced
+        ).values():
+            assert s.mode == forced
+            assert "override" in s.reason
+
+
+def test_wire_bytes_scale_with_shards_and_padded_width(cost):
+    leader = cost.tree_group_leaders()[0]
+    s4 = cost.comm_schedule(leader, 4, column_batch=16)
+    s8 = cost.comm_schedule(leader, 8, column_batch=16)
+    # (D-1) * ceil(n/D) * padded_cols * itemsize: more shards, smaller rows
+    assert s8.wire_bytes == pytest.approx(
+        s4.wire_bytes * (7 / 8) / (3 / 4), rel=0.01
+    )
+
+
+# -- the env override --------------------------------------------------------
+
+
+def test_mesh_comm_env_override(monkeypatch):
+    monkeypatch.delenv(select.MESH_COMM_ENV_VAR, raising=False)
+    assert select.mesh_comm_mode() is None
+    monkeypatch.setenv(select.MESH_COMM_ENV_VAR, "pipelined")
+    assert select.mesh_comm_mode() == "pipelined"
+    monkeypatch.setenv(select.MESH_COMM_ENV_VAR, "BLOCKING ")
+    assert select.mesh_comm_mode() == "blocking"
+    monkeypatch.setenv(select.MESH_COMM_ENV_VAR, "ring")  # typo: warn, unset
+    assert select.mesh_comm_mode() is None
+
+
+# -- the src-bucketed shard layout the ring walks ----------------------------
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_bucket_by_src_layout_invariants(n_shards):
+    g = rmat_graph(257, 1800, seed=3)  # odd n: exercises row padding
+    sh = shard_graph(g, n_shards, bucket_by_src=True)
+    assert sh.bucket_stride is not None
+    assert sh.edges_per_shard == n_shards * sh.bucket_stride
+    rows = sh.rows_per_shard
+    src = sh.src.reshape(n_shards, n_shards, sh.bucket_stride)
+    dst = sh.dst_local.reshape(n_shards, n_shards, sh.bucket_stride)
+    mask = sh.edge_mask.reshape(n_shards, n_shards, sh.bucket_stride)
+    total = 0
+    for shard in range(n_shards):
+        for owner in range(n_shards):
+            m = mask[shard, owner] > 0
+            total += int(m.sum())
+            # every valid slot's src sits in the owner shard's row range —
+            # the invariant the ring's `cur[src - owner*rows]` gather needs
+            assert np.all(src[shard, owner][m] // rows == owner)
+            assert np.all((0 <= dst[shard, owner][m]) & (dst[shard, owner][m] < rows))
+    assert total == g.num_directed  # no edge lost or duplicated by bucketing
+
+
+# -- TuningConfig v2: budget + comm fields -----------------------------------
+
+
+def test_tuning_config_v2_round_trip():
+    cfg = TuningConfig(
+        default_backend="mesh",
+        column_batch=32,
+        chunk_size=4,
+        memory_budget_bytes=1 << 24,
+        mesh_comm="pipelined",
+    )
+    assert cfg.version == TUNING_SCHEMA_VERSION
+    # new fields append at the END of the cache-key fragment
+    assert cfg.key_fragment()[-2:] == (1 << 24, "pipelined")
+    back = TuningConfig.from_json(cfg.to_json())
+    assert back == cfg
+    d = cfg.describe()
+    assert d["memory_budget_bytes"] == 1 << 24 and d["mesh_comm"] == "pipelined"
+    # omitted fields survive as None (and key distinct from the set ones)
+    plain = TuningConfig(default_backend="edges")
+    assert TuningConfig.from_json(plain.to_json()) == plain
+    assert plain.key_fragment() != cfg.key_fragment()
+
+
+def test_tuning_config_rejects_bad_mesh_comm():
+    cfg = TuningConfig(default_backend="mesh")
+    data = cfg.to_json()
+    data["mesh_comm"] = "ring"
+    with pytest.raises(ValueError):
+        TuningConfig.from_json(data)
+
+
+def test_candidate_lattice_sweeps_budget_and_comm(cost):
+    cands = cost.candidate_lattice(
+        memory_budget_bytes=DEFAULT_MEMORY_BUDGET_BYTES, mesh_shards=4
+    )
+    budgets = {c.config.memory_budget_bytes for c in cands}
+    assert budgets == {
+        DEFAULT_MEMORY_BUDGET_BYTES, DEFAULT_MEMORY_BUDGET_BYTES // 2
+    }
+    mesh = [c.config for c in cands if c.config.default_backend == "mesh"]
+    assert {c.mesh_comm for c in mesh} == {"blocking", "pipelined"}
+    # every candidate priced, ranked cheapest-first, no duplicate keys
+    assert all(c.predicted_us > 0 for c in cands)
+    assert [c.predicted_us for c in cands] == sorted(
+        c.predicted_us for c in cands
+    )
+    frags = [c.config.key_fragment() for c in cands]
+    assert len(frags) == len(set(frags))

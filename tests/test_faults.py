@@ -529,12 +529,36 @@ def test_mesh_rejects_bag_plans_as_a_structured_query_failure():
     svc = _service(backend="mesh", engine_kwargs={"mesh": _mesh()})
     q = svc.submit("a", "triangle", iterations=8, seed=1)  # non-tree: bag plan
     svc.run()
-    assert q.failed and q.error.kind == "deterministic"
+    # an impossible QUERY, not a poisoned key: the invalid family, with the
+    # plan's decomposition widths in the message for the operator
+    assert q.failed and q.error.kind == "invalid"
     assert isinstance(q.error.cause, NotImplementedError)
+    assert "decomposition widths" in str(q.error)
+    assert svc.fault_counters["invalid"] == 1
+    assert svc.fault_counters["deterministic"] == 0
     # the scheduler is not wedged: a tree query on the same service works
     ok = svc.submit("a", "u3", iterations=8, seed=1)
     svc.run()
     assert ok.done
+
+
+def test_bag_plan_rejection_never_trips_quarantine():
+    """Resubmitting the same impossible query does NOT walk its engine key
+    into quarantine: the invalid family never strikes the FailState."""
+    svc = _service(backend="mesh", engine_kwargs={"mesh": _mesh()})
+    errors = []
+    for _ in range(QUARANTINE_STRIKES + 1):
+        q = svc.submit("a", "triangle", iterations=8, seed=1)
+        svc.run()
+        assert q.failed
+        errors.append(q.error)
+    # every attempt fails with the structured invalid error — never the
+    # quarantined fast-fail, and the key's FailState records no strikes
+    assert all(e.kind == "invalid" for e in errors)
+    key = errors[0].engine_key
+    fs = svc._fail.get(key)
+    assert fs is None or (fs.strikes == 0 and fs.quarantines == 0)
+    assert svc.fault_counters["invalid"] == QUARANTINE_STRIKES + 1
 
 
 def test_mesh_collective_fault_fails_query_not_scheduler():

@@ -1,0 +1,167 @@
+"""Pipelined ring collectives: bit-exactness and fault-replay acceptance
+(4/8 host devices via subprocess — the test process itself must keep the
+default single-device view).
+
+The acceptance bar for the ring pipeline (docs/distributed.md "The ring
+pipeline"): on 4- AND 8-virtual-device meshes, ``mesh_comm="pipelined"``
+produces counts **bit-exact** (``np.array_equal``, not allclose) against
+``mesh_comm="blocking"`` for the u5–u12 template class — both modes fold
+the same per-source-shard bucket partial segment-sums in the same ring
+order, so no intermediate rounding ever differs.  Under a seeded
+collective :class:`~repro.testing.faults.FaultPlan`, the pipelined path
+re-uses the PR 8 ``collective`` injection site once per ring step, and the
+whole failure schedule replays exactly: same seed, same fires, same
+surviving counts.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+# subprocess smokes over virtual devices: the slow check.sh lane
+pytestmark = pytest.mark.slow
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_child(code: str, devices: int, timeout: int = 900) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_REPO, "src")
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["REPRO_DEVICES"] = str(devices)
+    env.pop("REPRO_MESH_COMM", None)  # the tests set modes explicitly
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env,
+        timeout=timeout,
+    )
+    assert proc.returncode == 0, (
+        f"child failed:\nstdout={proc.stdout}\nstderr={proc.stderr}"
+    )
+    return proc.stdout
+
+
+@pytest.mark.parametrize("devices", [4, 8])
+def test_pipelined_bit_exact_vs_blocking(devices):
+    """Pipelined counts are np.array_equal to blocking counts — same seed
+    folds, same fold order — for u5-1/u7/u10/u12 on D virtual devices,
+    through both the fixed-coloring and the batched PRNG-key paths."""
+    out = _run_child(
+        r"""
+import os
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import CountingEngine, get_template, rmat_graph
+
+D = int(os.environ["REPRO_DEVICES"])
+g = rmat_graph(60 * D, 300 * D, seed=5)
+mesh = jax.make_mesh((D,), ("dev",))
+keys = jax.random.split(jax.random.PRNGKey(1), 4)
+for tname in ("u5-1", "u7", "u10", "u12"):
+    t = get_template(tname)
+    colors = np.random.default_rng(3).integers(0, t.k, size=g.n)
+    block = CountingEngine(g, [t], backend="mesh", mesh=mesh, column_batch=8,
+                           chunk_size=2, mesh_comm="blocking")
+    ring = CountingEngine(g, [t], backend="mesh", mesh=mesh, column_batch=8,
+                          chunk_size=2, mesh_comm="pipelined")
+    assert ring.backend_impl.comm == "pipelined", ring.backend_impl.describe_comm()
+    assert block.backend_impl.comm == "blocking"
+    a = np.asarray(block.raw_counts(colors))
+    b = np.asarray(ring.raw_counts(colors))
+    assert np.array_equal(a, b), (tname, a, b)
+    ka = np.asarray(block.count_keys(keys))
+    kb = np.asarray(ring.count_keys(keys))
+    assert np.array_equal(ka, kb), (tname, ka, kb)
+    print("EXACT", tname)
+
+# the comm plan is visible in describe(): mode, source, per-stage schedule
+d = ring.describe()
+comm = d["comm"]
+assert comm["mode"] == "pipelined" and comm["source"] == "explicit"
+assert comm["collective_dispatches"] == D
+assert all(s["ring_steps"] == D for s in comm["schedule"])
+print("DESCRIBE_OK", len(comm["schedule"]))
+"""
+        , devices
+    )
+    assert out.count("EXACT") == 4
+    assert "DESCRIBE_OK" in out
+
+
+@pytest.mark.parametrize("devices", [4, 8])
+def test_pipelined_fault_schedule_replays_exactly(devices):
+    """Under a seeded collective FaultPlan the pipelined path visits the
+    ``collective`` site once per ring step, the fire schedule replays
+    bit-for-bit across identically-seeded runs (same fires_by_site, same
+    per-visit fire log), and the counts that survive are bit-exact."""
+    out = _run_child(
+        r"""
+import os
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import CountingEngine, get_template, rmat_graph
+from repro.testing.faults import FaultPlan, FaultSpec, TransientFault
+
+D = int(os.environ["REPRO_DEVICES"])
+g = rmat_graph(60 * D, 300 * D, seed=5)
+mesh = jax.make_mesh((D,), ("dev",))
+t = get_template("u7")
+keys = jax.random.split(jax.random.PRNGKey(1), 2)
+
+def run(comm):
+    # count_keys_chunk is the serving increment — the fault seams fire at
+    # its Python launch boundary (count_keys wraps everything in one jit)
+    eng = CountingEngine(g, [t], backend="mesh", mesh=mesh, column_batch=8,
+                         chunk_size=2, mesh_comm=comm)
+    eng.count_keys_chunk(keys)  # warm: compile outside the fault window
+    plan = FaultPlan(
+        [FaultSpec(site="collective", kind="transient", rate=0.7, max_fires=3)],
+        seed=11,
+    )
+    outcomes, counts = [], None
+    with plan:
+        for attempt in range(8):  # retry-until-clean, like the scheduler
+            try:
+                counts = np.asarray(eng.count_keys_chunk(keys))
+                outcomes.append("ok")
+                break
+            except TransientFault:
+                outcomes.append("fault")
+    return counts, outcomes, plan.fires_by_site(), plan.describe()
+
+c1, o1, f1, d1 = run("pipelined")
+c2, o2, f2, d2 = run("pipelined")
+assert f1 == f2, (f1, f2)                      # identical fires_by_site
+assert o1 == o2, (o1, o2)                      # identical outcome sequence
+assert [s["fire_log"] for s in d1] == [s["fire_log"] for s in d2]
+assert c1 is not None and np.array_equal(c1, c2)
+assert 1 <= f1["collective"] <= 3, f1  # fired, then the run went clean
+assert o1.count("fault") == f1["collective"]
+print("REPLAY_OK", o1.count("fault"))
+
+# and once the faults are spent, blocking converges to identical counts
+cb, ob, fb, db = run("blocking")
+assert cb is not None and np.array_equal(c1, cb)
+
+# the ring multiplies the site's visit count: D dispatches per chunk
+# launch vs the blocking path's one.  A never-firing spec (huge ``after``)
+# still counts every eligible visit, so a clean launch measures the pure
+# dispatch multiplicity: D ring steps vs 1.
+def visits(comm):
+    eng = CountingEngine(g, [t], backend="mesh", mesh=mesh, column_batch=8,
+                         chunk_size=2, mesh_comm=comm)
+    plan = FaultPlan(
+        [FaultSpec(site="collective", kind="transient", after=10**6)], seed=0
+    )
+    with plan:
+        eng.count_keys_chunk(keys)
+    return plan.describe()[0]["visits"]
+
+ring_visits, block_visits = visits("pipelined"), visits("blocking")
+assert ring_visits == D, (ring_visits, D)
+assert block_visits == 1, block_visits
+print("VISITS_OK", ring_visits, block_visits)
+"""
+        , devices
+    )
+    assert "REPLAY_OK" in out
+    assert "VISITS_OK" in out
